@@ -1,0 +1,64 @@
+"""Paper Figs 3/4/5: loading / prefilter / query time vs budget, 3 datasets
+x workloads A/B/C.  Validation targets: paper reports up to 21x loading,
+23x query, 19x end-to-end at budget 1.0 µs/record (dataset- and
+workload-dependent; the 'easy' workload A benefits most)."""
+from __future__ import annotations
+
+import json
+
+from .common import make_workload, run_end_to_end
+
+BUDGETS = (0.25, 0.5, 1.0, 2.0)
+DATASETS = ("winlog", "yelp", "ycsb")
+WORKLOADS = ("A", "B", "C")
+
+
+def run(n_records: int = 20000, n_queries_exec: int = 60) -> list[dict]:
+    rows = []
+    for dataset in DATASETS:
+        for wname in WORKLOADS:
+            wl = make_workload(dataset, wname)
+            for budget in BUDGETS:
+                r = run_end_to_end(
+                    dataset, wl, budget,
+                    n_records=n_records, n_queries_exec=n_queries_exec,
+                )
+                rows.append({
+                    "dataset": dataset,
+                    "workload": wname,
+                    "budget_us": budget,
+                    "n_pushed": r.n_pushed,
+                    "loading_ratio": round(r.loading_ratio, 4),
+                    "prefilter_s": round(r.prefilter_s, 4),
+                    "loading_s": round(r.loading_s, 4),
+                    "query_s": round(r.query_s, 4),
+                    "baseline_loading_s": round(r.baseline_loading_s, 4),
+                    "baseline_query_s": round(r.baseline_query_s, 4),
+                    "loading_speedup": round(r.loading_speedup, 2),
+                    "query_speedup": round(r.query_speedup, 2),
+                    "e2e_speedup": round(r.end_to_end_speedup, 2),
+                    "e2e_overlapped_speedup": round(r.end_to_end_overlapped_speedup, 2),
+                })
+                print(f"[e2e] {dataset}/{wname} budget={budget}: "
+                      f"load x{rows[-1]['loading_speedup']} "
+                      f"query x{rows[-1]['query_speedup']} "
+                      f"e2e x{rows[-1]['e2e_speedup']} "
+                      f"(ratio {rows[-1]['loading_ratio']})")
+    return rows
+
+
+def main():
+    rows = run()
+    with open("artifacts/bench_end_to_end.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    best = {}
+    for r in rows:
+        for k in ("loading_speedup", "query_speedup", "e2e_speedup",
+                  "e2e_overlapped_speedup"):
+            best[k] = max(best.get(k, 0), r[k])
+    print(f"[e2e] best across cells: {best} (paper: 21x/23x/19x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline tables from the dry-run artifacts (assignment §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and renders
+the per-(arch x shape x mesh) three-term table to stdout + markdown.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, list_archs
+
+COLS = ("compute_s", "memory_s", "collective_s")
+
+
+def load_records(path="artifacts/dryrun2"):
+    recs = {}
+    for f in glob.glob(os.path.join(path, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def render(recs, mesh="single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL/HLO flops | roofline_frac | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — | — |")
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {ro['compute_s']:.3e} | "
+                f"{ro['memory_s']:.3e} | {ro['collective_s']:.3e} | "
+                f"{ro['dominant']} | {ro['useful_flops_frac']:.2f} | "
+                f"{ro['roofline_frac']:.3f} | {ro['memory_per_device_gb']:.1f} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("[roofline] no dry-run artifacts found; run repro.launch.dryrun")
+        return {}
+    for mesh in ("single", "multi"):
+        print(f"\n=== roofline ({mesh}-pod mesh) ===")
+        print(render(recs, mesh))
+    with open("artifacts/roofline_table.md", "w") as f:
+        f.write("# Roofline (single-pod)\n\n" + render(recs, "single"))
+        f.write("\n\n# Roofline (multi-pod)\n\n" + render(recs, "multi") + "\n")
+    worst = sorted(
+        (r for r in recs.values() if "roofline" in r),
+        key=lambda r: r["roofline"]["roofline_frac"],
+    )[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"{r['roofline']['roofline_frac']:.4f} ({r['roofline']['dominant']})")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows summarizing every benchmark,
+and writes the detailed JSON artifacts under artifacts/.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: e2e,micro,cost,selection,kernels,roofline")
+    args = ap.parse_args()
+    os.makedirs("artifacts", exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    csv_rows: list[tuple[str, float, str]] = []
+
+    if only is None or "e2e" in only:
+        from . import bench_end_to_end
+
+        n = 6000 if args.quick else 20000
+        rows = bench_end_to_end.run(n_records=n,
+                                    n_queries_exec=20 if args.quick else 60)
+        import json
+
+        with open("artifacts/bench_end_to_end.json", "w") as f:
+            json.dump(rows, f, indent=1)
+        best = {}
+        for r in rows:
+            for k in ("loading_speedup", "query_speedup", "e2e_speedup",
+                      "e2e_overlapped_speedup"):
+                best[k] = max(best.get(k, 0), r[k])
+        at1 = [r for r in rows if r["budget_us"] == 1.0]
+        csv_rows.append((
+            "fig3-5_end_to_end",
+            1e6 * sum(r["loading_s"] + r["query_s"] for r in at1) / max(
+                sum(1 for _ in at1), 1) / 1000,
+            f"best_load_x{best['loading_speedup']};best_query_x{best['query_speedup']};"
+            f"best_e2e_x{best['e2e_speedup']};best_e2e_overlap_x{best['e2e_overlapped_speedup']}"
+            f";paper=21x/23x/19x",
+        ))
+
+    if only is None or "micro" in only:
+        from . import bench_micro
+
+        out = bench_micro.main()
+        fr = [r["fraction_improved"] for r in out["fig6_query_fraction"]]
+        csv_rows.append(("fig6_query_fraction", 0.0,
+                         f"improved_{min(fr):.0%}-{max(fr):.0%};paper=37-68%"))
+        csv_rows.append(("fig7-12_micro", 0.0,
+                         f"selectivity+overlap+skewness recorded"))
+
+    if only is None or "cost" in only:
+        from . import bench_cost_model
+
+        rows = bench_cost_model.main(n_records=1500 if args.quick else 3000)
+        r2s = ";".join(f"{r['platform']}=R2_{r['r_squared']}" for r in rows)
+        csv_rows.append(("tableIV_cost_model", 0.0, r2s + ";paper=0.666-0.978"))
+
+    if only is None or "selection" in only:
+        from . import bench_selection
+
+        out = bench_selection.main()
+        last = out["scaling"][-1]
+        csv_rows.append((
+            "selection_celf", last["celf_s"] * 1e6 / max(last["n_preds"], 1),
+            f"celf_x{last['speedup']}_at_P{last['n_preds']};"
+            f"quality_worst_{out['quality']['worst_ratio']}(>=0.316)",
+        ))
+
+    if only is None or "kernels" in only:
+        from . import bench_kernels
+
+        rows = bench_kernels.main(n_records=1500 if args.quick else 4000)
+        for r in rows:
+            csv_rows.append((f"kernel_{r['engine']}", r["us_per_record"],
+                             f"{r['records_per_s']}rec/s;{r['effective_GBps']}GBps"))
+
+    if only is None or "roofline" in only:
+        from . import bench_roofline
+
+        recs = bench_roofline.main()
+        if recs:
+            ok = [r for r in recs.values() if "roofline" in r]
+            csv_rows.append((
+                "roofline_cells", 0.0,
+                f"{len(ok)}_cells_compiled;"
+                f"{sum(1 for r in recs.values() if 'skipped' in r)}_documented_skips",
+            ))
+
+    print("\n=== name,us_per_call,derived ===")
+    for name, us, derived in csv_rows:
+        _row(name, us, derived)
+
+
+if __name__ == "__main__":
+    main()

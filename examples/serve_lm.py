@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + greedy decode with sharded caches.
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # SSM decode
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=24)
+args = ap.parse_args()
+
+result = serve_mod.main([
+    "--arch", args.arch, "--reduced", "--batch", str(args.batch),
+    "--prompt-len", "64", "--gen", str(args.gen),
+])
+assert result["generated"] == args.gen
+print(f"served batch={result['batch']} tokens/s={result['tokens_per_s']}")

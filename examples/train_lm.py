@@ -1,0 +1,66 @@
+"""End-to-end driver: train an LM on CIAO-filtered data (deliverable (b)).
+
+Default: a scaled-down qwen3-1.7b-family model for a CPU-friendly run.
+The --full-100m flag selects a ~100M-parameter config (same code path) for
+a few hundred steps on real accelerators.
+
+    PYTHONPATH=src python examples/train_lm.py                  # CPU demo
+    PYTHONPATH=src python examples/train_lm.py --full-100m      # 100M config
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.launch import train as train_mod
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full-100m", action="store_true")
+ap.add_argument("--steps", type=int, default=None)
+args = ap.parse_args()
+
+if args.full_100m:
+    # ~100M params: qwen3-1.7b geometry at 12 layers / d=768 via overrides
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.configs import qwen3_1_7b
+
+    base = get_config("qwen3-1.7b")
+    cfg_100m = dataclasses.replace(
+        base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32768, microbatches=1,
+    )
+    # register as a transient arch for the driver
+    import repro.configs as C
+
+    C.ARCHS["qwen3-100m"] = "qwen3_1_7b"
+    _orig = C.get_config
+
+    def patched(arch):
+        if arch == "qwen3-100m":
+            return cfg_100m
+        return _orig(arch)
+
+    train_mod.get_config = patched
+    argv = [
+        "--arch", "qwen3-100m", "--dataset", "ycsb", "--budget-us", "1.0",
+        "--steps", str(args.steps or 300), "--batch", "8", "--seq", "512",
+        "--ckpt-dir", "/tmp/ciao_train_100m", "--ckpt-every", "50",
+        "--n-clients", "8", "--chunks-per-client", "8",
+    ]
+else:
+    argv = [
+        "--arch", "qwen3-1.7b", "--reduced", "--dataset", "ycsb",
+        "--budget-us", "1.0", "--steps", str(args.steps or 200),
+        "--batch", "8", "--seq", "256", "--ckpt-dir", "/tmp/ciao_train_demo",
+        "--ckpt-every", "50", "--n-clients", "4", "--chunks-per-client", "6",
+        "--straggler",
+    ]
+
+result = train_mod.main(argv)
+assert result["last_loss"] < result["first_loss"], "loss must decrease"
+print(f"loss {result['first_loss']:.3f} -> {result['last_loss']:.3f} over "
+      f"{result['steps_run']} steps on CIAO-filtered data "
+      f"(loading ratio {result['loading_ratio']:.1%})")

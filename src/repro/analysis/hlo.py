@@ -1,0 +1,192 @@
+"""Trip-count-aware HLO collective accounting.
+
+``jax.lax.scan`` lowers to ``while`` ops, and XLA's cost analysis (and a
+naive text scan) prices the body ONCE regardless of trip count.  This parser
+rebuilds the computation call graph from optimized HLO text, extracts each
+while loop's trip count from its condition's comparison constant, and
+multiplies collective bytes by the product of enclosing trip counts — giving
+exact per-step collective bytes for scan-over-layers programs.
+
+Heuristics (validated in tests against unrolled references):
+  * trip count = the max integer constant in the while condition computation
+    (scan conditions are ``lt(iter, N)`` with iter starting at 0);
+  * ``-start``/``-done`` async pairs are counted once (on start);
+  * all-reduce bytes are doubled (ring reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{?\s*$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations|"
+    r"true_computation|false_computation)=\s*"
+    r"(?:{([^}]*)}|%?([\w.\-]+))"
+)
+_WHILE_RE = re.compile(r"=\s*(?:\([^=]*\)|\S+)\s+while\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: list = field(default_factory=list)
+    # (kind, bytes) local collectives
+    collectives: list = field(default_factory=list)
+    # (child_name, multiplier_kind) where multiplier_kind is "call" or ("while", cond)
+    calls: list = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation headers end with '{' at depth 0 (HLO is flat: one level)
+        if (not raw.startswith(" ")) and stripped.endswith("{") and "->" in stripped:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if stripped == "}" or stripped.startswith("} //"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(stripped)
+    return comps
+
+
+def _analyze(comps: dict[str, _Comp]) -> None:
+    for comp in comps.values():
+        for line in comp.lines:
+            # collectives
+            for kind in _COLLECTIVE_KINDS:
+                token = f" {kind}("
+                start_token = f" {kind}-start("
+                if token in line or start_token in line:
+                    # result type: between '=' and opcode
+                    m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+" +
+                                 re.escape(kind), line)
+                    if m:
+                        b = _shape_bytes(m.group(1))
+                        if kind == "all-reduce":
+                            b *= 2
+                        comp.collectives.append((kind, b))
+                    break
+                if f" {kind}-done(" in line:
+                    break
+            # called computations
+            is_while = bool(_WHILE_RE.search(line)) or " while(" in line
+            body_name = cond_name = None
+            for m in re.finditer(r"(body|condition|to_apply|true_computation|false_computation)=%?([\w.\-]+)", line):
+                role, name = m.group(1), m.group(2)
+                if role == "body":
+                    body_name = name
+                elif role == "condition":
+                    cond_name = name
+                else:
+                    comp.calls.append((name, 1))
+            m = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if m:
+                for name in m.group(1).split(","):
+                    comp.calls.append((name.strip().lstrip("%"), 1))
+            if is_while and body_name:
+                # XLA annotates known_trip_count in backend_config — prefer it.
+                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                trip = int(m.group(1)) if m else _trip_count(comps.get(cond_name))
+                comp.calls.append((body_name, trip))
+                if cond_name:
+                    comp.calls.append((cond_name, trip))
+
+
+def _trip_count(cond: _Comp | None) -> int:
+    if cond is None:
+        return 1
+    consts = []
+    for line in cond.lines:
+        if "compare(" in line or "constant(" in line:
+            consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Returns {"bytes": {kind: scaled_bytes}, "counts": {kind: scaled_count},
+    "total": int} with while-loop trip scaling."""
+    comps = _split_computations(hlo)
+    _analyze(comps)
+
+    entry = None
+    for name, c in comps.items():
+        if name.startswith("main") or name == "entry":
+            entry = c
+            break
+    if entry is None and comps:
+        # fall back: the computation that nobody calls
+        called = {n for c in comps.values() for n, _ in c.calls}
+        for name, c in comps.items():
+            if name not in called:
+                entry = c
+                break
+    if entry is None:
+        return {"bytes": {}, "counts": {}, "total": 0}
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def visit(comp: _Comp, depth=0) -> tuple[dict, dict]:
+        if comp.name in memo:
+            return memo[comp.name]
+        if depth > 64:
+            return {}, {}
+        bytes_by, counts_by = {}, {}
+        for kind, b in comp.collectives:
+            bytes_by[kind] = bytes_by.get(kind, 0) + b
+            counts_by[kind] = counts_by.get(kind, 0) + 1
+        for child_name, mult in comp.calls:
+            child = comps.get(child_name)
+            if child is None:
+                continue
+            cb, cc = visit(child, depth + 1)
+            for k, v in cb.items():
+                bytes_by[k] = bytes_by.get(k, 0) + v * mult
+            for k, v in cc.items():
+                counts_by[k] = counts_by.get(k, 0) + v * mult
+        memo[comp.name] = (bytes_by, counts_by)
+        return bytes_by, counts_by
+
+    bytes_by, counts_by = visit(entry)
+    return {
+        "bytes": bytes_by,
+        "counts": counts_by,
+        "total": sum(bytes_by.values()),
+    }

@@ -1,0 +1,101 @@
+"""Config registry: ``get_config(arch_id)`` + shape suite + input specs."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import SHAPES, ModelConfig, MoEConfig, MLAConfig, ShapeConfig, shape_applicable  # noqa: F401
+
+ARCHS: dict[str, str] = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "internvl2-76b": "internvl2_76b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen3-8b": "qwen3_8b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def cache_alloc_len(seq_len: int) -> int:
+    """Decode cache allocation: context + headroom, 128-aligned."""
+    return seq_len + 128
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((B, S // 2), i32),
+                "loss_mask": jax.ShapeDtypeStruct((B, S // 2), f32),
+            }
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S - cfg.frontend_len), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S - cfg.frontend_len), f32),
+        }
+        if cfg.frontend == "vision":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), f32
+            )
+        return out
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((B, max(S // 8, 128)), i32),
+            }
+        out = {"tokens": jax.ShapeDtypeStruct((B, S - cfg.frontend_len), i32)}
+        if cfg.frontend == "vision":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), f32
+            )
+        return out
+
+    # decode: one new token against a cache of S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "cur_index": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, sds in input_specs(cfg, shape).items():
+        if sds.dtype == jnp.int32 and k == "tokens":
+            out[k] = rng.integers(0, cfg.vocab_size, size=sds.shape).astype(np.int32)
+        elif sds.dtype == jnp.int32:
+            out[k] = np.zeros(sds.shape, np.int32)
+        elif k == "loss_mask":
+            out[k] = np.ones(sds.shape, np.float32)
+        else:
+            out[k] = rng.normal(size=sds.shape).astype(np.float32)
+    return out

@@ -1,0 +1,35 @@
+"""CIAO core: the paper's contribution (predicates, selection, loading)."""
+from .predicates import (  # noqa: F401
+    Clause,
+    Kind,
+    Query,
+    SimplePredicate,
+    all_patterns,
+    clause,
+    exact,
+    key_value,
+    presence,
+    query,
+    substring,
+)
+from .bitvector import pack, unpack, popcount  # noqa: F401
+from .client import Chunk, NumpyEngine, PythonEngine, encode_chunk, get_engine  # noqa: F401
+from .cost_model import CostModel, calibrate, fit  # noqa: F401
+from .planner import PlanReport, build_plan, plan_for_clients  # noqa: F401
+from .selection import (  # noqa: F401
+    SelectionProblem,
+    SelectionResult,
+    brute_force,
+    celf_greedy,
+    combined_celf,
+    combined_greedy,
+    greedy,
+    objective,
+)
+from .server import (  # noqa: F401
+    CiaoStore,
+    DataSkippingScanner,
+    FullScanBaseline,
+    PushdownPlan,
+)
+from .workload import Workload, estimate_selectivities, generate_workload  # noqa: F401

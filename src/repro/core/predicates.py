@@ -1,0 +1,214 @@
+"""Predicate AST and pattern-string compilation (paper §IV).
+
+CIAO supports four predicate kinds, each compiled to one or two *pattern
+strings* that a client can evaluate by raw substring search over JSON bytes
+(no parsing).  Client evaluation may produce false positives (a query
+re-verifies on parsed values at scan time) but NEVER false negatives — this
+is the invariant the whole system rests on, and the one our property tests
+enforce.
+
+Terminology follows the paper:
+  * ``SimplePredicate`` — one string-matchable SQL predicate (Table I).
+  * ``Clause`` — a disjunction of simple predicates; the *atomic unit* of
+    pushdown (paper §V-A: each conjunctive clause is pushed whole or not at
+    all, because pushing one disjunct of an IN-list cannot filter tuples).
+  * ``Query`` — a conjunction of clauses.
+"""
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Sequence
+
+
+class Kind(enum.Enum):
+    EXACT = "exact"             # name = "Bob"          -> pattern '"Bob"'
+    SUBSTRING = "substring"     # text LIKE "%x%"       -> pattern 'x'
+    KEY_PRESENCE = "presence"   # email != NULL         -> pattern '"email"'
+    KEY_VALUE = "key_value"     # age = 10              -> patterns '"age"', '10'
+
+
+def _enc(s: str) -> bytes:
+    return s.encode("utf-8")
+
+
+@dataclass(frozen=True)
+class SimplePredicate:
+    """One string-matchable predicate over a JSON record."""
+
+    kind: Kind
+    key: str
+    value: Any = None  # str | int | float | bool | None
+
+    # ---- pattern compilation (paper Table I) -------------------------------
+    def patterns(self) -> tuple[bytes, ...]:
+        if self.kind is Kind.EXACT:
+            # Exact string match: operand string including JSON quotes.
+            return (_enc(f'"{self.value}"'),)
+        if self.kind is Kind.SUBSTRING:
+            return (_enc(str(self.value)),)
+        if self.kind is Kind.KEY_PRESENCE:
+            return (_enc(f'"{self.key}"'),)
+        if self.kind is Kind.KEY_VALUE:
+            return (_enc(f'"{self.key}"'), _enc(_json_scalar(self.value)))
+        raise AssertionError(self.kind)
+
+    # ---- client-side semantics (string search, false-positive tolerant) ----
+    def matches_raw(self, record: bytes) -> bool:
+        """Paper-faithful ``string::find`` evaluation on raw JSON bytes."""
+        pats = self.patterns()
+        if self.kind is Kind.KEY_VALUE:
+            key_pat, val_pat = pats
+            # Search every occurrence of the key; for each, look for the
+            # value between the end of the key and the next delimiter
+            # (',' or '}').  Checking every occurrence (not just the first)
+            # is required to keep the no-false-negative invariant when the
+            # key string also appears inside a text field.
+            # Values that themselves contain a delimiter could be cut short
+            # by the segment search and yield a false negative; for those we
+            # degrade to "value appears anywhere after the key" (more false
+            # positives, never a false negative).
+            unbounded = b"," in val_pat or b"}" in val_pat
+            start = record.find(key_pat)
+            while start != -1:
+                seg_start = start + len(key_pat)
+                if unbounded:
+                    seg_end = len(record)
+                else:
+                    c = record.find(b",", seg_start)
+                    b = record.find(b"}", seg_start)
+                    cands = [x for x in (c, b) if x != -1]
+                    seg_end = min(cands) if cands else len(record)
+                if record.find(val_pat, seg_start, seg_end) != -1:
+                    return True
+                start = record.find(key_pat, start + 1)
+            return False
+        return pats[0] in record
+
+    # ---- exact semantics on a parsed record (server-side verification) -----
+    def matches_exact(self, obj: dict) -> bool:
+        if self.kind is Kind.KEY_PRESENCE:
+            return self.key in obj and obj[self.key] is not None
+        if self.key not in obj:
+            return False
+        v = obj[self.key]
+        # bool/number equality across representations is unsupported (paper
+        # §IV-B excludes e.g. 2.4 vs 24e-1 for the same reason: the raw
+        # pattern cannot match, so allowing it would be a false negative).
+        if isinstance(v, bool) != isinstance(self.value, bool):
+            return False
+        if self.kind is Kind.EXACT:
+            return v == self.value
+        if self.kind is Kind.SUBSTRING:
+            return isinstance(v, str) and str(self.value) in v
+        if self.kind is Kind.KEY_VALUE:
+            return v == self.value or _json_scalar(self.value) == _json_scalar(v)
+        raise AssertionError(self.kind)
+
+    def pattern_length(self) -> int:
+        return sum(len(p) for p in self.patterns())
+
+    def describe(self) -> str:
+        if self.kind is Kind.EXACT:
+            return f'{self.key} = "{self.value}"'
+        if self.kind is Kind.SUBSTRING:
+            return f'{self.key} LIKE "%{self.value}%"'
+        if self.kind is Kind.KEY_PRESENCE:
+            return f"{self.key} != NULL"
+        return f"{self.key} = {_json_scalar(self.value)}"
+
+
+def _json_scalar(v: Any) -> str:
+    """Render a scalar the way our JSON writer renders it (for pattern gen)."""
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return json.dumps(v)
+    return str(v)
+
+
+@dataclass(frozen=True)
+class Clause:
+    """A disjunction of simple predicates — the atomic pushdown unit."""
+
+    terms: tuple[SimplePredicate, ...]
+
+    def __post_init__(self) -> None:
+        if not self.terms:
+            raise ValueError("empty clause")
+
+    # Client semantics: valid iff ANY disjunct pattern-matches.
+    def matches_raw(self, record: bytes) -> bool:
+        return any(t.matches_raw(record) for t in self.terms)
+
+    def matches_exact(self, obj: dict) -> bool:
+        return any(t.matches_exact(obj) for t in self.terms)
+
+    def patterns(self) -> tuple[tuple[bytes, ...], ...]:
+        return tuple(t.patterns() for t in self.terms)
+
+    def pattern_length(self) -> int:
+        return sum(t.pattern_length() for t in self.terms)
+
+    def describe(self) -> str:
+        if len(self.terms) == 1:
+            return self.terms[0].describe()
+        return "(" + " OR ".join(t.describe() for t in self.terms) + ")"
+
+    # Clauses are dict keys throughout the optimizer.
+    def __hash__(self) -> int:  # pragma: no cover - trivial
+        return hash(self.terms)
+
+
+@dataclass(frozen=True)
+class Query:
+    """A conjunction of clauses with a workload frequency weight."""
+
+    clauses: tuple[Clause, ...]
+    freq: float = 1.0
+
+    def matches_exact(self, obj: dict) -> bool:
+        return all(c.matches_exact(obj) for c in self.clauses)
+
+    def describe(self) -> str:
+        return " AND ".join(c.describe() for c in self.clauses)
+
+
+# ---------------------------------------------------------------------------
+# convenience constructors
+# ---------------------------------------------------------------------------
+
+def exact(key: str, value: str) -> SimplePredicate:
+    return SimplePredicate(Kind.EXACT, key, value)
+
+
+def substring(key: str, value: str) -> SimplePredicate:
+    return SimplePredicate(Kind.SUBSTRING, key, value)
+
+
+def presence(key: str) -> SimplePredicate:
+    return SimplePredicate(Kind.KEY_PRESENCE, key)
+
+
+def key_value(key: str, value: Any) -> SimplePredicate:
+    return SimplePredicate(Kind.KEY_VALUE, key, value)
+
+
+def clause(*terms: SimplePredicate) -> Clause:
+    return Clause(tuple(terms))
+
+
+def query(*clauses_: Clause | SimplePredicate, freq: float = 1.0) -> Query:
+    cs = tuple(c if isinstance(c, Clause) else Clause((c,)) for c in clauses_)
+    return Query(cs, freq=freq)
+
+
+def all_patterns(clauses_: Iterable[Clause]) -> list[bytes]:
+    """Flat, deduplicated pattern list for a set of clauses (kernel input)."""
+    seen: dict[bytes, None] = {}
+    for c in clauses_:
+        for term_pats in c.patterns():
+            for p in term_pats:
+                seen.setdefault(p, None)
+    return list(seen)

@@ -1,0 +1,273 @@
+"""Server side: partial data loading and data skipping (paper §VI).
+
+For each incoming chunk the server loads a record into the parsed store iff
+it is valid for >= 1 pushed-down clause (bitwise OR over the chunk's
+bit-vectors).  Loaded blocks carry the per-clause bit-vectors as block
+metadata; the remaining records stay raw (dense uint8 sub-chunk, zero-copy
+row selection) for just-in-time loading.
+
+Query path (:class:`DataSkippingScanner`):
+  * if the query contains >= 1 pushed clause, only loaded blocks are scanned
+    (sound: clients never produce false negatives => every true result row
+    was loaded), and the pushed clauses' bit-vectors are ANDed to skip rows;
+  * surviving rows are *re-verified* with exact semantics (clients may have
+    produced false positives);
+  * otherwise loaded blocks AND the raw remainder are scanned.  The first
+    such query triggers *just-in-time loading* (paper §I): raw records are
+    parsed once, promoted to unfiltered blocks, and never re-parsed.
+
+Blocks store parsed row dicts + packed bit-vectors (the Parquet-block
+analog: per-block metadata enables skipping; the row-vs-column layout is
+orthogonal to the technique at in-memory scale — DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from . import bitvector
+from .client import Chunk
+from .predicates import Clause, Query
+
+
+@dataclass
+class PushdownPlan:
+    """The selected clause set, with stable ids (paper Fig. 2 hashmap)."""
+
+    clauses: list[Clause]
+    ids: dict[Clause, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.ids:
+            self.ids = {c: i for i, c in enumerate(self.clauses)}
+
+    def pushed_in(self, q: Query) -> list[int]:
+        return [self.ids[c] for c in q.clauses if c in self.ids]
+
+    @property
+    def n(self) -> int:
+        return len(self.clauses)
+
+
+@dataclass
+class Block:
+    """One loaded block: parsed rows + bitvector metadata (uint32[P, W])."""
+
+    rows: list[dict]
+    bitvectors: np.ndarray
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.rows)
+
+
+@dataclass
+class RawRemainder:
+    """Unloaded rows of one chunk, kept as a dense uint8 sub-chunk."""
+
+    data: np.ndarray      # uint8[R, L]
+    lengths: np.ndarray   # int32[R]
+
+    @property
+    def n(self) -> int:
+        return int(self.data.shape[0])
+
+    def record(self, i: int) -> bytes:
+        return self.data[i, : self.lengths[i]].tobytes()
+
+    def records(self) -> list[bytes]:
+        return [self.record(i) for i in range(self.n)]
+
+
+@dataclass
+class LoadStats:
+    n_records: int = 0
+    n_loaded: int = 0
+    n_jit_loaded: int = 0
+    load_time_s: float = 0.0
+    parse_time_s: float = 0.0
+    jit_time_s: float = 0.0
+
+    @property
+    def loading_ratio(self) -> float:
+        return self.n_loaded / self.n_records if self.n_records else 0.0
+
+
+class CiaoStore:
+    """Parsed blocks + raw remainder + per-block bitvector metadata."""
+
+    def __init__(self, plan: PushdownPlan):
+        self.plan = plan
+        self.blocks: list[Block] = []
+        self.raw: list[RawRemainder] = []
+        self.jit_blocks: list[Block] = []   # promoted raw rows (no bitvectors)
+        self.stats = LoadStats()
+
+    # -- ingest -------------------------------------------------------------
+    def ingest_chunk(self, chunk: Chunk, bitvecs: np.ndarray) -> LoadStats:
+        """Partial loading of one chunk (uint32[P, W] client bit-vectors)."""
+        t0 = time.perf_counter()
+        n = chunk.n_records
+        self.stats.n_records += n
+        if self.plan.n == 0:
+            load_idx = np.arange(n)
+            keep_idx = np.array([], dtype=np.int64)
+            block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
+        else:
+            any_words = bitvector.bv_or_many(bitvecs)
+            load_mask = bitvector.unpack(any_words, n)
+            load_idx = np.nonzero(load_mask)[0]
+            keep_idx = np.nonzero(~load_mask)[0]
+            bits = bitvector.unpack(bitvecs, n)[:, load_idx]
+            block_bv = bitvector.pack(bits)
+
+        tp0 = time.perf_counter()
+        rows = [json.loads(chunk.record(i)) for i in load_idx]
+        self.stats.parse_time_s += time.perf_counter() - tp0
+        if rows:
+            self.blocks.append(Block(rows=rows, bitvectors=block_bv))
+        if len(keep_idx):
+            self.raw.append(
+                RawRemainder(
+                    data=chunk.data[keep_idx],          # numpy fancy-index, O(bytes)
+                    lengths=chunk.lengths[keep_idx],
+                )
+            )
+        self.stats.n_loaded += int(len(load_idx))
+        self.stats.load_time_s += time.perf_counter() - t0
+        return self.stats
+
+    # -- just-in-time loading (paper §I) -------------------------------------
+    def jit_load_raw(self) -> None:
+        """Parse the raw remainder once, promoting it to unfiltered blocks."""
+        if not self.raw:
+            return
+        t0 = time.perf_counter()
+        for rr in self.raw:
+            rows = [json.loads(rr.record(i)) for i in range(rr.n)]
+            self.jit_blocks.append(
+                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32))
+            )
+            self.stats.n_jit_loaded += rr.n
+        self.raw = []
+        self.stats.jit_time_s += time.perf_counter() - t0
+
+    # -- persistence (ingest checkpointing) ----------------------------------
+    def save(self, path: str) -> None:
+        payload: dict[str, Any] = {"n_blocks": np.array(len(self.blocks))}
+        for bi, blk in enumerate(self.blocks):
+            payload[f"bv_{bi}"] = blk.bitvectors
+            payload[f"rows_{bi}"] = np.frombuffer(
+                json.dumps(blk.rows).encode(), dtype=np.uint8
+            )
+        payload["n_raw"] = np.array(len(self.raw))
+        for ri, rr in enumerate(self.raw):
+            payload[f"raw_data_{ri}"] = rr.data
+            payload[f"raw_len_{ri}"] = rr.lengths
+        np.savez_compressed(path, **payload)
+
+    @classmethod
+    def load(cls, path: str, plan: PushdownPlan) -> "CiaoStore":
+        z = np.load(path)
+        store = cls(plan)
+        for bi in range(int(z["n_blocks"])):
+            rows = json.loads(bytes(z[f"rows_{bi}"].tobytes()).decode())
+            store.blocks.append(Block(rows=rows, bitvectors=z[f"bv_{bi}"]))
+        for ri in range(int(z["n_raw"])):
+            store.raw.append(
+                RawRemainder(data=z[f"raw_data_{ri}"], lengths=z[f"raw_len_{ri}"])
+            )
+        return store
+
+
+@dataclass
+class ScanResult:
+    count: int
+    rows_scanned: int
+    rows_skipped: int
+    raw_parsed: int
+    time_s: float
+    used_skipping: bool
+
+
+class DataSkippingScanner:
+    """COUNT(*) scan with bitvector data skipping + exact re-verification."""
+
+    def __init__(self, store: CiaoStore):
+        self.store = store
+
+    def scan(self, q: Query) -> ScanResult:
+        t0 = time.perf_counter()
+        plan = self.store.plan
+        pushed = plan.pushed_in(q)
+        count = 0
+        scanned = skipped = raw_parsed = 0
+
+        for blk in self.store.blocks:
+            if pushed:
+                words = bitvector.bv_and_many(blk.bitvectors[pushed])
+                idx = bitvector.select_indices(words, blk.n_rows)
+                skipped += blk.n_rows - len(idx)
+                for i in idx:
+                    if q.matches_exact(blk.rows[i]):
+                        count += 1
+                scanned += len(idx)
+            else:
+                for row in blk.rows:
+                    if q.matches_exact(row):
+                        count += 1
+                scanned += blk.n_rows
+
+        if not pushed:
+            # raw remainder may contain matches: JIT-promote once, then scan
+            if self.store.raw:
+                before = self.store.stats.n_jit_loaded
+                self.store.jit_load_raw()
+                raw_parsed = self.store.stats.n_jit_loaded - before
+            for blk in self.store.jit_blocks:
+                for row in blk.rows:
+                    if q.matches_exact(row):
+                        count += 1
+                scanned += blk.n_rows
+        return ScanResult(
+            count=count,
+            rows_scanned=scanned,
+            rows_skipped=skipped,
+            raw_parsed=raw_parsed,
+            time_s=time.perf_counter() - t0,
+            used_skipping=bool(pushed),
+        )
+
+
+class FullScanBaseline:
+    """Zero-budget baseline: parse + load everything, no skipping."""
+
+    def __init__(self) -> None:
+        self.rows: list[dict] = []
+        self.stats = LoadStats()
+
+    def ingest_chunk(self, chunk: Chunk) -> None:
+        t0 = time.perf_counter()
+        for i in range(chunk.n_records):
+            self.rows.append(json.loads(chunk.record(i)))
+        self.stats.n_records += chunk.n_records
+        self.stats.n_loaded += chunk.n_records
+        dt = time.perf_counter() - t0
+        self.stats.load_time_s += dt
+        self.stats.parse_time_s += dt
+
+    def scan(self, q: Query) -> ScanResult:
+        t0 = time.perf_counter()
+        count = sum(1 for row in self.rows if q.matches_exact(row))
+        return ScanResult(
+            count=count,
+            rows_scanned=len(self.rows),
+            rows_skipped=0,
+            raw_parsed=0,
+            time_s=time.perf_counter() - t0,
+            used_skipping=False,
+        )

@@ -1,0 +1,196 @@
+"""CIAO-integrated training-data pipeline.
+
+Flow (DESIGN.md §2):
+
+  client shards (raw JSON) ──chunks+bitvectors──▶ ingest ──▶ CiaoStore
+        ──recipe query (bitvector AND + verify)──▶ token batches ──▶ device
+
+Pieces:
+  * :class:`ClientShard` — one data client: seeded record stream, chunk
+    encoding, client-side predicate evaluation under its budget class.
+  * :class:`IngestCoordinator` — pulls chunks from many clients with a
+    work-stealing scheduler (straggler mitigation: idle fast clients claim
+    pending chunks of the slowest; virtual-time simulated, deterministic).
+  * :class:`RecipeBatcher` — data-skipping selection of recipe-matching rows
+    from the store, tokenization, fixed-shape (batch, seq) arrays.
+  * :class:`Prefetcher` — background-thread double buffering so host-side
+    CIAO work overlaps device compute (the paper's latency-hiding bet).
+"""
+from __future__ import annotations
+
+import heapq
+import json
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core import bitvector
+from repro.core.client import Chunk, encode_chunk
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore, PushdownPlan
+from repro.data.datasets import record_stream
+from repro.data.tokenizer import ByteTokenizer
+
+
+@dataclass
+class ClientShard:
+    """One data client with its own seed, engine, and speed class."""
+
+    dataset: str
+    shard_id: int
+    engine: object                      # core engine protocol
+    plan: PushdownPlan
+    chunk_records: int = 512
+    speed: float = 1.0                  # relative records/sec (straggler sim)
+
+    def __post_init__(self) -> None:
+        self._stream = record_stream(self.dataset, seed=1000 + self.shard_id)
+
+    def next_chunk(self) -> tuple[Chunk, np.ndarray]:
+        recs = [next(self._stream) for _ in range(self.chunk_records)]
+        chunk = encode_chunk(recs)
+        bv = self.engine.eval_packed(chunk, self.plan.clauses)
+        return chunk, bv
+
+
+@dataclass(order=True)
+class _Pending:
+    ready_at: float
+    seq: int
+    client_idx: int = field(compare=False)
+
+
+class IngestCoordinator:
+    """Work-stealing chunk scheduler over N clients (virtual time).
+
+    Each client owns a backlog of `chunks_per_client` chunk slots.  A chunk
+    produced by client i takes 1/speed_i virtual seconds.  When a fast client
+    drains its backlog it steals a slot from the most-backlogged client and
+    produces that chunk itself (clients are stateless record producers in
+    this simulation, so stealing = re-assigning the production slot).  This
+    bounds makespan by the fastest clients instead of the slowest — the
+    framework's straggler-mitigation story, testable without wall-clock.
+    """
+
+    def __init__(self, clients: Sequence[ClientShard], store: CiaoStore,
+                 *, steal: bool = True):
+        self.clients = list(clients)
+        self.store = store
+        self.steal = steal
+        self.stolen = 0
+        self.makespan = 0.0
+
+    def run(self, chunks_per_client: int) -> None:
+        backlog = [chunks_per_client for _ in self.clients]
+        clock = [0.0 for _ in self.clients]
+        total = chunks_per_client * len(self.clients)
+        done = 0
+        while done < total:
+            # next client to finish a chunk = argmin over clock+1/speed
+            i = min(
+                range(len(self.clients)),
+                key=lambda k: clock[k] + 1.0 / self.clients[k].speed
+                if backlog[k] > 0 or (self.steal and max(backlog) > 0)
+                else float("inf"),
+            )
+            if backlog[i] == 0:
+                if not self.steal:
+                    continue
+                j = int(np.argmax(backlog))
+                if backlog[j] == 0:
+                    break
+                backlog[j] -= 1
+                self.stolen += 1
+            else:
+                backlog[i] -= 1
+            chunk, bv = self.clients[i].next_chunk()
+            self.store.ingest_chunk(chunk, bv)
+            clock[i] += 1.0 / self.clients[i].speed
+            done += 1
+        self.makespan = max(clock)
+
+
+class RecipeBatcher:
+    """Turns recipe-matching store rows into fixed-shape token batches."""
+
+    def __init__(self, store: CiaoStore, tokenizer: ByteTokenizer,
+                 *, seq_len: int, batch_size: int):
+        self.store = store
+        self.tok = tokenizer
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+
+    def matching_records(self, recipe: Query) -> Iterator[bytes]:
+        plan = self.store.plan
+        pushed = plan.pushed_in(recipe)
+        for blk in self.store.blocks:
+            if pushed:
+                words = bitvector.bv_and_many(blk.bitvectors[pushed])
+                idx = bitvector.select_indices(words, blk.n_rows)
+            else:
+                idx = range(blk.n_rows)
+            for i in idx:
+                row = blk.rows[i]
+                if recipe.matches_exact(row):
+                    yield json.dumps(row, separators=(",", ":")).encode()
+        if not pushed:
+            self.store.jit_load_raw()
+            for blk in self.store.jit_blocks:
+                for row in blk.rows:
+                    if recipe.matches_exact(row):
+                        yield json.dumps(row, separators=(",", ":")).encode()
+
+    def batches(self, recipe: Query, *, repeat: bool = True
+                ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Yields (tokens, loss_mask) of shape (batch, seq_len): packed docs."""
+        buf: list[int] = []
+        while True:
+            made_any = False
+            for rec in self.matching_records(recipe):
+                made_any = True
+                buf.extend(self.tok.encode(rec).tolist())
+                while len(buf) >= self.batch_size * self.seq_len:
+                    flat = np.array(
+                        buf[: self.batch_size * self.seq_len], dtype=np.int32
+                    )
+                    del buf[: self.batch_size * self.seq_len]
+                    tokens = flat.reshape(self.batch_size, self.seq_len)
+                    mask = np.ones_like(tokens, dtype=np.float32)
+                    yield tokens, mask
+            if not repeat or not made_any:
+                return
+
+
+class Prefetcher:
+    """Double-buffered background prefetch (host CIAO work ∥ device step)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._err: BaseException | None = None
+
+        def worker() -> None:
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # propagate to consumer
+                self._err = e
+            finally:
+                self._q.put(self._done)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ pure-jnp oracles in ref.py, jit wrappers in ops.py).
+
+  * substring_match — the paper's hot loop, TPU-adapted (DESIGN.md §3)
+  * bitvector_ops   — AND/OR/popcount streaming reduce for data skipping
+  * flash_attention — canonical grid-accumulated flash attention (GQA via
+    BlockSpec index maps), used by the compute plane
+
+All validated in interpret mode; ops.match_any / ops.match_key_value /
+ops.reduce_bitvectors dispatch between pallas / pallas_interpret / xla.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""Pallas kernel for bit-vector reduction (data skipping / partial loading).
+
+Given packed bit-vectors ``uint32[P, W]`` it produces, per 128-word tile:
+  * ``and_words`` — AND across the P selected clauses (query-side skipping);
+  * ``or_words``  — OR across clauses (ingest-side load mask);
+  * ``counts``    — surviving-row popcount per tile (selectivity feedback).
+
+One pass, one kernel: on TPU this is a pure VPU streaming op; the popcount
+uses ``lax.population_count`` on the reduced words only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(bv_ref, and_ref, or_ref, cnt_ref):
+    bv = bv_ref[...]                          # (P, W_blk) uint32
+    and_words = bv[0]
+    or_words = bv[0]
+    for p in range(1, bv.shape[0]):           # P is a static block dim
+        and_words = jnp.bitwise_and(and_words, bv[p])
+        or_words = jnp.bitwise_or(or_words, bv[p])
+    and_ref[0, :] = and_words
+    or_ref[0, :] = or_words
+    cnt_ref[0, 0] = lax.population_count(and_words).astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("w_blk", "interpret"))
+def bitvector_reduce(
+    bitvecs: jnp.ndarray,   # uint32[P, W]  (W % w_blk == 0)
+    *,
+    w_blk: int = 128,
+    interpret: bool = True,
+):
+    P, W = bitvecs.shape
+    if W % w_blk:
+        raise ValueError(f"W={W} not a multiple of w_blk={w_blk}")
+    n_blocks = W // w_blk
+    and_w, or_w, cnt = pl.pallas_call(
+        _reduce_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((P, w_blk), lambda wb: (0, wb))],
+        out_specs=[
+            pl.BlockSpec((1, w_blk), lambda wb: (0, wb)),
+            pl.BlockSpec((1, w_blk), lambda wb: (0, wb)),
+            pl.BlockSpec((1, 1), lambda wb: (0, wb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, n_blocks), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bitvecs)
+    return and_w[0], or_w[0], cnt[0].sum()

@@ -1,0 +1,69 @@
+"""Kernel-backed client engine (implements the core engine protocol).
+
+Evaluates a clause list on a dense chunk with the Pallas kernels:
+simple predicates (exact / substring / key-presence) batch into one
+``match_any`` call over the deduplicated pattern set; key-value predicates
+dispatch to ``match_key_value``.  Disjunctions OR at the host level.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import bitvector
+from repro.core.client import Chunk, encode_patterns
+from repro.core.predicates import Clause, Kind
+
+from . import ops
+
+
+class KernelEngine:
+    def __init__(self, backend: str = "pallas_interpret", r_blk: int = 256):
+        if backend == "pallas":
+            # explicit opt-in for real hardware; default harness is CPU
+            pass
+        self.backend = backend
+        self.r_blk = r_blk
+        self.name = backend
+
+    def eval(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
+        # 1) collect unique simple patterns across all clauses
+        simple_pats: dict[bytes, int] = {}
+        kv_pairs: dict[tuple[bytes, bytes], int] = {}
+        for cl in clauses:
+            for t in cl.terms:
+                if t.kind is Kind.KEY_VALUE:
+                    k, v = t.patterns()
+                    kv_pairs.setdefault((k, v), len(kv_pairs))
+                else:
+                    simple_pats.setdefault(t.patterns()[0], len(simple_pats))
+
+        R = chunk.n_records
+        simple_hits = np.zeros((len(simple_pats), R), dtype=bool)
+        if simple_pats:
+            pats, plens = encode_patterns(list(simple_pats))
+            simple_hits = ops.match_any(
+                chunk.data, pats, plens[:, None],
+                backend=self.backend, r_blk=self.r_blk,
+            )
+        kv_hits = np.zeros((len(kv_pairs), R), dtype=bool)
+        for (k, v), idx in kv_pairs.items():
+            kv_hits[idx] = ops.match_key_value(
+                chunk.data, k, v, backend=self.backend, r_blk=self.r_blk
+            )
+
+        # 2) combine into per-clause bits (OR over disjuncts)
+        out = np.zeros((len(clauses), R), dtype=bool)
+        for ci, cl in enumerate(clauses):
+            row = out[ci]
+            for t in cl.terms:
+                if t.kind is Kind.KEY_VALUE:
+                    k, v = t.patterns()
+                    row |= kv_hits[kv_pairs[(k, v)]]
+                else:
+                    row |= simple_hits[simple_pats[t.patterns()[0]]]
+        return out
+
+    def eval_packed(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
+        return bitvector.pack(self.eval(chunk, clauses))

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (beyond-paper kernel for the compute plane).
+
+Canonical TPU structure: grid (B, H, nq, nk) with the kv dimension
+innermost; the output block for (b, h, qi) is revisited across nk steps and
+the running softmax stats (m, l) and the f32 accumulator live in VMEM
+scratch.  GQA is handled in the BlockSpec index map (kv head = h // G), so
+grouped queries share kv blocks without materializing repeats.
+
+VMEM working set per step: q(qb×d) + k/v(kb×d) + acc(qb×d) + stats — with
+qb=kb=256, d=128 that is ~0.5 MiB, far under the ~16 MiB/core budget, and
+arbitrary sequence lengths stream through the grid.
+
+Validated in interpret mode against ``repro.models.attention.flash_attention``
+(the production jnp path) across shape sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, qb: int, kb: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # (qb, d)
+    k = k_ref[0, 0]                                # (kb, d)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # (qb, kb)
+
+    if causal:
+        q_pos = qi * qb + lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+        k_pos = ki * kb + lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - shift[:, None])
+    if causal:
+        p = jnp.where(q_pos >= k_pos, p, 0.0)
+    alpha = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev - shift))
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    l_scr[...] = l_prev * alpha + p.sum(axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "k_block", "interpret"),
+)
+def flash_attention_tpu(
+    q: jnp.ndarray,   # (B, H, Sq, d)
+    k: jnp.ndarray,   # (B, Hkv, Sk, d)
+    v: jnp.ndarray,   # (B, Hkv, Sk, d)
+    *,
+    causal: bool = True,
+    q_block: int = 256,
+    k_block: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qb, kb = min(q_block, Sq), min(k_block, Sk)
+    if Sq % qb or Sk % kb:
+        raise ValueError(f"S must divide blocks: {Sq}%{qb}, {Sk}%{kb}")
+    nq, nk = Sq // qb, Sk // kb
+    grid = (B, H, nq, nk)
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, qb=qb, kb=kb,
+                          nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kb, d), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kb, d), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

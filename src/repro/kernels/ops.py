@@ -1,0 +1,94 @@
+"""Jit'd public wrappers over the Pallas kernels with backend dispatch.
+
+Backends:
+  * ``"pallas"``           — real TPU lowering (``interpret=False``);
+  * ``"pallas_interpret"`` — kernel body interpreted on CPU (CI/correctness);
+  * ``"xla"``              — the pure-jnp oracle from :mod:`repro.kernels.ref`.
+
+All wrappers pad R to the record-block multiple and slice back, so callers
+never see alignment constraints.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import ref
+from .bitvector_ops import bitvector_reduce
+from .substring_match import key_value_match, multi_match_any
+
+_PALLAS_BACKENDS = ("pallas", "pallas_interpret")
+
+
+def _pad_rows(data: np.ndarray, r_blk: int) -> tuple[jnp.ndarray, int]:
+    R = data.shape[0]
+    padded = ((R + r_blk - 1) // r_blk) * r_blk
+    if padded != R:
+        data = np.concatenate(
+            [data, np.zeros((padded - R,) + data.shape[1:], data.dtype)], axis=0
+        )
+    return jnp.asarray(data), R
+
+
+def match_any(data, patterns, plens, *, backend: str = "pallas_interpret",
+              r_blk: int = 256) -> np.ndarray:
+    """bool[P, R] any-position multi-pattern match."""
+    if backend == "xla":
+        out = ref.multi_match_any_ref(
+            jnp.asarray(data), jnp.asarray(patterns), jnp.asarray(plens)
+        )
+        return np.asarray(out, dtype=bool)
+    if backend not in _PALLAS_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    dataj, R = _pad_rows(np.asarray(data), r_blk)
+    out = multi_match_any(
+        dataj,
+        jnp.asarray(patterns),
+        jnp.asarray(plens, dtype=jnp.int32),
+        r_blk=min(r_blk, dataj.shape[0]),
+        interpret=(backend == "pallas_interpret"),
+    )
+    return np.asarray(out, dtype=bool)[:, :R]
+
+
+def match_key_value(data, key: bytes, val: bytes, *,
+                    backend: str = "pallas_interpret", r_blk: int = 256) -> np.ndarray:
+    """bool[R] key-value predicate match (paper Table I row 4)."""
+    mk, mv = len(key), len(val)
+    unbounded = b"," in val or b"}" in val
+    key_arr = jnp.asarray(np.frombuffer(key, np.uint8)[None, :])
+    val_arr = jnp.asarray(np.frombuffer(val, np.uint8)[None, :])
+    if backend == "xla":
+        out = ref.key_value_match_ref(
+            jnp.asarray(data), key_arr, val_arr, mk=mk, mv=mv, unbounded=unbounded
+        )
+        return np.asarray(out[0], dtype=bool)
+    if backend not in _PALLAS_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    dataj, R = _pad_rows(np.asarray(data), r_blk)
+    out = key_value_match(
+        dataj, key_arr, val_arr, mk=mk, mv=mv, unbounded=unbounded,
+        r_blk=min(r_blk, dataj.shape[0]),
+        interpret=(backend == "pallas_interpret"),
+    )
+    return np.asarray(out[0], dtype=bool)[:R]
+
+
+def reduce_bitvectors(bitvecs, *, backend: str = "pallas_interpret",
+                      w_blk: int = 128):
+    """(and_words, or_words, surviving_count) over uint32[P, W]."""
+    bv = np.asarray(bitvecs, dtype=np.uint32)
+    if backend == "xla":
+        a, o, c = ref.bitvector_reduce_ref(jnp.asarray(bv))
+        return np.asarray(a), np.asarray(o), int(c)
+    W = bv.shape[1]
+    w_blk = min(w_blk, W)
+    padded = ((W + w_blk - 1) // w_blk) * w_blk
+    if padded != W:
+        bv = np.concatenate(
+            [bv, np.zeros((bv.shape[0], padded - W), np.uint32)], axis=1
+        )
+    a, o, c = bitvector_reduce(
+        jnp.asarray(bv), w_blk=w_blk, interpret=(backend == "pallas_interpret")
+    )
+    return np.asarray(a)[:W], np.asarray(o)[:W], int(c)

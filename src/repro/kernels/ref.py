@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` refs).
+
+These mirror ``repro.core.client``'s vectorized numpy spec, expressed in
+plain jnp so they run under jit on any backend.  The kernel tests sweep
+shapes/dtypes and assert exact equality kernel-vs-ref; the core tests assert
+ref-vs-PythonEngine (the paper-faithful ``bytes.find`` oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DELIM_COMMA = 44
+DELIM_BRACE = 125
+
+
+def _shift_left(x: jnp.ndarray, i: int) -> jnp.ndarray:
+    if i == 0:
+        return x
+    pad = jnp.zeros(x.shape[:-1] + (i,), dtype=x.dtype)
+    return jnp.concatenate([x[..., i:], pad], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def multi_match_any_ref(data, patterns, plens):
+    """uint8[P, R]: pattern p occurs anywhere in record r."""
+    P, M = patterns.shape
+
+    def one(pat, m):
+        acc = data == pat[0]
+        for i in range(1, M):
+            acc = jnp.logical_and(
+                acc, jnp.logical_or(_shift_left(data, i) == pat[i], i >= m)
+            )
+        return jnp.any(acc, axis=1)
+
+    hits = jax.vmap(one)(patterns, plens[:, 0])
+    return hits.astype(jnp.uint8)
+
+
+def _window_eq(data, pat, m: int):
+    acc = data == pat[0]
+    for i in range(1, m):
+        acc = jnp.logical_and(acc, _shift_left(data, i) == pat[i])
+    return acc
+
+
+def _segmented_suffix_any(val_hit, delim):
+    """cond[p] = exists v >= p, in p's segment, with val_hit[v].
+
+    Suffix scan with resets at delimiters == flip + forward prefix scan with
+    the standard reset combine (y resets => drop x's accumulation).
+    """
+    R, L = val_hit.shape
+    pos = lax.broadcasted_iota(jnp.int32, (R, L), 1)
+    x = jnp.where(jnp.logical_and(val_hit, jnp.logical_not(delim)), pos, -1)
+    xf = jnp.flip(x, axis=1)
+    df = jnp.flip(delim, axis=1)
+
+    def combine(a, b):
+        am, astop = a
+        bm, bstop = b
+        return jnp.where(bstop, bm, jnp.maximum(am, bm)), jnp.logical_or(astop, bstop)
+
+    m, _ = lax.associative_scan(combine, (xf, df), axis=1)
+    return jnp.flip(m, axis=1) >= 0
+
+
+@functools.partial(jax.jit, static_argnames=("mk", "mv", "unbounded"))
+def key_value_match_ref(data, key_pat, val_pat, *, mk: int, mv: int, unbounded: bool):
+    """uint8[1, R]: the paper's key-value predicate semantics."""
+    key_hit = _window_eq(data, key_pat[0], mk)
+    val_hit = _window_eq(data, val_pat[0], mv)
+    if unbounded:
+        cond = jnp.flip(
+            lax.associative_scan(jnp.logical_or, jnp.flip(val_hit, axis=1), axis=1),
+            axis=1,
+        )
+    else:
+        delim = jnp.logical_or(data == DELIM_COMMA, data == DELIM_BRACE)
+        cond = _segmented_suffix_any(val_hit, delim)
+    hit = jnp.logical_and(key_hit, _shift_left(cond, mk))
+    return jnp.any(hit, axis=1).astype(jnp.uint8)[None, :]
+
+
+@jax.jit
+def bitvector_reduce_ref(bitvecs):
+    and_w = lax.reduce(
+        bitvecs, jnp.uint32(0xFFFFFFFF), lambda a, b: jnp.bitwise_and(a, b), (0,)
+    )
+    or_w = lax.reduce(
+        bitvecs, jnp.uint32(0), lambda a, b: jnp.bitwise_or(a, b), (0,)
+    )
+    cnt = lax.population_count(and_w).astype(jnp.int32).sum()
+    return and_w, or_w, cnt

@@ -1,0 +1,199 @@
+"""Pallas TPU kernels for client-side predicate evaluation.
+
+TPU adaptation of the paper's ``string::find`` hot loop (DESIGN.md §3):
+records are a dense ``uint8[R, L]`` chunk in VMEM and multi-pattern substring
+search becomes *sliding-window equality* across the 8x128 VPU lanes — every
+window position of every record is tested in parallel with zero
+data-dependent branching.
+
+Two kernels:
+
+  * :func:`multi_match_any` — grid ``(P, R/R_blk)``; block computes
+    "pattern p occurs anywhere in record r" for a tile of records.  Pattern
+    lengths are dynamic (masked), so one compilation serves any pattern set.
+    A block-level first-character prefilter (``pl.when``) skips the O(M)
+    inner reduction when no window can match — the TPU analog of the paper's
+    found/not-found cost asymmetry (k1,k2 vs k3,k4).
+  * :func:`key_value_match` — the paper's two-pattern key-value predicate:
+    value must occur between the end of a key occurrence and the next
+    delimiter (',' / '}').  Segment confinement is a segmented reverse
+    max-scan (log L ``associative_scan`` steps on the VPU).  Pattern lengths
+    are static here (few distinct (len_k, len_v) pairs per plan; each gets
+    its own specialization).
+
+VMEM budget: a ``(R_blk, L)`` uint8 tile + masks.  Defaults
+``R_blk=256, L<=2048`` keep the working set under ~2.5 MiB (v5e VMEM is
+128 MiB/core; we stay small so several grid steps pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DELIM_COMMA = 44   # ord(',')
+DELIM_BRACE = 125  # ord('}')
+
+
+def _shift_left(x: jnp.ndarray, i: int) -> jnp.ndarray:
+    """x[:, j+i] with zero fill on the right (static i)."""
+    if i == 0:
+        return x
+    pad = jnp.zeros((x.shape[0], i), dtype=x.dtype)
+    return jnp.concatenate([x[:, i:], pad], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# kernel A: multi-pattern any-position match
+# ---------------------------------------------------------------------------
+
+def _multi_match_kernel(pat_ref, plen_ref, data_ref, out_ref, *, max_pat_len: int):
+    data = data_ref[...]                      # (R_blk, L) uint8
+    pat = pat_ref[...]                        # (1, M) uint8
+    m = plen_ref[0, 0]                        # dynamic length
+
+    first = data == pat[0, 0]                 # (R_blk, L) candidate windows
+
+    @pl.when(jnp.any(first))
+    def _found_candidates():
+        acc = first
+        for i in range(1, max_pat_len):
+            # masked AND: positions where the pattern is already exhausted
+            # (i >= m) stay valid; shifted equality elsewhere.
+            eq = _shift_left(data, i) == pat[0, i]
+            acc_i = jnp.logical_or(eq, i >= m)
+            acc = jnp.logical_and(acc, acc_i)
+        out_ref[0, :] = jnp.any(acc, axis=1).astype(jnp.uint8)
+
+    @pl.when(jnp.logical_not(jnp.any(first)))
+    def _no_candidates():
+        out_ref[0, :] = jnp.zeros((data.shape[0],), dtype=jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("r_blk", "interpret"))
+def multi_match_any(
+    data: jnp.ndarray,      # uint8[R, L]   (R % r_blk == 0)
+    patterns: jnp.ndarray,  # uint8[P, M]
+    plens: jnp.ndarray,     # int32[P, 1]
+    *,
+    r_blk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:           # uint8[P, R]
+    R, L = data.shape
+    P, M = patterns.shape
+    if R % r_blk:
+        raise ValueError(f"R={R} not a multiple of r_blk={r_blk}")
+    grid = (P, R // r_blk)
+    return pl.pallas_call(
+        functools.partial(_multi_match_kernel, max_pat_len=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, M), lambda p, rb: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, rb: (p, 0)),
+            pl.BlockSpec((r_blk, L), lambda p, rb: (rb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r_blk), lambda p, rb: (p, rb)),
+        out_shape=jax.ShapeDtypeStruct((P, R), jnp.uint8),
+        interpret=interpret,
+    )(patterns, plens, data)
+
+
+# ---------------------------------------------------------------------------
+# kernel B: key-value match (static pattern lengths)
+# ---------------------------------------------------------------------------
+
+def _window_eq(data: jnp.ndarray, pat_row: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(R_blk, L) bool: window starting at j equals pat_row[:m]."""
+    acc = data == pat_row[0]
+    for i in range(1, m):
+        acc = jnp.logical_and(acc, _shift_left(data, i) == pat_row[i])
+    return acc
+
+
+def _segmented_suffix_any(val_hit: jnp.ndarray, delim: jnp.ndarray) -> jnp.ndarray:
+    """cond[p] = exists v >= p in p's segment with val_hit[v].
+
+    Segments are delimiter-separated; a delimiter position belongs to no
+    segment.  Suffix scan with resets == flip + forward segmented max-scan
+    (associative, log L VPU steps).
+    """
+    R, L = val_hit.shape
+    pos = lax.broadcasted_iota(jnp.int32, (R, L), 1)
+    x = jnp.where(jnp.logical_and(val_hit, jnp.logical_not(delim)), pos, -1)
+    xf = jnp.flip(x, axis=1)
+    df = jnp.flip(delim, axis=1)
+
+    def combine(a, b):
+        am, astop = a
+        bm, bstop = b
+        # b is later in scan order; a delimiter in b resets a's accumulation.
+        m = jnp.where(bstop, bm, jnp.maximum(am, bm))
+        return m, jnp.logical_or(astop, bstop)
+
+    m, _ = lax.associative_scan(combine, (xf, df), axis=1)
+    return jnp.flip(m, axis=1) >= 0
+
+
+def _key_value_kernel(key_ref, val_ref, data_ref, out_ref, *, mk: int, mv: int,
+                      unbounded: bool):
+    data = data_ref[...]                      # (R_blk, L)
+    key_hit = _window_eq(data, key_ref[0], mk)
+
+    @pl.when(jnp.any(key_hit))
+    def _have_keys():
+        val_hit = _window_eq(data, val_ref[0], mv)
+        if unbounded:
+            # suffix-any (no segment confinement): flipped or-scan
+            cond = jnp.flip(
+                lax.associative_scan(
+                    jnp.logical_or, jnp.flip(val_hit, axis=1), axis=1
+                ),
+                axis=1,
+            )
+        else:
+            delim = jnp.logical_or(data == DELIM_COMMA, data == DELIM_BRACE)
+            # val pattern contains no delimiter => a window match already
+            # implies no delimiter inside [v, v+mv)
+            cond = _segmented_suffix_any(val_hit, delim)
+        cond_at_value_region = _shift_left(cond, mk)  # cond[j + mk]
+        hit = jnp.logical_and(key_hit, cond_at_value_region)
+        out_ref[0, :] = jnp.any(hit, axis=1).astype(jnp.uint8)
+
+    @pl.when(jnp.logical_not(jnp.any(key_hit)))
+    def _no_keys():
+        out_ref[0, :] = jnp.zeros((data.shape[0],), dtype=jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mk", "mv", "unbounded", "r_blk", "interpret")
+)
+def key_value_match(
+    data: jnp.ndarray,     # uint8[R, L]
+    key_pat: jnp.ndarray,  # uint8[1, mk_padded]
+    val_pat: jnp.ndarray,  # uint8[1, mv_padded]
+    *,
+    mk: int,
+    mv: int,
+    unbounded: bool,
+    r_blk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:          # uint8[1, R]
+    R, L = data.shape
+    if R % r_blk:
+        raise ValueError(f"R={R} not a multiple of r_blk={r_blk}")
+    grid = (R // r_blk,)
+    return pl.pallas_call(
+        functools.partial(_key_value_kernel, mk=mk, mv=mv, unbounded=unbounded),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, key_pat.shape[1]), lambda rb: (0, 0)),
+            pl.BlockSpec((1, val_pat.shape[1]), lambda rb: (0, 0)),
+            pl.BlockSpec((r_blk, L), lambda rb: (rb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r_blk), lambda rb: (0, rb)),
+        out_shape=jax.ShapeDtypeStruct((1, R), jnp.uint8),
+        interpret=interpret,
+    )(key_pat, val_pat, data)

@@ -1,0 +1,339 @@
+"""Attention: GQA / MQA / qk-norm / bias / local-window / MLA + flash-jnp.
+
+Three compute paths:
+
+  * :func:`flash_attention` — chunked online-softmax attention in pure jnp
+    (lax.scan over KV chunks inside a scan over Q chunks).  This is what
+    makes 32k-sequence prefill lowerable without materializing S×S scores:
+    peak activation is O(q_chunk × k_chunk) per head.  Supports causal,
+    local-window (banded), and cross (unmasked) variants, GQA grouping, and
+    distinct QK/V head dims (MLA).
+  * :func:`decode_attention_*` — single-token attention over a cache shard,
+    returning *partial softmax stats* (o, m, l) so the caller can combine
+    across sequence-sharded cache shards (flash-decoding; see
+    ``repro.dist.collectives``).
+  * MLA (deepseek-v3) — full-rank expansion for train/prefill; *absorbed*
+    compressed-space decode (q absorbed through W_UK, attention directly on
+    the kv_lora cache — the cache stays 576-wide instead of 2×128×128).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MLAConfig, ModelConfig
+
+from .layers import Leaf, apply_rope, mk, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": mk(ks[0], (d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": mk(ks[1], (d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": mk(ks[2], (d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": mk(ks[3], (H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(ks[4], (H, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = mk(ks[5], (Hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = mk(ks[6], (Hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = mk(ks[7], (hd,), ("head_dim",), init="zeros")
+        p["k_norm"] = mk(ks[7], (hd,), ("head_dim",), init="zeros")
+    return p
+
+
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": mk(ks[0], (d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": mk(ks[1], (m.q_lora_rank,), ("q_lora",), init="zeros"),
+        "wq_b": mk(ks[1], (m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim")),
+        "wkv_a": mk(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora")),
+        "kv_norm": mk(ks[3], (m.kv_lora_rank,), ("kv_lora",), init="zeros"),
+        "wkv_b": mk(
+            ks[3],
+            (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+            ("kv_lora", "heads", "head_dim"),
+        ),
+        "wo": mk(ks[4], (H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# qkv projection helpers
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash-jnp chunked attention
+# ---------------------------------------------------------------------------
+
+class _Carry(NamedTuple):
+    o: jnp.ndarray  # (B, Hkv, G, qc, vd) fp32
+    m: jnp.ndarray  # (B, Hkv, G, qc)    fp32
+    l: jnp.ndarray  # (B, Hkv, G, qc)    fp32
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q, k, v, *,
+    q_positions, k_positions,
+    mask_mode: str = "causal",      # causal | local | none
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    scale: float | None = None,
+):
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, qkd); k: (B, Sk, Hkv, qkd); v: (B, Sk, Hkv, vd).
+    positions: int32 (Sq,) / (Sk,) absolute positions (mask + validity:
+    negative k_position == padding).
+    """
+    B, Sq, H, qkd = q.shape
+    Sk, Hkv, vd = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else qkd ** -0.5
+
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    nq = -(-Sq // qc)
+    nk = -(-Sk // kc)
+
+    q = _pad_to(q, nq * qc, 1).reshape(B, nq, qc, Hkv, G, qkd)
+    k = _pad_to(k, nk * kc, 1).reshape(B, nk, kc, Hkv, qkd)
+    v = _pad_to(v, nk * kc, 1).reshape(B, nk, kc, Hkv, vd)
+    qpos = _pad_to(q_positions, nq * qc, 0).reshape(nq, qc)
+    kpos = _pad_to(k_positions + 1, nk * kc, 0).reshape(nk, kc) - 1  # pad -> -1
+
+    def q_step(_, qi):
+        q_blk = q[:, qi]          # (B, qc, Hkv, G, qkd)
+        qp = qpos[qi]             # (qc,)
+
+        def kv_step(carry: _Carry, ki):
+            k_blk = k[:, ki]      # (B, kc, Hkv, qkd)
+            v_blk = v[:, ki]      # (B, kc, Hkv, vd)
+            kp = kpos[ki]         # (kc,)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            valid = (kp >= 0)[None, :]
+            if mask_mode == "causal":
+                valid = valid & (qp[:, None] >= kp[None, :])
+            elif mask_mode == "local":
+                diff = qp[:, None] - kp[None, :]
+                valid = valid & (diff >= 0) & (diff < window)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(carry.m, s.max(axis=-1))
+            # guard: fully-masked rows keep m at NEG_INF; exp(NEG_INF-NEG_INF)
+            # would be 1, so clamp the shift argument.
+            shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p_ = jnp.exp(s - shift[..., None])
+            p_ = jnp.where(valid[None, None, None], p_, 0.0)
+            alpha = jnp.exp(jnp.where(carry.m <= NEG_INF / 2, NEG_INF, carry.m - shift))
+            o = carry.o * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p_, v_blk.astype(jnp.float32)
+            )
+            l = carry.l * alpha + p_.sum(axis=-1)
+            return _Carry(o, m_new, l), None
+
+        init = _Carry(
+            o=jnp.zeros((B, Hkv, G, qc, vd), jnp.float32),
+            m=jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32),
+            l=jnp.zeros((B, Hkv, G, qc), jnp.float32),
+        )
+        carry, _ = lax.scan(kv_step, init, jnp.arange(nk))
+        out = carry.o / jnp.maximum(carry.l, 1e-30)[..., None]
+        # (B, Hkv, G, qc, vd) -> (B, qc, H, vd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, vd)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, jnp.arange(nq))   # (nq, B, qc, H, vd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, vd)
+    return out[:, :Sq]
+
+
+def attend_full(p, x, cfg: ModelConfig, positions, *, mask_mode=None):
+    """Self-attention (train/prefill path) for GQA-family configs."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    mode = mask_mode or ("local" if cfg.attention == "local" else "causal")
+    out = flash_attention(
+        q, k, v,
+        q_positions=positions, k_positions=positions,
+        mask_mode=mode, window=cfg.window,
+        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attend_cross(p, x, memory, cfg: ModelConfig):
+    """Cross-attention: queries from x, keys/values from encoder memory."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(x.dtype))
+    Sq, Sk = x.shape[1], memory.shape[1]
+    out = flash_attention(
+        q, k, v,
+        q_positions=jnp.arange(Sq), k_positions=jnp.arange(Sk),
+        mask_mode="none", q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    m: MLAConfig = cfg.mla
+    cq = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"].astype(x.dtype)
+    c_kv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(
+        kv[..., m.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta
+    )  # (B, S, 1, rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def attend_mla(p, x, cfg: ModelConfig, positions):
+    """Train/prefill MLA with full-rank expansion."""
+    m: MLAConfig = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    kvb = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"].astype(x.dtype))
+    k_nope = kvb[..., : m.qk_nope_head_dim]
+    v = kvb[..., m.qk_nope_head_dim:]
+    H = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = flash_attention(
+        q, k, v,
+        q_positions=positions, k_positions=positions,
+        mask_mode="causal", q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        scale=scale,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode: partial-softmax attention over a (possibly sharded) cache
+# ---------------------------------------------------------------------------
+
+class Partial(NamedTuple):
+    o: jnp.ndarray  # (B, H, vd) fp32, exp-weighted un-normalized
+    m: jnp.ndarray  # (B, H) fp32 local max
+    l: jnp.ndarray  # (B, H) fp32 local sum
+
+
+def combine_partials(parts: Partial, axis_name: str | None):
+    """Merge partial softmax stats, optionally across a mesh axis."""
+    if axis_name is not None:
+        m_all = lax.pmax(parts.m, axis_name)
+        alpha = jnp.exp(jnp.where(parts.m <= NEG_INF / 2, NEG_INF, parts.m - m_all))
+        o = lax.psum(parts.o * alpha[..., None], axis_name)
+        l = lax.psum(parts.l * alpha, axis_name)
+    else:
+        o, l = parts.o, parts.l
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def decode_attention_gqa(q, k_cache, v_cache, k_positions, *, window: int = 0,
+                         q_position=None, scale=None) -> Partial:
+    """q: (B, H, hd); caches: (B, S_shard, Hkv, hd); k_positions: (S_shard,)
+    with -1 for empty slots.  Returns partial stats for cross-shard combine.
+    """
+    B, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    valid = k_positions >= 0
+    if window and q_position is not None:
+        valid = valid & (q_position - k_positions < window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    shift = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p_ = jnp.exp(s - shift[..., None])
+    p_ = jnp.where(valid[None, None, None, :], p_, 0.0)
+    o = jnp.einsum("bhgs,bshd->bhgd", p_, v_cache.astype(jnp.float32))
+    l = p_.sum(axis=-1)
+    return Partial(
+        o=o.reshape(B, H, -1), m=m.reshape(B, H), l=l.reshape(B, H)
+    )
+
+
+def decode_attention_mla(q_nope, q_rope, ckv_cache, krope_cache, k_positions,
+                         wkv_b, *, nope_dim: int, scale) -> Partial:
+    """Absorbed MLA decode on the compressed cache.
+
+    q_nope: (B, H, nope); q_rope: (B, H, rope);
+    ckv_cache: (B, S_shard, kv_lora); krope_cache: (B, S_shard, rope).
+    wkv_b: (kv_lora, H, nope + v_dim).
+    """
+    wk = wkv_b[..., :nope_dim]                  # (r, H, nope)
+    wv = wkv_b[..., nope_dim:]                  # (r, H, vd)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, wk)   # absorb W_UK into q
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, ckv_cache, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhp,bsp->bhs", q_rope, krope_cache, preferred_element_type=jnp.float32)
+    ) * scale
+    valid = k_positions >= 0
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    shift = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p_ = jnp.exp(s - shift[..., None])
+    p_ = jnp.where(valid[None, None, :], p_, 0.0)
+    ctx = jnp.einsum("bhs,bsr->bhr", p_, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx, wv.astype(jnp.float32))
+    return Partial(o=o, m=m, l=p_.sum(axis=-1))

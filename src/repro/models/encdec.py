@@ -1,0 +1,225 @@
+"""Encoder–decoder model (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention + MLP blocks over precomputed frame
+embeddings (the audio frontend is a stub per the assignment — `input_specs`
+supplies (B, S_src, d) frames).  Decoder: causal self-attention +
+cross-attention + MLP.  Both sides scan over stacked layers.
+
+Decode path: decoder self-attention caches as in transformer.py; the
+encoder memory's cross-attention K/V are projected once at prefill and kept
+as part of the cache (cross K/V are position-independent).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_act
+
+from . import attention as attn
+from .layers import Leaf, apply_mlp, embed_tokens, init_embeddings, init_mlp, mk, rmsnorm, unembed
+from .transformer import _remat
+
+
+def _maybe_scan(body, carry, xs, cfg: ModelConfig):
+    """lax.scan, or an unrolled python loop when cfg.scan_layers=False
+    (dry-run accounting; see transformer._scan_group_seq)."""
+    if cfg.scan_layers:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for li in range(n):
+        carry, y = body(carry, jax.tree.map(lambda v: v[li], xs))
+        outs.append(y)
+    if outs and outs[0] is None:
+        return carry, None
+    return carry, jax.tree.map(lambda *vs: jnp.stack(vs), *outs)
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attn.init_attention(ks[1], cfg),
+        "ln2": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros"),
+        "self_attn": attn.init_attention(ks[1], cfg),
+        "ln_x": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros"),
+        "cross_attn": attn.init_attention(ks[2], cfg, cross=True),
+        "ln2": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _stack(init_one, key, n):
+    stacked = jax.vmap(init_one)(jax.random.split(key, n))
+    return jax.tree.map(
+        lambda l: Leaf(l.value, ("layers",) + l.axes),
+        stacked,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": init_embeddings(ks[0], cfg),
+        "enc": _stack(lambda k: _init_enc_block(k, cfg), ks[1], cfg.enc_layers),
+        "dec": _stack(lambda k: _init_dec_block(k, cfg), ks[2], cfg.dec_layers),
+        "ln_enc": mk(ks[3], (cfg.d_model,), ("embed",), init="zeros"),
+        "ln_f": mk(ks[3], (cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_src, d) precomputed frontend embeddings -> memory."""
+    x = constrain_act(frames.astype(jnp.dtype(cfg.compute_dtype)))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, p_l):
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        a = attn.attend_full(p_l["attn"], h, cfg, positions, mask_mode="none")
+        xc = xc + a
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        return constrain_act(xc + apply_mlp(p_l["mlp"], h, cfg.act)), None
+
+    x, _ = _maybe_scan(_remat(body, cfg), x, params["enc"], cfg)
+    return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, memory, tokens):
+    """Teacher-forced decoder logits; memory from :func:`encode`."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = constrain_act(embed_tokens(params["embed"], tokens, dt))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, p_l):
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        xc = xc + attn.attend_full(p_l["self_attn"], h, cfg, positions)
+        h = rmsnorm(xc, p_l["ln_x"], cfg.norm_eps)
+        xc = xc + attn.attend_cross(p_l["cross_attn"], h, memory, cfg)
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        return constrain_act(xc + apply_mlp(p_l["mlp"], h, cfg.act)), None
+
+    x, _ = _maybe_scan(_remat(body, cfg), x, params["dec"], cfg)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.tied_embeddings)
+
+
+def forward(params, cfg: ModelConfig, frames, tokens):
+    memory = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, memory, tokens)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_alloc: int, s_cross: int,
+               dtype=jnp.bfloat16):
+    Hkv, hd = cfg.n_kv_heads, cfg.hd()
+
+    def one(_):
+        return {
+            "k": jnp.zeros((batch, s_alloc, Hkv, hd), dtype),
+            "v": jnp.zeros((batch, s_alloc, Hkv, hd), dtype),
+            "pos": jnp.full((s_alloc,), -1, jnp.int32),
+            "xk": jnp.zeros((batch, s_cross, Hkv, hd), dtype),
+            "xv": jnp.zeros((batch, s_cross, Hkv, hd), dtype),
+        }
+
+    return jax.vmap(one)(jnp.arange(cfg.dec_layers))
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, *, s_alloc: int,
+            cache_dtype=jnp.bfloat16):
+    """Encode source + teacher-force the target prefix, emitting caches."""
+    memory = encode(params, cfg, frames)
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, dt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    caches = init_cache(cfg, x.shape[0], s_alloc, memory.shape[1], cache_dtype)
+
+    def body(xc, layer_in):
+        p_l, c_l = layer_in
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        q, k, v = attn._project_qkv(p_l["self_attn"], h, cfg, positions)
+        a = attn.flash_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            mask_mode="causal", q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        )
+        xc = xc + jnp.einsum("bshk,hkd->bsd", a, p_l["self_attn"]["wo"].astype(xc.dtype))
+        h = rmsnorm(xc, p_l["ln_x"], cfg.norm_eps)
+        xk = jnp.einsum("bsd,dhk->bshk", memory, p_l["cross_attn"]["wk"].astype(xc.dtype))
+        xv = jnp.einsum("bsd,dhk->bshk", memory, p_l["cross_attn"]["wv"].astype(xc.dtype))
+        qx = jnp.einsum("bsd,dhk->bshk", h, p_l["cross_attn"]["wq"].astype(xc.dtype))
+        ax = attn.flash_attention(
+            qx, xk, xv,
+            q_positions=positions, k_positions=jnp.arange(memory.shape[1]),
+            mask_mode="none", q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        )
+        xc = xc + jnp.einsum("bshk,hkd->bsd", ax, p_l["cross_attn"]["wo"].astype(xc.dtype))
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        xc = constrain_act(xc + apply_mlp(p_l["mlp"], h, cfg.act))
+        new_c = {
+            "k": lax.dynamic_update_slice(c_l["k"], k.astype(cache_dtype), (0, 0, 0, 0)),
+            "v": lax.dynamic_update_slice(c_l["v"], v.astype(cache_dtype), (0, 0, 0, 0)),
+            "pos": lax.dynamic_update_slice(c_l["pos"], positions, (0,)),
+            "xk": xk.astype(cache_dtype),
+            "xv": xv.astype(cache_dtype),
+        }
+        return xc, new_c
+
+    x, new_caches = _maybe_scan(body, x, (params["dec"], caches), cfg)
+    x = rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.tied_embeddings)[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, cur_index,
+                *, axis_name: str | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens[:, None], dt)
+    pos1 = jnp.full((1,), cur_index, jnp.int32)
+
+    def body(xc, layer_in):
+        p_l, c_l = layer_in
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        q, k, v = attn._project_qkv(p_l["self_attn"], h, cfg, pos1)
+        ck = lax.dynamic_update_slice(c_l["k"], k.astype(c_l["k"].dtype), (0, cur_index, 0, 0))
+        cv = lax.dynamic_update_slice(c_l["v"], v.astype(c_l["v"].dtype), (0, cur_index, 0, 0))
+        cpos = lax.dynamic_update_slice(c_l["pos"], pos1, (cur_index,))
+        part = attn.decode_attention_gqa(q[:, 0], ck, cv, cpos)
+        o = attn.combine_partials(part, axis_name)
+        xc = xc + jnp.einsum(
+            "bhk,hkd->bd", o.astype(xc.dtype), p_l["self_attn"]["wo"].astype(xc.dtype)
+        )[:, None]
+        h = rmsnorm(xc, p_l["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p_l["cross_attn"]["wq"].astype(xc.dtype))
+        xpart = attn.decode_attention_gqa(
+            qx[:, 0], c_l["xk"], c_l["xv"],
+            jnp.arange(c_l["xk"].shape[1], dtype=jnp.int32),
+        )
+        ox = attn.combine_partials(xpart, axis_name)
+        xc = xc + jnp.einsum(
+            "bhk,hkd->bd", ox.astype(xc.dtype), p_l["cross_attn"]["wo"].astype(xc.dtype)
+        )[:, None]
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        xc = xc + apply_mlp(p_l["mlp"], h, cfg.act)
+        return xc, {"k": ck, "v": cv, "pos": cpos, "xk": c_l["xk"], "xv": c_l["xv"]}
+
+    x, new_caches = _maybe_scan(body, x, (params["dec"], caches), cfg)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.tied_embeddings)[:, 0], new_caches

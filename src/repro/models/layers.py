@@ -1,0 +1,149 @@
+"""Shared layers: params-as-pytrees, norms, RoPE, MLPs, embeddings.
+
+No flax — params are plain nested dicts of arrays.  Every init function
+builds leaves through :func:`mk`, which records *logical sharding axes*
+alongside the value; :func:`split` separates (values, axes) so ``jit`` sees a
+clean array pytree while ``repro.dist.sharding`` maps axes → mesh.
+
+All init functions are pure jax (safe under ``jax.eval_shape`` — the dry-run
+never materializes the 671B-parameter configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: Any                       # array (or ShapeDtypeStruct under eval_shape)
+    axes: tuple[str | None, ...]     # logical axis names, len == ndim
+
+
+jax.tree_util.register_pytree_node(
+    Leaf,
+    lambda l: ((l.value,), l.axes),
+    lambda axes, vals: Leaf(vals[0], axes),
+)
+
+
+def mk(key, shape, axes, *, scale: float | None = None, dtype=jnp.float32,
+       init: str = "normal") -> Leaf:
+    assert len(axes) == len(shape), (axes, shape)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        import math
+        fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+        s = scale if scale is not None else 1.0 / max(float(fan_in), 1.0) ** 0.5
+        v = jax.random.normal(key, shape, dtype) * s
+    return Leaf(v, tuple(axes))
+
+
+def split(tree):
+    """params-with-axes -> (values pytree, axes pytree)."""
+    values = jax.tree.map(lambda l: l.value, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=lambda x: isinstance(x, Leaf))
+    return values, axes
+
+
+def cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def groupnorm_heads(x, scale, bias, eps: float = 1e-5):
+    """GroupNorm over (..., H, hd) per head (RWKV output norm)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": mk(k1, (d_model, d_ff), ("embed", "ffn")),
+        "wo": mk(k3, (d_ff, d_model), ("ffn", "embed")),
+    }
+    if act in ("silu", "swiglu", "geglu"):
+        p["wg"] = mk(k2, (d_model, d_ff), ("embed", "ffn"))
+    return p
+
+
+def apply_mlp(p, x, act: str = "silu"):
+    h = x @ p["wi"].astype(x.dtype)
+    if "wg" in p:
+        g = x @ p["wg"].astype(x.dtype)
+        gate = jax.nn.silu(g) if act != "geglu" else jax.nn.gelu(g)
+        h = h * gate
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embeddings(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": mk(k1, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)}
+    if not cfg.tied_embeddings:
+        p["unembed"] = mk(k2, (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p, tokens, compute_dtype):
+    return p["tok"].astype(compute_dtype)[tokens]
+
+
+def unembed(p, x, tied: bool):
+    w = p["tok"].T if tied else p["unembed"]
+    return x @ w.astype(x.dtype)

@@ -1,0 +1,138 @@
+"""Unified model API: build once from a ModelConfig, use everywhere.
+
+    model = build_model(cfg)
+    params      = model.init(key)                        # Leaf pytree
+    values, axes = layers.split(params)
+    loss, aux   = model.loss(values, batch)
+    logits, cache = model.prefill(values, ...)
+    logits, cache = model.decode(values, cache, tokens, cur_index)
+
+``batch`` dict keys (ShapeDtypeStruct stand-ins in the dry-run):
+  decoder:  tokens (B, S) int32, loss_mask (B, S) f32
+            [+ extra_embeds (B, F, d) for vlm frontends]
+  encdec:   frames (B, S_src, d) f32, tokens (B, S_tgt) int32, loss_mask
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, transformer
+from .layers import split
+
+
+def cross_entropy(logits, targets, mask, *, z_loss: float = 0.0):
+    """Mean CE over masked positions; fp32 logsumexp; optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    if z_loss:
+        loss = loss + z_loss * ((lse * mask) ** 2).sum() / denom
+    return loss
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key):
+        if self.cfg.family == "encdec":
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    def init_split(self, key):
+        return split(self.init(key))
+
+    def abstract_params(self, key=None):
+        """(ShapeDtypeStruct values, axes) without allocating anything."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        shapes = jax.eval_shape(self.init, key)
+        values, axes = split(shapes)
+        dt = jnp.dtype(self.cfg.param_dtype)
+        values = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            values,
+        )
+        return values, axes
+
+    # -- training ------------------------------------------------------------
+    def loss(self, values, batch):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, aux = encdec.forward(values, cfg, batch["frames"], batch["tokens"])
+            tgt, mask = batch["tokens"], batch["loss_mask"]
+            logits, tgt, mask = logits[:, :-1], tgt[:, 1:], mask[:, 1:]
+        else:
+            logits, aux = transformer.forward(
+                values, cfg, batch["tokens"],
+                extra_embeds=batch.get("extra_embeds"),
+            )
+            F = cfg.frontend_len if batch.get("extra_embeds") is not None else 0
+            logits = logits[:, F:, :]
+            tgt, mask = batch["tokens"], batch["loss_mask"]
+            logits, tgt, mask = logits[:, :-1], tgt[:, 1:], mask[:, 1:]
+        return cross_entropy(logits, tgt, mask, z_loss=cfg.z_loss) + aux
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, values, batch, *, s_alloc: int, cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.prefill(
+                values, cfg, batch["frames"], batch["tokens"],
+                s_alloc=s_alloc, cache_dtype=cache_dtype,
+            )
+        return transformer.prefill(
+            values, cfg, batch["tokens"], s_alloc=s_alloc,
+            cache_dtype=cache_dtype, extra_embeds=batch.get("extra_embeds"),
+        )
+
+    def init_cache(self, batch_size: int, s_alloc: int, *, s_cross: int = 0,
+                   cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.init_cache(cfg, batch_size, s_alloc, s_cross, cache_dtype)
+        return transformer.init_cache(cfg, batch_size, s_alloc, cache_dtype)
+
+    def decode(self, values, cache, tokens, cur_index, *, axis_name=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.decode_step(values, cfg, cache, tokens, cur_index,
+                                      axis_name=axis_name)
+        return transformer.decode_step(values, cfg, cache, tokens, cur_index,
+                                       axis_name=axis_name)
+
+    # -- accounting ----------------------------------------------------------
+    def param_count(self) -> int:
+        import math
+
+        values, _ = self.abstract_params()
+        return sum(math.prod(v.shape) for v in jax.tree.leaves(values))
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared of routed layers)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.moe is None:
+            return total
+        m = cfg.moe
+        E, k = m.n_experts, m.top_k
+        d = cfg.d_model
+        per_expert = 3 * d * m.d_ff_expert
+        n_moe_layers = cfg.n_layers - m.first_dense_layers
+        routed_total = n_moe_layers * E * per_expert
+        routed_active = n_moe_layers * k * per_expert
+        return total - routed_total + routed_active
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

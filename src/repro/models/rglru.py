@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: two parallel input linears (d -> D); branch 1 -> GeLU gate; branch 2
+-> causal depthwise conv1d (width 4) -> RG-LRU; elementwise product ->
+output linear (D -> d).
+
+RG-LRU (real-gated linear recurrent unit):
+    r_t = sigmoid(BD_a(u_t));  i_t = sigmoid(BD_x(u_t))
+    a_t = exp(-c * softplus(lambda) * r_t),   c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Gate projections are block-diagonal with n_heads blocks (faithful to the
+RecurrentGemma reference).  Training/prefill use a parallel first-order
+linear-recurrence ``associative_scan`` (log S depth); decode is a single
+fused step.  State = (h: (B, D), conv tail: (B, conv_width-1, D)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+from .layers import Leaf, mk
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    D = cfg.lru_width or d
+    H = cfg.n_heads
+    bd = D // H
+    ks = jax.random.split(key, 8)
+    # lambda init so a ~ Uniform[0.9, 0.999] at r=1 (standard Griffin init)
+    u = jax.random.uniform(ks[0], (D,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+    return {
+        "w_gelu": mk(ks[1], (d, D), ("embed", "ffn")),
+        "w_rec": mk(ks[2], (d, D), ("embed", "ffn")),
+        "conv_w": mk(ks[3], (cfg.conv_width, D), (None, "ffn"), scale=0.1),
+        "conv_b": mk(ks[3], (D,), ("ffn",), init="zeros"),
+        "gate_a": mk(ks[4], (H, bd, bd), ("heads", None, None)),
+        "gate_a_b": mk(ks[4], (D,), ("ffn",), init="zeros"),
+        "gate_x": mk(ks[5], (H, bd, bd), ("heads", None, None)),
+        "gate_x_b": mk(ks[5], (D,), ("ffn",), init="zeros"),
+        "lam": Leaf(lam, ("ffn",)),
+        "w_out": mk(ks[6], (D, d), ("ffn", "embed")),
+    }
+
+
+def _block_diag(u, w, b, H: int):
+    """u: (..., D) through block-diagonal (H, D/H, D/H) + bias."""
+    shp = u.shape
+    uh = u.reshape(shp[:-1] + (H, shp[-1] // H))
+    out = jnp.einsum("...hi,hij->...hj", uh, w.astype(u.dtype))
+    return out.reshape(shp) + b.astype(u.dtype)
+
+
+def _conv1d_causal(x, w, b, tail=None):
+    """x: (B, S, D) depthwise causal conv; tail: (B, cw-1, D) decode state."""
+    cw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+cw-1, D)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw)
+    )
+    new_tail = xp[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(pad)
+    return out + b.astype(x.dtype), new_tail
+
+
+def _rglru_scan(u, p, cfg: ModelConfig, h0):
+    """u: (B, S, D); h0: (B, D) -> (y: (B, S, D), h_final)."""
+    H = cfg.n_heads
+    r = jax.nn.sigmoid(_block_diag(u, p["gate_a"], p["gate_a_b"], H).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, p["gate_x"], p["gate_x_b"], H).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,D) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+
+    # prepend the initial state as a pseudo-step: h = a*prev + b
+    a_ext = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    return h[:, 1:].astype(u.dtype), h[:, -1]
+
+
+def rglru_block(p, x, cfg: ModelConfig, *, state=None):
+    """x: (B, S, d).  state=None (train) or (h, conv_tail) for decode chains.
+
+    Returns (y, new_state).
+    """
+    gelu_branch = jax.nn.gelu(x @ p["w_gelu"].astype(x.dtype))
+    u = x @ p["w_rec"].astype(x.dtype)
+    if state is None:
+        h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+        conv_tail = None
+    else:
+        h0, conv_tail = state["h"], state["conv"]
+    u, new_tail = _conv1d_causal(u, p["conv_w"], p["conv_b"], conv_tail)
+    y, h_final = _rglru_scan(u, p, cfg, h0)
+    out = (gelu_branch * y) @ p["w_out"].astype(x.dtype)
+    return out, {"h": h_final, "conv": new_tail}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    D = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, D), dtype),
+    }

@@ -1,0 +1,138 @@
+"""RWKV6 "Finch" block: data-dependent decay time-mix + channel-mix.
+
+Time-mix (per head, state S in R^{hd x hd}):
+    y_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent per-channel decay  w_t = exp(-exp(dd(x_t)))  and
+data-dependent token-shift interpolation (the Finch ddlerp, low-rank).
+
+Training/prefill run the recurrence as a ``lax.scan`` over *time chunks*
+(sequential across chunks, batched matmuls within a chunk — exact, stable,
+and keeps the HLO small).  Decode is a single state update.  State =
+(S: (B, H, hd, hd), last token x for both mixes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+from .layers import groupnorm_heads, mk
+
+_TM_RANK = 32
+_TD_RANK = 64
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    maa = lambda k: mk(k, (d,), ("embed",), init="zeros")
+    return {
+        "maa_x": maa(ks[0]),
+        "maa_wkvrg": mk(ks[1], (5, d), (None, "embed"), init="zeros"),
+        "maa_w1": mk(ks[2], (d, 5 * _TM_RANK), ("embed", None), scale=0.01),
+        "maa_w2": mk(ks[3], (5, _TM_RANK, d), (None, None, "embed"), scale=0.01),
+        "decay": mk(ks[4], (d,), ("embed",), init="zeros"),
+        "decay_w1": mk(ks[5], (d, _TD_RANK), ("embed", None), scale=0.01),
+        "decay_w2": mk(ks[6], (_TD_RANK, d), (None, "embed"), scale=0.01),
+        "bonus": mk(ks[7], (H, hd), ("heads", "head_dim"), scale=0.1),
+        "wr": mk(ks[8], (d, d), ("embed", "ffn")),
+        "wk": mk(ks[9], (d, d), ("embed", "ffn")),
+        "wv": mk(ks[10], (d, d), ("embed", "ffn")),
+        "wg": mk(ks[11], (d, d), ("embed", "ffn")),
+        "wo": mk(ks[8], (d, d), ("ffn", "embed")),
+        "ln_x_scale": mk(ks[9], (H, hd), ("heads", "head_dim"), init="ones"),
+        "ln_x_bias": mk(ks[10], (H, hd), ("heads", "head_dim"), init="zeros"),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "maa_k": mk(ks[0], (d,), ("embed",), init="zeros"),
+        "maa_r": mk(ks[1], (d,), ("embed",), init="zeros"),
+        "wk": mk(ks[2], (d, ff), ("embed", "ffn")),
+        "wv": mk(ks[3], (ff, d), ("ffn", "embed")),
+        "wr": mk(ks[0], (d, d), ("embed", "ffn")),
+    }
+
+
+def _shifted(x, last):
+    """x_{t-1} along seq; first step uses `last` (decode chaining)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def time_mix(p, x, cfg: ModelConfig, state):
+    """x: (B, S, d); state {"S": (B,H,hd,hd) fp32, "x_tm": (B, d)}."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    dt = x.dtype
+
+    prev = _shifted(x, state["x_tm"].astype(dt))
+    sx = prev - x
+    xxx = x + sx * p["maa_x"].astype(dt)
+    dd = jnp.tanh(xxx @ p["maa_w1"].astype(dt)).reshape(B, S, 5, _TM_RANK)
+    dd = jnp.einsum("bsfr,frd->bsfd", dd, p["maa_w2"].astype(dt))
+    mix = p["maa_wkvrg"].astype(dt) + dd                      # (B,S,5,d)
+    xw, xk, xv, xr, xg = [x + sx * mix[:, :, i] for i in range(5)]
+
+    logw = -jnp.exp(
+        (p["decay"].astype(jnp.float32)
+         + (jnp.tanh(xw @ p["decay_w1"].astype(dt)) @ p["decay_w2"].astype(dt)).astype(jnp.float32))
+    )                                                         # (B,S,d) < 0
+    w = jnp.exp(logw)                                         # decay in (0,1)
+
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    wf = w.reshape(B, S, H, hd)
+    u = p["bonus"].astype(jnp.float32)
+
+    def step(Sst, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hd) each
+        r32, k32, v32, w32 = (a.astype(jnp.float32) for a in (r_t, k_t, v_t, w_t))
+        kv = jnp.einsum("bhi,bhj->bhij", k32, v32)
+        y = jnp.einsum("bhi,bhij->bhj", r32, Sst + u[None, :, :, None] * kv)
+        Sst = w32[..., None] * Sst + kv
+        return Sst, y
+
+    xs = (
+        r.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        wf.transpose(1, 0, 2, 3),
+    )
+    S_final, ys = lax.scan(step, state["S"], xs)              # ys: (S,B,H,hd)
+    y = ys.transpose(1, 0, 2, 3)
+    y = groupnorm_heads(y, p["ln_x_scale"], p["ln_x_bias"]).astype(dt)
+    out = (y.reshape(B, S, d) * g) @ p["wo"].astype(dt)
+    return out, {"S": S_final, "x_tm": x[:, -1].astype(jnp.float32)}
+
+
+def channel_mix(p, x, state):
+    dt = x.dtype
+    prev = _shifted(x, state["x_cm"].astype(dt))
+    sx = prev - x
+    xk = x + sx * p["maa_k"].astype(dt)
+    xr = x + sx * p["maa_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt))
+    return out, {"x_cm": x[:, -1].astype(jnp.float32)}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    hd = cfg.rwkv_head_size
+    H = cfg.d_model // hd
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,495 @@
+"""Decoder-only LM assembly (covers dense / MoE / MLA / hybrid / rwkv / vlm).
+
+Layers are grouped into homogeneous *layer groups* (configs.base
+``layer_groups``); each group's parameters are stacked on a leading "layers"
+axis and the group is executed as ONE ``lax.scan`` — HLO size and compile
+time are O(#groups), not O(depth), which is what keeps the 80-layer 76B and
+61-layer 671B dry-runs compilable.  ``remat`` wraps the scan body
+(none | dots | full).
+
+Three entry points: ``forward`` (teacher-forced logits), ``prefill``
+(forward + cache emission), ``decode_step`` (one token; caches may be
+sequence-sharded — attention returns partial softmax stats combined in
+``repro.dist.collectives``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_act, constrain_seq
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .layers import Leaf, apply_mlp, embed_tokens, init_embeddings, init_mlp, mk, rmsnorm, unembed
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _use_sharded_decode(alloc: int) -> bool:
+    """Flash-decoding shard_map path: on when a model axis exists and the
+    cache's sequence dim divides it (EXPERIMENTS.md §Perf, decode cells)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    try:
+        return (mesh is not None and not mesh.empty and "model" in mesh.shape
+                and mesh.shape["model"] > 1 and alloc % mesh.shape["model"] == 0)
+    except Exception:
+        return False
+
+
+def _constrain_stream(x, cfg: ModelConfig):
+    """Residual-stream layout between blocks: batch over (pod,data); with
+    seq_parallel also seq over model (Megatron-SP: XLA then lowers the TP
+    output all-reduce as reduce-scatter + all-gather at next use)."""
+    if cfg.seq_parallel and x.ndim >= 3:
+        return constrain_seq(x)
+    return constrain_act(x, profile=cfg.sharding_profile)
+
+def _init_block(key, cfg: ModelConfig, block_type: str):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": mk(ks[0], (cfg.d_model,), ("embed",), init="zeros")}
+    if block_type in ("dense_attn", "moe_attn", "attn"):
+        p["ln2"] = mk(ks[0], (cfg.d_model,), ("embed",), init="zeros")
+        if cfg.attention == "mla":
+            p["attn"] = attn.init_mla(ks[1], cfg)
+        else:
+            p["attn"] = attn.init_attention(ks[1], cfg)
+        if block_type == "moe_attn":
+            p["moe"] = moe_mod.init_moe(ks[2], cfg)
+        else:
+            d_ff = cfg.d_ff
+            if cfg.moe is not None and cfg.moe.first_dense_layers:
+                d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, d_ff, cfg.act)
+    elif block_type == "rec":
+        p["ln2"] = mk(ks[0], (cfg.d_model,), ("embed",), init="zeros")
+        p["rec"] = rglru_mod.init_rglru_block(ks[1], cfg)
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act)
+    elif block_type == "rwkv":
+        p["ln2"] = mk(ks[0], (cfg.d_model,), ("embed",), init="zeros")
+        p["tm"] = rwkv_mod.init_rwkv_time_mix(ks[1], cfg)
+        p["cm"] = rwkv_mod.init_rwkv_channel_mix(ks[2], cfg)
+    else:
+        raise ValueError(block_type)
+    return p
+
+
+def _apply_block_seq(p, x, cfg: ModelConfig, block_type: str, positions, state):
+    """Full-sequence application.  state=None (train) or per-block cache dict
+    being *written* (prefill).  Returns (x, new_state, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_state = state
+    if block_type in ("dense_attn", "moe_attn", "attn"):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            a = attn.attend_mla(p["attn"], h, cfg, positions)
+            if state is not None:
+                qn, qr, ckv, krope = attn._mla_qkv(p["attn"], h, cfg, positions)
+                new_state = _write_cache_mla(state, ckv, krope[:, :, 0, :], positions)
+        else:
+            mode = "local" if (cfg.attention == "local" or block_type == "attn" and cfg.window) else "causal"
+            q, k, v = attn._project_qkv(p["attn"], h, cfg, positions)
+            a = attn.flash_attention(
+                q, k, v, q_positions=positions, k_positions=positions,
+                mask_mode=mode, window=cfg.window,
+                q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+            )
+            a = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"].astype(x.dtype))
+            if state is not None:
+                new_state = _write_cache_kv(state, k, v, positions, cfg)
+        a = checkpoint_name(a, "attn_out")
+        x = _constrain_stream(x + a, cfg)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if block_type == "moe_attn":
+            if moe_mod.moe_sharding_available(cfg):
+                f, aux = moe_mod.apply_moe_sharded(p["moe"], h, cfg)
+            else:
+                f, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        else:
+            f = apply_mlp(p["mlp"], h, cfg.act)
+        f = checkpoint_name(f, "ffn_out")
+        x = _constrain_stream(x + f, cfg)
+    elif block_type == "rec":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        r, rstate = rglru_mod.rglru_block(
+            p["rec"], h, cfg, state=None if state is None else state
+        )
+        if state is not None:
+            new_state = rstate
+        x = x + checkpoint_name(r, "attn_out")
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = _constrain_stream(
+            x + checkpoint_name(apply_mlp(p["mlp"], h, cfg.act), "ffn_out"), cfg)
+    elif block_type == "rwkv":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        st = state if state is not None else rwkv_mod.init_rwkv_state(cfg, x.shape[0])
+        t, tstate = rwkv_mod.time_mix(p["tm"], h, cfg, st)
+        x = x + t
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        c, cstate = rwkv_mod.channel_mix(p["cm"], h, st)
+        x = constrain_act(x + c)
+        if state is not None:
+            new_state = {**tstate, **cstate}
+    else:
+        raise ValueError(block_type)
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _init_cache_block(cfg: ModelConfig, block_type: str, batch: int,
+                      s_alloc: int, dtype):
+    if block_type in ("dense_attn", "moe_attn", "attn"):
+        alloc = min(s_alloc, cfg.window + 128) if (
+            cfg.attention == "local" or (block_type == "attn" and cfg.window)
+        ) else s_alloc
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return {
+                "ckv": jnp.zeros((batch, alloc, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, alloc, m.qk_rope_head_dim), dtype),
+                "pos": jnp.full((alloc,), -1, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.hd()), dtype),
+            "v": jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.hd()), dtype),
+            "pos": jnp.full((alloc,), -1, jnp.int32),
+        }
+    if block_type == "rec":
+        return rglru_mod.init_rglru_state(cfg, batch, dtype)
+    if block_type == "rwkv":
+        return rwkv_mod.init_rwkv_state(cfg, batch)
+    raise ValueError(block_type)
+
+
+def _write_cache_kv(cache, k, v, positions, cfg: ModelConfig):
+    """Prefill write: ring-buffered for local attention, linear otherwise."""
+    alloc = cache["k"].shape[1]
+    S = k.shape[1]
+    if S >= alloc:  # keep last `alloc` entries, ring-aligned: slot = pos % alloc
+        sel = slice(S - alloc, S)
+        shift = S % alloc
+        return {
+            "k": jnp.roll(k[:, sel].astype(cache["k"].dtype), shift, axis=1),
+            "v": jnp.roll(v[:, sel].astype(cache["v"].dtype), shift, axis=1),
+            "pos": jnp.roll(positions[sel].astype(jnp.int32), shift, axis=0),
+        }
+    return {
+        "k": lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        "pos": lax.dynamic_update_slice(
+            cache["pos"], positions.astype(jnp.int32), (0,)
+        ),
+    }
+
+
+def _write_cache_mla(cache, ckv, krope, positions):
+    alloc = cache["ckv"].shape[1]
+    S = ckv.shape[1]
+    if S >= alloc:
+        sel = slice(S - alloc, S)
+        shift = S % alloc
+        return {
+            "ckv": jnp.roll(ckv[:, sel].astype(cache["ckv"].dtype), shift, axis=1),
+            "krope": jnp.roll(krope[:, sel].astype(cache["krope"].dtype), shift, axis=1),
+            "pos": jnp.roll(positions[sel].astype(jnp.int32), shift, axis=0),
+        }
+    return {
+        "ckv": lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        "krope": lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
+        "pos": lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32), (0,)),
+    }
+
+
+def _apply_block_decode(p, x, cfg: ModelConfig, block_type: str, cache,
+                        cur_index, axis_name):
+    """One-token application.  x: (B, 1, d).  Returns (x, new_cache)."""
+    B = x.shape[0]
+    pos1 = jnp.full((1,), cur_index, jnp.int32)
+    if block_type in ("dense_attn", "moe_attn", "attn"):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        local = cfg.attention == "local" or (block_type == "attn" and cfg.window)
+        if cfg.attention == "mla":
+            qn, qr, ckv, krope = attn._mla_qkv(p["attn"], h, cfg, pos1)
+            alloc = cache["ckv"].shape[1]
+            wslot = cur_index % alloc if local else cur_index
+            cache = {
+                "ckv": lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, wslot, 0)),
+                "krope": lax.dynamic_update_slice(cache["krope"], krope[:, :, 0].astype(cache["krope"].dtype), (0, wslot, 0)),
+                "pos": lax.dynamic_update_slice(cache["pos"], pos1, (wslot,)),
+            }
+            m = cfg.mla
+            part = attn.decode_attention_mla(
+                qn[:, 0], qr[:, 0], cache["ckv"].astype(jnp.float32),
+                cache["krope"].astype(jnp.float32), cache["pos"],
+                p["attn"]["wkv_b"], nope_dim=m.qk_nope_head_dim,
+                scale=(m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5,
+            )
+            o = attn.combine_partials(part, axis_name)
+            a = jnp.einsum("bhv,hvd->bd", o.astype(x.dtype), p["attn"]["wo"].astype(x.dtype))
+        else:
+            q, k, v = attn._project_qkv(p["attn"], h, cfg, pos1)
+            alloc = cache["k"].shape[1]
+            wslot = cur_index % alloc if local else cur_index
+            cache = {
+                "k": lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, wslot, 0, 0)),
+                "v": lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, wslot, 0, 0)),
+                "pos": lax.dynamic_update_slice(cache["pos"], pos1, (wslot,)),
+            }
+            o = None
+            if axis_name is None and _use_sharded_decode(alloc):
+                from repro.dist import collectives as coll
+
+                o = coll.sharded_decode_attention_gqa(
+                    q[:, 0], cache["k"], cache["v"], cache["pos"],
+                    window=cfg.window if local else 0, q_position=cur_index,
+                ).astype(jnp.float32)
+            if o is None:
+                part = attn.decode_attention_gqa(
+                    q[:, 0], cache["k"], cache["v"], cache["pos"],
+                    window=cfg.window if local else 0, q_position=cur_index,
+                )
+                o = attn.combine_partials(part, axis_name)
+            a = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["attn"]["wo"].astype(x.dtype))
+        x = x + a[:, None]
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if block_type == "moe_attn":
+            f, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+        else:
+            f = apply_mlp(p["mlp"], h, cfg.act)
+        x = x + f
+    elif block_type == "rec":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        r, cache = rglru_mod.rglru_block(p["rec"], h, cfg, state=cache)
+        x = x + r
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+    elif block_type == "rwkv":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        t, tstate = rwkv_mod.time_mix(p["tm"], h, cfg, cache)
+        x = x + t
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        c, cstate = rwkv_mod.channel_mix(p["cm"], h, cache)
+        x = x + c
+        cache = {**tstate, **cstate}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# group machinery (stacking, scanning)
+# ---------------------------------------------------------------------------
+
+def _group_block_types(group_type: str) -> list[str]:
+    if group_type.startswith("pattern:"):
+        return group_type.split(":", 1)[1].split(",")
+    return [group_type]
+
+
+def _init_group(key, cfg: ModelConfig, group_type: str, n: int):
+    subs = _group_block_types(group_type)
+
+    def init_one(k):
+        kk = jax.random.split(k, len(subs))
+        return {f"sub{i}": _init_block(kk[i], cfg, bt) for i, bt in enumerate(subs)}
+
+    stacked = jax.vmap(init_one)(jax.random.split(key, n))
+    # vmap does not know axes metadata grew a leading layer axis; rebuild.
+    return jax.tree.map(
+        lambda l: Leaf(l.value, ("layers",) + l.axes),
+        stacked,
+        is_leaf=lambda x: isinstance(x, Leaf),
+    )
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "save_block_io":
+        # save the TP-psummed block outputs (attn out / ffn out): the
+        # backward pass then never re-executes the forward all-reduces.
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_group_seq(params_g, x, cfg: ModelConfig, group_type: str, positions,
+                    caches=None):
+    """Run one layer group over a full sequence.  caches: stacked pytree or
+    None.  Returns (x, new_caches, aux_sum).
+
+    ``cfg.scan_layers=False`` unrolls the group as a python loop — identical
+    math, linear HLO; the dry-run uses this so ``cost_analysis`` counts every
+    layer (XLA prices a while body once regardless of trip count).
+    """
+    subs = _group_block_types(group_type)
+
+    def body(carry, layer_in):
+        xc, aux = carry
+        if caches is None:
+            p_l = layer_in
+            st_l = None
+        else:
+            p_l, st_l = layer_in
+        new_states = {}
+        for i, bt in enumerate(subs):
+            st = None if st_l is None else st_l[f"sub{i}"]
+            xc, ns, a = _apply_block_seq(p_l[f"sub{i}"], xc, cfg, bt, positions, st)
+            aux = aux + a
+            if st_l is not None:
+                new_states[f"sub{i}"] = ns
+        return (xc, aux), (new_states if caches is not None else 0)
+
+    body = _remat(body, cfg)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        xs = params_g if caches is None else (params_g, caches)
+        (x, aux), ys = lax.scan(body, carry, xs)
+        return x, (ys if caches is not None else None), aux
+    n = jax.tree.leaves(params_g)[0].shape[0]
+    outs = []
+    for li in range(n):
+        p_l = jax.tree.map(lambda v: v[li], params_g)
+        layer_in = p_l if caches is None else (
+            p_l, jax.tree.map(lambda v: v[li], caches)
+        )
+        carry, y = body(carry, layer_in)
+        outs.append(y)
+    x, aux = carry
+    if caches is None:
+        return x, None, aux
+    stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *outs)
+    return x, stacked, aux
+
+
+def _scan_group_decode(params_g, x, cfg: ModelConfig, group_type: str, caches,
+                       cur_index, axis_name):
+    subs = _group_block_types(group_type)
+
+    def body(xc, layer_in):
+        p_l, st_l = layer_in
+        new_states = {}
+        for i, bt in enumerate(subs):
+            xc, ns = _apply_block_decode(
+                p_l[f"sub{i}"], xc, cfg, bt, st_l[f"sub{i}"], cur_index, axis_name
+            )
+            new_states[f"sub{i}"] = ns
+        return xc, new_states
+
+    if cfg.scan_layers:
+        x, new_caches = lax.scan(body, x, (params_g, caches))
+        return x, new_caches
+    n = jax.tree.leaves(params_g)[0].shape[0]
+    outs = []
+    for li in range(n):
+        x, y = body(
+            x,
+            (jax.tree.map(lambda v: v[li], params_g),
+             jax.tree.map(lambda v: v[li], caches)),
+        )
+        outs.append(y)
+    return x, jax.tree.map(lambda *vs: jnp.stack(vs), *outs)
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2 + len(cfg.layer_groups()))
+    p = {
+        "embed": init_embeddings(ks[0], cfg),
+        "ln_f": mk(ks[1], (cfg.d_model,), ("embed",), init="zeros"),
+    }
+    for gi, (gt, n) in enumerate(cfg.layer_groups()):
+        p[f"group{gi}"] = _init_group(ks[2 + gi], cfg, gt, n)
+    return p
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, extra_embeds):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, dt)
+    if extra_embeds is not None:  # vlm/audio frontend stub: prepend embeds
+        x = jnp.concatenate([extra_embeds.astype(dt), x], axis=1)
+    return constrain_act(x, profile=cfg.sharding_profile)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None):
+    """Teacher-forced logits over the full sequence.  Returns (logits, aux)."""
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+    for gi, (gt, n) in enumerate(cfg.layer_groups()):
+        x, _, a = _scan_group_seq(params[f"group{gi}"], x, cfg, gt, positions)
+        aux = aux + a
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = constrain_act(unembed(params["embed"], x, cfg.tied_embeddings),
+                           vocab_dim=True, profile=cfg.sharding_profile)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_alloc: int, dtype=jnp.bfloat16):
+    caches = {}
+    for gi, (gt, n) in enumerate(cfg.layer_groups()):
+        subs = _group_block_types(gt)
+
+        def one(_):
+            return {
+                f"sub{i}": _init_cache_block(cfg, bt, batch, s_alloc, dtype)
+                for i, bt in enumerate(subs)
+            }
+
+        stacked = jax.vmap(one)(jnp.arange(n))
+        caches[f"group{gi}"] = stacked
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, s_alloc: int,
+            cache_dtype=jnp.bfloat16, extra_embeds=None):
+    """Forward over the prompt, emitting caches.  Returns (last_logits, cache)."""
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    caches = init_cache(cfg, x.shape[0], s_alloc, cache_dtype)
+    new_caches = {}
+    for gi, (gt, n) in enumerate(cfg.layer_groups()):
+        x, nc, _ = _scan_group_seq(
+            params[f"group{gi}"], x, cfg, gt, positions, caches=caches[f"group{gi}"]
+        )
+        new_caches[f"group{gi}"] = nc
+    x = rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tied_embeddings)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, cur_index,
+                *, axis_name: str | None = None):
+    """One decode step.  tokens: (B,) int32; cur_index: scalar int32.
+    Returns (logits (B, V), new_caches)."""
+    x = _embed_inputs(params, cfg, tokens[:, None], None)
+    new_caches = {}
+    for gi, (gt, n) in enumerate(cfg.layer_groups()):
+        x, nc = _scan_group_decode(
+            params[f"group{gi}"], x, cfg, gt, caches[f"group{gi}"], cur_index,
+            axis_name,
+        )
+        new_caches[f"group{gi}"] = nc
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tied_embeddings)
+    return logits[:, 0], new_caches

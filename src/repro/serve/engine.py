@@ -1,0 +1,98 @@
+"""Serving engine: jitted prefill / decode steps with sharded caches.
+
+``make_serve_fns(model, mesh, batch, seq)`` builds the two jitted step
+functions the dry-run lowers and the serve driver executes:
+
+  * ``prefill_fn(params, batch_inputs) -> (logits, cache)`` — cache comes out
+    already in the decode layout (batch over (pod,data), sequence over
+    model): the layout transpose is part of the compiled prefill step.
+  * ``decode_fn(params, cache, tokens, cur_index) -> (logits, cache)`` —
+    cache is donated, so steady-state decode allocates nothing.
+
+The driver (:mod:`repro.launch.serve`) wraps these in a batched greedy
+generation loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import cache_alloc_len
+from repro.dist import sharding as shd
+from repro.models.model import Model
+
+
+def cache_shape(model: Model, batch: int, s_alloc: int, *, s_cross: int = 0,
+                cache_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, s_alloc, s_cross=s_cross,
+                                 cache_dtype=cache_dtype)
+    )
+
+
+def make_serve_fns(model: Model, mesh: Mesh, *, batch: int, seq_len: int,
+                   cache_dtype=jnp.bfloat16, param_shardings=None,
+                   donate_cache: bool = True):
+    cfg = model.cfg
+    s_alloc = cache_alloc_len(seq_len)
+    s_cross = 4096 if cfg.family == "encdec" else 0
+
+    cache_sds = cache_shape(model, batch, s_alloc, s_cross=s_cross,
+                            cache_dtype=cache_dtype)
+    cache_sh = shd.cache_shardings(cache_sds, mesh, batch_size=batch)
+    tok_sh = NamedSharding(mesh, shd.batch_spec(mesh, 1, batch_size=batch))
+    scalar_sh = NamedSharding(mesh, P())
+
+    def prefill(params, inputs):
+        return model.prefill(params, inputs, s_alloc=s_alloc,
+                             cache_dtype=cache_dtype)
+
+    def decode(params, cache, tokens, cur_index):
+        return model.decode(params, cache, tokens, cur_index)
+
+    prefill_jit = None
+    if param_shardings is not None:
+        logits_sh = NamedSharding(mesh, shd.batch_spec(mesh, 2, batch_size=batch))
+        prefill_jit = jax.jit(
+            prefill,
+            in_shardings=(param_shardings, None),
+            out_shardings=(logits_sh, cache_sh),
+        )
+        decode_jit = jax.jit(
+            decode,
+            in_shardings=(param_shardings, cache_sh, tok_sh, scalar_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(1,) if donate_cache else (),
+        )
+    else:
+        decode_jit = jax.jit(decode, donate_argnums=(1,) if donate_cache else ())
+        prefill_jit = jax.jit(prefill)
+
+    return {
+        "prefill": prefill_jit,
+        "decode": decode_jit,
+        "cache_sds": cache_sds,
+        "cache_shardings": cache_sh,
+        "s_alloc": s_alloc,
+        "s_cross": s_cross,
+    }
+
+
+def greedy_generate(model: Model, fns, params, prompt_tokens, *, n_steps: int):
+    """Batched greedy decode loop (host-driven; example/serve driver)."""
+    B, S = prompt_tokens.shape
+    inputs = {"tokens": prompt_tokens}
+    logits, cache = fns["prefill"](params, inputs)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    cur = jnp.asarray(S, jnp.int32)
+    for _ in range(n_steps):
+        out.append(tok)
+        logits, cache = fns["decode"](params, cache, tok, cur)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cur = cur + 1
+    return jnp.stack(out, axis=1)

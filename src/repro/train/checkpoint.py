@@ -1,0 +1,145 @@
+"""Checkpoint save/restore with resharding and async writes.
+
+Layout: one directory per step —
+    <dir>/step_000123/
+        manifest.json          # tree structure, shapes, dtypes, step
+        arr_00000.npy ...      # one file per leaf (np.save, mmap-able)
+        DONE                   # atomic completion marker
+
+Fault-tolerance contract (launch.train):
+  * writes go to ``step_X.tmp`` then ``os.rename`` → crash-safe;
+  * ``latest_step`` only considers directories with a DONE marker;
+  * restore takes target *shardings*, so a checkpoint written on one mesh
+    loads onto any other (elastic restart = resume on a different mesh);
+  * ``AsyncCheckpointer`` snapshots to host (device_get) synchronously and
+    writes files on a background thread — the train loop never blocks on IO.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save(path: str, tree, *, step: int, extra: dict | None = None) -> str:
+    """Synchronous checkpoint write.  Returns the final directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    paths, leaves, treedef = _flatten_with_paths(tree)
+    host_leaves = jax.device_get(leaves)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "dtypes": [str(np.asarray(l).dtype) for l in host_leaves],
+        "shapes": [list(np.asarray(l).shape) for l in host_leaves],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(host_leaves):
+        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), np.asarray(leaf))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "DONE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    best = None
+    for name in os.listdir(path):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(path, name, "DONE")):
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore(path: str, step: int, like_tree, *, shardings=None):
+    """Load a checkpoint into the structure of ``like_tree``.
+
+    ``shardings``: optional pytree of NamedSharding (same structure) — leaves
+    are device_put with the target sharding, so any mesh can load any
+    checkpoint (resharding restore).
+    """
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, _, treedef = _flatten_with_paths(like_tree)
+    if paths != manifest["paths"]:
+        raise ValueError(
+            "checkpoint tree mismatch: "
+            f"{set(paths) ^ set(manifest['paths'])}"
+        )
+    arrays = [
+        np.load(os.path.join(d, f"arr_{i:05d}.npy")) for i in range(len(paths))
+    ]
+    if shardings is not None:
+        sh_flat = jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_flat)]
+    return jax.tree.unflatten(treedef, arrays), manifest
+
+
+class AsyncCheckpointer:
+    """Snapshot on-thread, write off-thread; at most one write in flight."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.error: BaseException | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.error is not None:
+            err, self.error = self.error, None
+            raise err
+
+    def save(self, tree, *, step: int, extra: dict | None = None) -> None:
+        self.wait()
+        paths, leaves, treedef = _flatten_with_paths(tree)
+        host_leaves = jax.device_get(leaves)  # snapshot before returning
+        snapshot = jax.tree.unflatten(treedef, host_leaves)
+
+        def work():
+            try:
+                save(self.path, snapshot, step=step, extra=extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for name in os.listdir(self.path)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+            and os.path.exists(os.path.join(self.path, name, "DONE"))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"), ignore_errors=True)

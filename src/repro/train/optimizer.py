@@ -1,0 +1,160 @@
+"""Sharded optimizers: AdamW (ZeRO — states sharded like params) and
+adafactor-lite (factored second moment, for memory-tight giant configs).
+
+Pure pytree-in/pytree-out; no optax dependency.  Moment dtype is a config
+knob (``opt_dtype``): fp32 everywhere except the 671B-class single-pod fit
+(DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    opt_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 1 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    p_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"m": m_new, "v": v_new, "step": step}, lr
+
+
+# ---------------------------------------------------------------------------
+# adafactor-lite (factored v for matrices; fallback to full for vectors)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.opt_dtype)
+
+    def one(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"f": jax.tree.map(one, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * s["vr"].astype(jnp.float32) + (1 - decay) * g2.mean(-1)
+            vc = decay * s["vc"].astype(jnp.float32) + (1 - decay) * g2.mean(-2)
+            denom = (
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30)
+            )
+            delta = g32 / jnp.sqrt(denom + 1e-30)
+            new_s = {"vr": vr.astype(s["vr"].dtype), "vc": vc.astype(s["vc"].dtype)}
+        else:
+            v = decay * s["v"].astype(jnp.float32) + (1 - decay) * g2
+            delta = g32 / jnp.sqrt(v + 1e-30)
+            new_s = {"v": v.astype(s["v"].dtype)}
+        # update clipping (RMS <= 1) as in the original
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 1 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["f"])
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    p_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    f_new = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return p_new, {"f": f_new, "step": step}, lr
+
+
+def init(params, cfg: OptConfig):
+    if cfg.kind == "adafactor":
+        return adafactor_init(params, cfg)
+    return adamw_init(params, cfg)
+
+
+def update(params, grads, state, cfg: OptConfig):
+    if cfg.kind == "adafactor":
+        return adafactor_update(params, grads, state, cfg)
+    return adamw_update(params, grads, state, cfg)

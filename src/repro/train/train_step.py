@@ -1,0 +1,122 @@
+"""Training step: microbatched grad accumulation, clipping, optimizer update.
+
+``make_train_step(model, opt_cfg)`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with donated params/opt_state.  Microbatching
+reshapes the global batch to (n_micro, B/n_micro, ...) and accumulates
+grads with ``lax.scan`` — activation memory scales with the microbatch while
+grad memory stays one param-sized pytree (sharded).
+
+Optional int8 gradient compression with error feedback (``compress=True``)
+runs the accumulated grads through a quantize/dequantize pair whose residual
+is carried in the optimizer state — the shard_map all-reduce variant lives
+in ``repro.dist.collectives`` (pod-axis compression; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.model import Model
+
+from . import optimizer as opt_mod
+from .optimizer import OptConfig
+
+
+def _split_batch(batch: dict, n_micro: int):
+    def r(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    return {k: r(v) for k, v in batch.items()}
+
+
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, *, n_micro: int = 1,
+                    compress: bool = False, grad_specs=None) -> Callable:
+    """grad_specs: optional PartitionSpec pytree (matching params) — grads
+    are sharding-constrained to it before the update, which lets XLA lower
+    the gradient reduction as reduce-scatter instead of all-reduce (ZeRO)."""
+    cfg = model.cfg
+
+    def loss_fn(params, micro):
+        return model.loss(params, micro)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _split_batch(batch, n_micro)
+
+            def acc(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = lax.scan(acc, (jnp.zeros(()), g0), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        if grad_specs is not None:
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(g, sp),
+                grads, grad_specs,
+                is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+            )
+
+        if compress:
+            # error-feedback int8: residual lives in opt_state["ef"]
+            ef = opt_state.get("ef")
+            if ef is None:
+                ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+            g_plus = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+            gq = jax.tree.map(quantize_int8, g_plus)
+            deq = jax.tree.map(
+                lambda t: dequantize_int8(*t), gq,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            new_ef = jax.tree.map(lambda gp, d: gp - d, g_plus, deq)
+            grads = deq
+            opt_state = {**opt_state, "ef": new_ef}
+
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        inner = {k: v for k, v in opt_state.items() if k != "ef"}
+        params, inner, lr = opt_mod.update(params, grads, inner, opt_cfg)
+        if "ef" in opt_state:
+            inner["ef"] = opt_state["ef"]
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            "lr": lr,
+            "step": inner["step"],
+        }
+        return params, inner, metrics
+
+    return train_step
+
+
+def init_opt_state(model: Model, params, opt_cfg: OptConfig):
+    return opt_mod.init(params, opt_cfg)
+
+
+def opt_config_for(cfg) -> OptConfig:
+    return OptConfig(
+        learning_rate=cfg.learning_rate,
+        weight_decay=cfg.weight_decay,
+        grad_clip=cfg.grad_clip,
+        opt_dtype=cfg.opt_dtype,
+    )

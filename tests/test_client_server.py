@@ -1,0 +1,119 @@
+"""Engines agreement + partial loading + data skipping correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.client import Chunk, NumpyEngine, PythonEngine, encode_chunk
+from repro.core.predicates import Query
+from repro.core.server import (
+    CiaoStore, DataSkippingScanner, FullScanBaseline, PushdownPlan,
+)
+from repro.core.workload import generate_workload, estimate_selectivities
+from repro.data.datasets import generate_records, predicate_pool
+
+DATASETS = ("yelp", "winlog", "ycsb")
+
+
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_numpy_engine_matches_python_oracle(dataset):
+    recs = generate_records(dataset, 200, seed=11)
+    pool = predicate_pool(dataset)
+    rng = np.random.default_rng(3)
+    clauses = [pool[i] for i in rng.choice(len(pool), size=25, replace=False)]
+    chunk = encode_chunk(recs)
+    a = NumpyEngine().eval(chunk, clauses)
+    b = PythonEngine().eval(chunk, clauses)
+    assert np.array_equal(a, b)
+
+
+def test_chunk_roundtrip():
+    recs = generate_records("yelp", 50, seed=0)
+    chunk = encode_chunk(recs)
+    assert chunk.records() == recs
+    assert chunk.data.shape[1] % 128 == 0
+
+
+def _build_store(dataset, n=1500, budget_clauses=4, chunk_size=500, seed=2):
+    recs = generate_records(dataset, n, seed=seed)
+    pool = predicate_pool(dataset)
+    sel = estimate_selectivities(pool, recs[:300])
+    # choose mid-selectivity clauses so both loaded and unloaded rows exist
+    ranked = sorted(pool, key=lambda c: abs(sel[c] - 0.2))
+    plan = PushdownPlan(clauses=ranked[:budget_clauses])
+    store = CiaoStore(plan)
+    eng = NumpyEngine()
+    for i in range(0, n, chunk_size):
+        chunk = encode_chunk(recs[i : i + chunk_size])
+        store.ingest_chunk(chunk, eng.eval_packed(chunk, plan.clauses))
+    base = FullScanBaseline()
+    for i in range(0, n, chunk_size):
+        base.ingest_chunk(encode_chunk(recs[i : i + chunk_size]))
+    return store, base, plan, recs
+
+
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_partial_loading_partition(dataset):
+    """loaded ∪ raw == all records; loaded == records matching >=1 clause."""
+    store, base, plan, recs = _build_store(dataset)
+    n_loaded = sum(b.n_rows for b in store.blocks)
+    n_raw = sum(r.n for r in store.raw)
+    assert n_loaded + n_raw == len(recs)
+    expected_loaded = sum(
+        1 for r in recs if any(c.matches_raw(r) for c in plan.clauses)
+    )
+    assert n_loaded == expected_loaded
+    assert 0 < n_loaded < len(recs), "need a non-trivial split for this test"
+
+
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_query_counts_match_full_scan(dataset):
+    """Pushed-down and non-pushed queries both return exact counts."""
+    store, base, plan, recs = _build_store(dataset)
+    scanner = DataSkippingScanner(store)
+    # queries over pushed clauses (skipping path)
+    for c in plan.clauses[:2]:
+        q = Query((c,))
+        r1, r2 = scanner.scan(q), base.scan(q)
+        assert r1.count == r2.count
+        assert r1.used_skipping
+    # conjunctive query mixing two pushed clauses
+    q = Query(tuple(plan.clauses[:2]))
+    assert scanner.scan(q).count == base.scan(q).count
+    # query with NO pushed clause (must scan raw too)
+    pool = predicate_pool("ycsb" if dataset == "ycsb" else dataset)
+    other = [c for c in pool if c not in set(plan.clauses)][0]
+    q = Query((other,))
+    r1, r2 = scanner.scan(q), base.scan(q)
+    assert r1.count == r2.count
+    assert not r1.used_skipping
+    assert r1.raw_parsed > 0
+
+
+def test_skipping_actually_skips():
+    store, base, plan, recs = _build_store("ycsb")
+    scanner = DataSkippingScanner(store)
+    q = Query((plan.clauses[0],))
+    r = scanner.scan(q)
+    assert r.rows_skipped > 0
+
+
+def test_store_save_load_roundtrip(tmp_path):
+    store, base, plan, recs = _build_store("winlog", n=600)
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    from repro.core.server import CiaoStore
+
+    loaded = CiaoStore.load(path, plan)
+    s1 = DataSkippingScanner(store)
+    s2 = DataSkippingScanner(loaded)
+    q = Query((plan.clauses[0],))
+    assert s1.scan(q).count == s2.scan(q).count
+
+
+def test_zero_budget_plan_loads_everything():
+    recs = generate_records("yelp", 300, seed=5)
+    plan = PushdownPlan(clauses=[])
+    store = CiaoStore(plan)
+    chunk = encode_chunk(recs)
+    store.ingest_chunk(chunk, np.zeros((0, 0), np.uint32))
+    assert store.stats.loading_ratio == 1.0

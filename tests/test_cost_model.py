@@ -1,0 +1,59 @@
+"""Cost model: exact-fit recovery, calibration R², clause pricing."""
+import numpy as np
+
+from repro.core.cost_model import CostModel, calibrate, fit
+from repro.core.predicates import clause, exact, key_value, substring
+from repro.data.datasets import generate_records
+
+
+def test_fit_recovers_exact_coefficients():
+    # record lengths must vary or {sel*lt, (1-sel)*lt, 1} are collinear and
+    # k2/k4/c are unidentifiable (the paper calibrates across datasets of
+    # different record lengths for the same reason)
+    true = CostModel(k1=0.004, k2=0.0015, k3=0.002, k4=0.001, c=0.05)
+    rng = np.random.default_rng(0)
+    sels = rng.uniform(0, 1, 50)
+    plens = rng.integers(2, 30, 50)
+    rlens = rng.uniform(80, 500, 50)
+    times = [
+        true.sel_len_cost(float(s), int(p), float(lt))
+        for s, p, lt in zip(sels, plens, rlens)
+    ]
+    res = fit(sels, plens, rlens, times)
+    assert res.r_squared > 0.999
+    np.testing.assert_allclose(res.model.coefficients(), true.coefficients(),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_calibration_on_real_engine():
+    """Paper §VII-F: R² of the timed fit (local target: > 0.5)."""
+    records = generate_records("ycsb", 400, seed=1)
+    probes = (
+        [exact("phone_country", c) for c in ("US", "CN", "IN")]
+        + [substring("url_site", s) for s in ("www.alpha.", "www.beta.", "x")]
+        + [key_value("linear_score", v) for v in (1, 7, 55, 99)]
+        + [substring("email", "@"), substring("name", "zzz")]
+    )
+    res = calibrate(records, probes, repeats=3)
+    assert res.n_probes == len(probes)
+    # timing noise on shared CI hardware: this is a sanity floor, the paper
+    # reports 0.67-0.98 across platforms
+    assert res.r_squared > 0.3, res.r_squared
+    assert res.model.pattern_cost(10, 0.5) > 0
+
+
+def test_clause_cost_is_sum_of_disjuncts():
+    m = CostModel()
+    c1 = clause(exact("a", "x"))
+    c2 = clause(exact("a", "x"), exact("a", "y"))
+    assert m.clause_cost(c2, 0.3) > m.clause_cost(c1, 0.3)
+    np.testing.assert_allclose(
+        m.clause_cost(c2, 0.3),
+        m.simple_cost(exact("a", "x"), 0.3) + m.simple_cost(exact("a", "y"), 0.3),
+    )
+
+
+def test_key_value_priced_two_patterns():
+    m = CostModel()
+    kv = key_value("age", 10)
+    assert m.simple_cost(kv, 0.2) > m.simple_cost(exact("age", "x"), 0.2) * 0.9

@@ -1,0 +1,153 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs (assignment requirement), plus decode consistency."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, make_batch
+from repro.configs.base import SHAPES, ShapeConfig, shape_applicable
+from repro.models.layers import split
+from repro.models.model import build_model
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 64, 2)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            model = build_model(cfg)
+            values, axes = split(model.init(jax.random.PRNGKey(0)))
+            cache[arch] = (cfg, model, values)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_loss_finite(arch, built):
+    cfg, model, values = built(arch)
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    loss = jax.jit(model.loss)(values, batch)
+    assert np.isfinite(float(loss))
+    # random-init CE should be near ln(V)
+    assert abs(float(loss) - math.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_reduces_loss(arch, built):
+    from repro.train.train_step import make_train_step
+    from repro.train.optimizer import OptConfig
+
+    cfg, model, values = built(arch)
+    opt_cfg = OptConfig(learning_rate=5e-3, warmup_steps=1, weight_decay=0.0)
+    from repro.train import optimizer as opt_mod
+
+    opt_state = opt_mod.init(values, opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg, n_micro=1))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    params = values
+    losses = []
+    for _ in range(8):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses  # memorizing one batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_forward(arch, built):
+    cfg, model, values = built(arch)
+    if cfg.moe is not None:  # avoid capacity-drop divergence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+        model = build_model(cfg)
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    if cfg.family == "encdec":
+        frames = rng.normal(size=(B, 8, cfg.d_model)).astype(np.float32)
+        from repro.models import encdec
+
+        full, _ = jax.jit(
+            lambda v, f, t: encdec.forward(v, cfg, f, t))(values, frames, toks)
+        _, cache = model.prefill(
+            values, {"frames": frames, "tokens": toks[:, : S - 1]},
+            s_alloc=32, cache_dtype=jnp.float32)
+    else:
+        from repro.models import transformer
+
+        full, _ = jax.jit(
+            lambda v, t: transformer.forward(v, cfg, t))(values, toks)
+        _, cache = model.prefill(
+            values, {"tokens": toks[:, : S - 1]}, s_alloc=32,
+            cache_dtype=jnp.float32)
+    dec, _ = model.decode(values, cache, toks[:, S - 1], jnp.int32(S - 1))
+    err = np.abs(np.asarray(full[:, S - 1], np.float32) -
+                 np.asarray(dec, np.float32)).max()
+    assert err < 0.06, err
+
+
+def test_long_500k_skips_documented():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        ok, why = shape_applicable(cfg, SHAPES["long_500k"])
+        if arch in ("recurrentgemma-9b", "rwkv6-3b"):
+            assert ok
+        else:
+            assert not ok and "full-attention" in why
+
+
+def test_param_counts_match_published():
+    expected = {
+        "deepseek-7b": 6.9e9,
+        "qwen3-1.7b": 1.7e9,
+        "qwen3-8b": 8.2e9,
+        "deepseek-v3-671b": 671e9,
+        "llama4-scout-17b-a16e": 108e9,
+        "rwkv6-3b": 3.1e9,
+    }
+    for arch, n in expected.items():
+        model = build_model(get_config(arch))
+        assert abs(model.param_count() - n) / n < 0.06, arch
+    # active params
+    assert abs(build_model(get_config("llama4-scout-17b-a16e")).active_param_count() - 17.2e9) < 1e9
+    assert abs(build_model(get_config("deepseek-v3-671b")).active_param_count() - 37.5e9) < 2e9
+
+
+def test_local_attention_window_respected(built):
+    """recurrentgemma local attention must not see beyond the window."""
+    cfg, model, values = built("recurrentgemma-9b")
+    B, S = 1, 40
+    rng = np.random.default_rng(1)
+    t1 = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, 0] = (t2[0, 0] + 1) % cfg.vocab_size  # perturb far-past token
+    from repro.models import transformer
+
+    f = jax.jit(lambda v, t: transformer.forward(v, cfg, t)[0])
+    l1, l2 = f(values, t1), f(values, t2)
+    # reduced window is 32; positions beyond window+shift unaffected by
+    # attention — but RG-LRU recurrence can carry information, so only check
+    # the attention-specific case via pure-attn arch instead:
+    cfg_q = get_config("qwen3-1.7b").reduced()
+    cfg_q = dataclasses.replace(cfg_q, attention="local", window=8)
+    mq = build_model(cfg_q)
+    vq, _ = split(mq.init(jax.random.PRNGKey(0)))
+    fq = jax.jit(lambda v, t: __import__("repro.models.transformer", fromlist=["forward"]).forward(v, cfg_q, t)[0])
+    lq1, lq2 = fq(vq, t1), fq(vq, t2)
+    # last position is > window away from position 0
+    np.testing.assert_allclose(
+        np.asarray(lq1[0, -1], np.float32), np.asarray(lq2[0, -1], np.float32),
+        atol=1e-5)
+    # but a nearby position IS affected
+    assert not np.allclose(
+        np.asarray(lq1[0, 1], np.float32), np.asarray(lq2[0, 1], np.float32),
+        atol=1e-5)

@@ -1,0 +1,117 @@
+"""Data pipeline: work stealing, recipe batching, prefetch, tokenizer."""
+import numpy as np
+import pytest
+
+from repro.core.client import NumpyEngine
+from repro.core.planner import build_plan
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore
+from repro.core.workload import generate_workload
+from repro.data.datasets import generate_records, predicate_pool
+from repro.data.pipeline import (
+    ClientShard, IngestCoordinator, Prefetcher, RecipeBatcher,
+)
+from repro.data.tokenizer import PAD_ID, ByteTokenizer
+
+
+def _plan(dataset="ycsb", budget=1.5, seed=0):
+    pool = predicate_pool(dataset)
+    rng = np.random.default_rng(seed)
+    wl = generate_workload(pool, n_queries=20, distribution="zipf",
+                           zipf_a=1.5, rng=rng)
+    return build_plan(wl, generate_records(dataset, 300, seed=seed + 1),
+                      budget_us=budget)
+
+
+def test_work_stealing_improves_makespan():
+    rep = _plan()
+    eng = NumpyEngine()
+
+    def clients():
+        return [
+            ClientShard("ycsb", i, eng, rep.plan, chunk_records=64,
+                        speed=(0.2 if i == 0 else 1.0))
+            for i in range(4)
+        ]
+
+    c1 = IngestCoordinator(clients(), CiaoStore(rep.plan), steal=True)
+    c1.run(chunks_per_client=3)
+    c2 = IngestCoordinator(clients(), CiaoStore(rep.plan), steal=False)
+    c2.run(chunks_per_client=3)
+    assert c1.makespan < c2.makespan * 0.5
+    assert c1.stolen > 0
+    # same amount of data either way
+    assert c1.store.stats.n_records == c2.store.stats.n_records
+
+
+def test_ingest_exactly_once():
+    rep = _plan()
+    eng = NumpyEngine()
+    store = CiaoStore(rep.plan)
+    clients = [ClientShard("ycsb", i, eng, rep.plan, chunk_records=32)
+               for i in range(3)]
+    coord = IngestCoordinator(clients, store)
+    coord.run(chunks_per_client=5)
+    assert store.stats.n_records == 3 * 5 * 32
+
+
+def test_recipe_batcher_shapes_and_vocab():
+    rep = _plan()
+    eng = NumpyEngine()
+    store = CiaoStore(rep.plan)
+    clients = [ClientShard("ycsb", i, eng, rep.plan, chunk_records=256)
+               for i in range(4)]
+    IngestCoordinator(clients, store).run(chunks_per_client=4)
+    recipe = Query((rep.plan.clauses[0],))
+    tok = ByteTokenizer(vocab_size=151936)
+    b = RecipeBatcher(store, tok, seq_len=64, batch_size=4)
+    it = iter(b.batches(recipe))
+    for _ in range(3):
+        tokens, mask = next(it)
+        assert tokens.shape == (4, 64)
+        assert tokens.dtype == np.int32
+        assert tokens.max() < 151936 and tokens.min() >= 0
+        assert mask.shape == (4, 64)
+
+
+def test_recipe_rows_actually_match():
+    rep = _plan()
+    eng = NumpyEngine()
+    store = CiaoStore(rep.plan)
+    clients = [ClientShard("ycsb", i, eng, rep.plan, chunk_records=256)
+               for i in range(2)]
+    IngestCoordinator(clients, store).run(chunks_per_client=2)
+    recipe = Query((rep.plan.clauses[0],))
+    b = RecipeBatcher(store, ByteTokenizer(vocab_size=1024), seq_len=32, batch_size=2)
+    import json
+
+    n = 0
+    for rec in b.matching_records(recipe):
+        assert recipe.matches_exact(json.loads(rec))
+        n += 1
+    assert n > 0
+
+
+def test_prefetcher_propagates_and_finishes():
+    it = Prefetcher(iter(range(5)), depth=2)
+    assert list(it) == [0, 1, 2, 3, 4]
+
+    def boom():
+        yield 1
+        raise ValueError("boom")
+
+    it = Prefetcher(boom(), depth=2)
+    assert next(it) == 1
+    with pytest.raises(ValueError):
+        for _ in it:
+            pass
+
+
+def test_tokenizer_determinism_and_padding():
+    tok = ByteTokenizer(vocab_size=65536)
+    a = tok.encode(b'{"x": 1}')
+    b2 = tok.encode(b'{"x": 1}')
+    assert np.array_equal(a, b2)
+    batch = tok.pad_batch([a], seq_len=32)
+    assert batch.shape == (1, 32)
+    assert batch[0, -1] == PAD_ID

@@ -1,0 +1,97 @@
+"""Predicate semantics: pattern compilation, no-false-negative invariant."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import (
+    Clause, Kind, Query, clause, exact, key_value, presence, query, substring,
+)
+
+
+def test_pattern_strings_match_paper_table1():
+    assert exact("name", "Bob").patterns() == (b'"Bob"',)
+    assert substring("text", "delicious").patterns() == (b"delicious",)
+    assert presence("email").patterns() == (b'"email"',)
+    assert key_value("age", 10).patterns() == (b'"age"', b"10")
+
+
+def test_exact_match_raw():
+    rec = b'{"name":"Bob","age":22}'
+    assert exact("name", "Bob").matches_raw(rec)
+    assert not exact("name", "Alice").matches_raw(rec)
+    # false positive by design: value appears under another key
+    rec2 = b'{"nickname":"Bob","name":"Al"}'
+    assert exact("name", "Bob").matches_raw(rec2)
+
+
+def test_key_value_segment_semantics():
+    rec = b'{"age":10,"score":22}'
+    assert key_value("age", 10).matches_raw(rec)
+    assert not key_value("age", 22).matches_raw(rec)  # 22 is beyond the comma
+    assert key_value("score", 22).matches_raw(rec)
+    # last pair closed by }
+    assert key_value("score", 2).matches_raw(rec)  # substring of 22: FP ok
+
+
+def test_key_value_multiple_key_occurrences():
+    # key string also appears inside a text field before the real pair
+    rec = b'{"text":"age is a number","age":7}'
+    assert key_value("age", 7).matches_raw(rec)
+
+
+def test_clause_disjunction():
+    c = clause(exact("name", "Bob"), exact("name", "John"))
+    assert c.matches_raw(b'{"name":"John"}')
+    assert c.matches_raw(b'{"name":"Bob"}')
+    assert not c.matches_raw(b'{"name":"Alice"}')
+
+
+def test_exact_semantics_on_parsed():
+    q = query(clause(key_value("age", 10)), clause(presence("email")))
+    assert q.matches_exact({"age": 10, "email": "x@y.z"})
+    assert not q.matches_exact({"age": 10})
+    assert not q.matches_exact({"age": 11, "email": "x@y.z"})
+
+
+_KEYS = ["alpha", "beta", "gamma", "text", "num"]
+
+
+@st.composite
+def json_record(draw):
+    obj = {}
+    for k in draw(st.lists(st.sampled_from(_KEYS), unique=True, min_size=1)):
+        kind = draw(st.integers(0, 2))
+        if kind == 0:
+            obj[k] = draw(st.integers(0, 99))
+        elif kind == 1:
+            obj[k] = draw(st.text(alphabet="abcdef ", min_size=0, max_size=12))
+        else:
+            obj[k] = draw(st.booleans())
+    return obj
+
+
+@st.composite
+def simple_predicate(draw):
+    k = draw(st.sampled_from(_KEYS))
+    kind = draw(st.integers(0, 3))
+    if kind == 0:
+        return exact(k, draw(st.text(alphabet="abcdef", min_size=1, max_size=6)))
+    if kind == 1:
+        return substring(k, draw(st.text(alphabet="abcdef ", min_size=1, max_size=6)))
+    if kind == 2:
+        return presence(k)
+    return key_value(k, draw(st.integers(0, 99)))
+
+
+@given(st.lists(json_record(), min_size=1, max_size=20),
+       st.lists(simple_predicate(), min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_no_false_negatives(objs, preds):
+    """THE invariant (paper §IV-B): exact-match => raw pattern-match."""
+    for obj in objs:
+        rec = json.dumps(obj, separators=(",", ":")).encode()
+        for p in preds:
+            if p.matches_exact(obj):
+                assert p.matches_raw(rec), (obj, p.describe())

@@ -1,0 +1,104 @@
+"""Submodular selection: invariants, approximation bound, CELF equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import Clause, Query, clause, key_value
+from repro.core.selection import (
+    SelectionProblem,
+    brute_force,
+    celf_greedy,
+    combined_celf,
+    combined_greedy,
+    greedy,
+    objective,
+)
+
+
+def _make_problem(rng, n_preds=10, n_queries=8, budget=3.0):
+    pool = [clause(key_value(f"k{i}", i)) for i in range(n_preds)]
+    sel = {c: float(rng.uniform(0.01, 0.95)) for c in pool}
+    cost = {c: float(rng.uniform(0.2, 1.5)) for c in pool}
+    queries = []
+    for _ in range(n_queries):
+        k = rng.integers(1, min(4, n_preds) + 1)
+        idx = rng.choice(n_preds, size=k, replace=False)
+        queries.append(Query(tuple(pool[i] for i in idx), freq=1.0))
+    return SelectionProblem(tuple(queries), sel, cost, budget)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_submodularity(seed):
+    """f(S)+f(T) >= f(S∪T)+f(S∩T) (paper §V-B)."""
+    rng = np.random.default_rng(seed)
+    p = _make_problem(rng)
+    cands = p.candidates()
+    S = {c for c in cands if rng.random() < 0.5}
+    T = {c for c in cands if rng.random() < 0.5}
+    lhs = objective(p, S) + objective(p, T)
+    rhs = objective(p, S | T) + objective(p, S & T)
+    assert lhs >= rhs - 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_monotone(seed):
+    rng = np.random.default_rng(seed)
+    p = _make_problem(rng)
+    cands = p.candidates()
+    S = [c for c in cands if rng.random() < 0.4]
+    extra = [c for c in cands if c not in S]
+    if not extra:
+        return
+    assert objective(p, S + [extra[0]]) >= objective(p, S) - 1e-12
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_budget_respected(seed):
+    rng = np.random.default_rng(seed)
+    p = _make_problem(rng, budget=float(rng.uniform(0.5, 4.0)))
+    for res in (greedy(p, ratio=False), greedy(p, ratio=True), combined_celf(p)):
+        assert res.total_cost <= p.budget + 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_combined_beats_0316_opt(seed):
+    """Paper §V-C: max(Alg1, Alg2) >= (1/2)(1-1/e)·OPT ≈ 0.316·OPT."""
+    rng = np.random.default_rng(seed)
+    p = _make_problem(rng, n_preds=8, n_queries=6)
+    opt = brute_force(p)
+    res = combined_greedy(p)
+    if opt.objective > 0:
+        assert res.objective >= 0.316 * opt.objective - 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_celf_matches_eager_greedy(seed):
+    """CELF lazy evaluation returns the same objective with fewer evals."""
+    rng = np.random.default_rng(seed)
+    p = _make_problem(rng, n_preds=14, n_queries=10)
+    for ratio in (False, True):
+        eager = greedy(p, ratio=ratio)
+        lazy = celf_greedy(p, ratio=ratio)
+        assert abs(eager.objective - lazy.objective) < 1e-9, (
+            eager.describe(), lazy.describe())
+
+
+def test_celf_fewer_evaluations_large():
+    rng = np.random.default_rng(7)
+    p = _make_problem(rng, n_preds=200, n_queries=100, budget=20.0)
+    eager = greedy(p, ratio=True)
+    lazy = celf_greedy(p, ratio=True)
+    assert abs(eager.objective - lazy.objective) < 1e-9
+    assert lazy.evaluations < eager.evaluations / 2, (
+        lazy.evaluations, eager.evaluations)
+
+
+def test_zero_budget_selects_nothing():
+    rng = np.random.default_rng(0)
+    p = _make_problem(rng, budget=0.0)
+    assert combined_greedy(p).selected == []

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These assert the paper's *mechanisms* at small scale:
+  1. the full CIAO pipeline returns exactly the same query answers as a
+     full-scan baseline, across budgets and workloads;
+  2. loading ratio tracks the union selectivity of the pushed set;
+  3. higher budgets never select a worse objective (monotone knapsack);
+  4. the CIAO → tokenizer → train-batch path feeds a real train step.
+"""
+import numpy as np
+import pytest
+
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.planner import build_plan
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore, DataSkippingScanner, FullScanBaseline
+from repro.core.workload import generate_workload
+from repro.data.datasets import generate_records, predicate_pool
+
+
+def _pipeline(dataset, budget, n=2000, n_queries=40, kind="zipf", seed=0):
+    records = generate_records(dataset, n, seed=seed)
+    pool = predicate_pool(dataset)
+    rng = np.random.default_rng(seed)
+    wl = generate_workload(
+        pool, n_queries=n_queries,
+        distribution="zipf" if kind == "zipf" else "uniform",
+        zipf_a=1.5, rng=rng,
+    )
+    rep = build_plan(wl, records[:400], budget_us=budget)
+    eng = NumpyEngine()
+    store = CiaoStore(rep.plan)
+    base = FullScanBaseline()
+    for i in range(0, n, 500):
+        chunk = encode_chunk(records[i: i + 500])
+        bv = (eng.eval_packed(chunk, rep.plan.clauses) if rep.plan.n
+              else np.zeros((0, 0), np.uint32))
+        store.ingest_chunk(chunk, bv)
+        base.ingest_chunk(chunk)
+    return wl, rep, store, base, records
+
+
+@pytest.mark.parametrize("dataset", ("yelp", "winlog", "ycsb"))
+@pytest.mark.parametrize("budget", (0.0, 0.5, 1.5))
+def test_all_query_answers_exact(dataset, budget):
+    wl, rep, store, base, _ = _pipeline(dataset, budget)
+    scanner = DataSkippingScanner(store)
+    for q in wl.queries[:25]:
+        assert scanner.scan(q).count == base.scan(q).count, q.describe()
+
+
+def test_loading_ratio_tracks_union_selectivity():
+    wl, rep, store, base, records = _pipeline("ycsb", 1.5)
+    if rep.plan.n == 0:
+        pytest.skip("budget pushed nothing")
+    union = sum(
+        1 for r in records
+        if any(c.matches_raw(r) for c in rep.plan.clauses)
+    ) / len(records)
+    assert abs(store.stats.loading_ratio - union) < 1e-9
+
+
+def test_budget_monotone_objective():
+    records = generate_records("ycsb", 1200, seed=3)
+    pool = predicate_pool("ycsb")
+    wl = generate_workload(pool, n_queries=40, distribution="zipf",
+                           zipf_a=1.5, rng=np.random.default_rng(3))
+    objs = []
+    for b in (0.25, 0.5, 1.0, 2.0, 4.0):
+        rep = build_plan(wl, records[:400], budget_us=b)
+        objs.append(rep.selection.objective)
+    assert all(a <= b_ + 1e-9 for a, b_ in zip(objs, objs[1:])), objs
+
+
+def test_ciao_feeds_training_end_to_end():
+    """CIAO store → recipe batches → one jitted train step, loss finite."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.pipeline import RecipeBatcher
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.models.layers import split
+    from repro.models.model import build_model
+    from repro.train import optimizer as opt_mod
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import make_train_step
+
+    wl, rep, store, base, _ = _pipeline("ycsb", 1.5)
+    recipe = Query((rep.plan.clauses[0],)) if rep.plan.n else Query(tuple())
+    cfg = get_config("qwen3-1.7b").reduced()
+    tok = ByteTokenizer(vocab_size=cfg.vocab_size)
+    batcher = RecipeBatcher(store, tok, seq_len=64, batch_size=2)
+    tokens, mask = next(iter(batcher.batches(recipe)))
+
+    model = build_model(cfg)
+    values, _ = split(model.init(jax.random.PRNGKey(0)))
+    oc = OptConfig()
+    state = opt_mod.init(values, oc)
+    step = jax.jit(make_train_step(model, oc))
+    _, _, metrics = step(values, state, {
+        "tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask)})
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,161 @@
+"""Optimizer, microbatching, grad compression, checkpoint/restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_batch
+from repro.configs.base import ShapeConfig
+from repro.models.layers import split
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, quantize_int8, dequantize_int8
+
+SHAPE = ShapeConfig("smoke", "train", 64, 4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    values, _ = split(model.init(jax.random.PRNGKey(0)))
+    batch = make_batch(cfg, SHAPE)
+    return cfg, model, values, batch
+
+
+def test_schedule_warmup_and_decay():
+    oc = OptConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_mod.schedule(oc, jnp.int32(s))) for s in (1, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-5)
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]
+    assert lrs[4] >= 1e-4 * 0.99  # min_lr_frac floor
+
+
+def test_adamw_moves_params_and_clips(setup):
+    cfg, model, values, batch = setup
+    oc = OptConfig(grad_clip=1e-6)  # absurdly small clip
+    state = opt_mod.init(values, oc)
+    step = jax.jit(make_train_step(model, oc))
+    p2, s2, m = step(values, state, batch)
+    assert float(m["grad_norm"]) > 0
+    # clip bound: update magnitude limited
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), values, p2)
+    assert max(jax.tree.leaves(diffs)) < 1.0
+
+
+def test_microbatch_equivalence(setup):
+    """n_micro=1 vs n_micro=4 must give (nearly) identical updates."""
+    cfg, model, values, batch = setup
+    oc = OptConfig(learning_rate=1e-3, weight_decay=0.0)
+    s1 = opt_mod.init(values, oc)
+    s4 = opt_mod.init(values, oc)
+    p1, _, m1 = jax.jit(make_train_step(model, oc, n_micro=1))(values, s1, batch)
+    p4, _, m4 = jax.jit(make_train_step(model, oc, n_micro=4))(values, s4, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), p1, p4)))
+    assert err < 5e-3, err
+
+
+def test_adafactor_runs(setup):
+    cfg, model, values, batch = setup
+    oc = OptConfig(kind="adafactor", learning_rate=1e-3)
+    state = opt_mod.init(values, oc)
+    step = jax.jit(make_train_step(model, oc))
+    p2, s2, m = step(values, state, batch)
+    assert np.isfinite(float(m["loss"]))
+    # factored states are smaller than params
+    nbytes_v = sum(x.size for x in jax.tree.leaves(s2["f"]))
+    nbytes_p = sum(x.size for x in jax.tree.leaves(values))
+    assert nbytes_v < 0.6 * nbytes_p
+
+
+def test_int8_quantization_error_feedback():
+    g = jnp.array([1.0, -0.5, 0.003, 100.0])
+    q, s = quantize_int8(g)
+    d = dequantize_int8(q, s)
+    assert float(jnp.abs(g - d).max()) <= float(s) * 0.5 + 1e-6
+    # error feedback: residual accumulates what quantization lost
+    resid = g - d
+    q2, s2 = quantize_int8(g + resid)
+    d2 = dequantize_int8(q2, s2)
+    assert float(jnp.abs((g + resid) - d2).max()) <= float(s2) * 0.5 + 1e-6
+
+
+def test_compressed_training_converges(setup):
+    cfg, model, values, batch = setup
+    oc = OptConfig(learning_rate=5e-3, weight_decay=0.0, warmup_steps=1)
+    state = opt_mod.init(values, oc)
+    step = jax.jit(make_train_step(model, oc, compress=True))
+    params = values
+    losses = []
+    for _ in range(8):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert "ef" in state  # error-feedback buffer present
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, model, values, batch = setup
+    oc = OptConfig()
+    state = opt_mod.init(values, oc)
+    d = str(tmp_path)
+    ckpt.save(d, (values, state), step=7)
+    assert ckpt.latest_step(d) == 7
+    (v2, s2), manifest = ckpt.restore(d, 7, (values, state))
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(values), jax.tree.leaves(v2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path, setup):
+    cfg, model, values, batch = setup
+    d = str(tmp_path)
+    ckpt.save(d, values, step=3)
+    # simulate a crashed write: directory without DONE
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert ckpt.latest_step(d) == 3
+
+
+def test_async_checkpointer(tmp_path, setup):
+    cfg, model, values, batch = setup
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        w.save(values, step=s)
+    w.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    # gc kept only 2
+    steps = [n for n in os.listdir(str(tmp_path)) if n.startswith("step_")]
+    assert len(steps) == 2
+
+
+def test_train_driver_crash_and_resume(tmp_path):
+    """Fault injection: run crashes at step 6, restart resumes and finishes."""
+    from repro.launch import train as train_mod
+
+    d = str(tmp_path / "run")
+    args = [
+        "--arch", "qwen3-1.7b", "--reduced", "--dataset", "ycsb",
+        "--steps", "10", "--batch", "2", "--seq", "64",
+        "--ckpt-dir", d, "--ckpt-every", "2", "--n-clients", "2",
+        "--chunks-per-client", "2", "--chunk-records", "64", "--log-every", "5",
+    ]
+    with pytest.raises(SystemExit):
+        train_mod.main(args + ["--fail-at-step", "6"])
+    resumed_from = ckpt.latest_step(d)
+    assert resumed_from is not None and 2 <= resumed_from <= 6
+    res = train_mod.main(args)  # auto-resume
+    # async writer may still land step 6 between our read and the resume
+    assert 10 - 6 <= res["steps_run"] <= 10 - 2
+    assert res["last_loss"] is not None
+    assert ckpt.latest_step(d) == 10
