@@ -1,6 +1,21 @@
-"""Kernel/engine throughput (framework table): records/s per engine, and
-the roofline math for the TPU substring-match kernel (it is memory-bound:
-arithmetic intensity ~1 op/byte, so v5e peak is ~819 GB/s of chunk bytes)."""
+"""Kernel/engine throughput (framework table): records/s per engine, plus
+the fused-vs-split comparison that tracks the pushdown hot path.
+
+Two sections:
+
+  * engine table — µs/record for every engine on a mixed plan (the paper's
+    1.0 µs/record client budget is the reference line);
+  * fused vs seed-split — the fused single-launch path
+    (``KernelEngine.eval_fused``) against the seed pipeline it replaced
+    (one ``match_any`` launch + one ``match_key_value`` launch per
+    key-value pair + host OR/pack + a ``reduce_bitvectors`` launch for the
+    load mask), per kernel backend.  Written to ``BENCH_kernels.json`` by
+    ``benchmarks.run`` so the perf trajectory is tracked PR over PR.
+
+Also keeps the roofline note for the TPU target: substring match streams
+chunk bytes once per pattern with ~3 VPU ops/byte — memory-bound, so v5e
+peak is ~819 GB/s of chunk bytes.
+"""
 from __future__ import annotations
 
 import json
@@ -8,16 +23,81 @@ import time
 
 import numpy as np
 
-from repro.core.client import NumpyEngine, PythonEngine, encode_chunk
+from repro.core import bitvector
+from repro.core.client import (
+    NumpyEngine, PythonEngine, dedup_terms, encode_chunk, encode_patterns,
+)
+from repro.core.predicates import Kind
 from repro.data.datasets import generate_records, predicate_pool
+from repro.kernels import ops
 from repro.kernels.engine import KernelEngine
+
+
+def _mixed_plan(dataset: str, n_clauses: int, rng: np.random.Generator):
+    """Half simple-pattern clauses, half key-value clauses (paper Table I)."""
+    pool = predicate_pool(dataset)
+    kv, simple = [], []
+    for c in pool:
+        (kv if any(t.kind is Kind.KEY_VALUE for t in c.terms) else simple).append(c)
+    take_kv = min(n_clauses // 2, len(kv))
+    take_s = min(n_clauses - take_kv, len(simple))
+    picked = [kv[i] for i in rng.choice(len(kv), size=take_kv, replace=False)]
+    picked += [simple[i] for i in rng.choice(len(simple), size=take_s, replace=False)]
+    return picked
+
+
+def _seed_split_eval(chunk, clauses, backend: str):
+    """The seed pushdown pipeline, preserved for benchmarking the speedup:
+    one launch for the simple set, one launch PER key-value pair, host-side
+    OR of disjuncts + numpy bit-pack, then a separate reduce launch for the
+    ingest load mask."""
+    simple_pats: dict[bytes, int] = {}
+    kv_pairs: dict[tuple[bytes, bytes], int] = {}
+    for cl in clauses:
+        for t in cl.terms:
+            if t.kind is Kind.KEY_VALUE:
+                k, v = t.patterns()
+                kv_pairs.setdefault((k, v), len(kv_pairs))
+            else:
+                simple_pats.setdefault(t.patterns()[0], len(simple_pats))
+    R = chunk.n_records
+    simple_hits = np.zeros((len(simple_pats), R), dtype=bool)
+    if simple_pats:
+        pats, plens = encode_patterns(list(simple_pats))
+        simple_hits = ops.match_any(chunk.data, pats, plens[:, None],
+                                    backend=backend)
+    kv_hits = np.zeros((len(kv_pairs), R), dtype=bool)
+    for (k, v), idx in kv_pairs.items():
+        kv_hits[idx] = ops.match_key_value(chunk.data, k, v, backend=backend)
+    out = np.zeros((len(clauses), R), dtype=bool)
+    for ci, cl in enumerate(clauses):
+        row = out[ci]
+        for t in cl.terms:
+            if t.kind is Kind.KEY_VALUE:
+                row |= kv_hits[kv_pairs[t.patterns()]]
+            else:
+                row |= simple_hits[simple_pats[t.patterns()[0]]]
+    words = bitvector.pack(out)
+    _, or_words, _ = ops.reduce_bitvectors(words, backend=backend)
+    return words, or_words
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
     records = generate_records("ycsb", n_records, seed=43)
-    pool = predicate_pool("ycsb")
     rng = np.random.default_rng(0)
-    clauses = [pool[i] for i in rng.choice(len(pool), size=n_clauses, replace=False)]
+    clauses = _mixed_plan("ycsb", n_clauses, rng)
+    terms = dedup_terms(clauses)[0]
+    n_kv_pairs = sum(1 for t in terms if t.kind is Kind.KEY_VALUE)
+    has_simple = any(t.kind is not Kind.KEY_VALUE for t in terms)
     chunk = encode_chunk(records)
     chunk_bytes = chunk.data.nbytes
 
@@ -30,7 +110,7 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
     ]
     expected = None
     for name, eng in engines:
-        eng.eval(chunk, clauses[:1])  # warm caches / jit
+        eng.eval(chunk, clauses)  # warm caches / jit
         best = np.inf
         out = None
         reps = 1 if name == "pallas-interpret" else repeats
@@ -52,6 +132,36 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
         print(f"[kernels] {name:20s} {rec_per_s:12.0f} rec/s "
               f"({us_per_record:8.2f} us/rec, {rows[-1]['effective_GBps']} GB/s)")
 
+    # fused single-launch path vs the seed split pipeline, per backend
+    fused_vs_split = []
+    for backend in ("xla", "pallas_interpret"):
+        eng = KernelEngine(backend=backend)
+        split_words, split_or = _seed_split_eval(chunk, clauses, backend)
+        fused = eng.eval_fused(chunk, clauses)
+        assert np.array_equal(fused.words, split_words), backend
+        assert np.array_equal(fused.or_words, split_or), backend
+        reps = 1 if backend == "pallas_interpret" else repeats
+        t_split = _best_of(
+            lambda: _seed_split_eval(chunk, clauses, backend), reps)
+        t_fused = _best_of(lambda: eng.eval_fused(chunk, clauses), reps)
+        entry = {
+            "backend": backend,
+            "n_records": n_records,
+            "n_clauses": len(clauses),
+            "n_kv_pairs": n_kv_pairs,
+            "split_us_per_record": round(t_split / n_records * 1e6, 4),
+            "fused_us_per_record": round(t_fused / n_records * 1e6, 4),
+            "speedup": round(t_split / t_fused, 2),
+            # match_any (iff simple patterns exist) + per-kv-pair + reduce
+            "launches_split": int(has_simple) + n_kv_pairs + 1,
+            "launches_fused": 1,
+        }
+        fused_vs_split.append(entry)
+        print(f"[kernels] fused-vs-split {backend:16s} "
+              f"{entry['split_us_per_record']:9.3f} -> "
+              f"{entry['fused_us_per_record']:9.3f} us/rec "
+              f"(x{entry['speedup']}, launches {entry['launches_split']}->1)")
+
     # roofline note for the TPU target (not measurable here):
     # multi_match_any streams chunk bytes once per pattern with ~3 VPU ops
     # per byte -> memory-bound; bound = HBM_bw / (stride bytes per record).
@@ -65,10 +175,16 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
     })
     print(f"[kernels] v5e HBM-bound ceiling at stride {stride}, "
           f"{n_clauses} patterns: {v5e_bound:,.0f} rec/s")
-    with open("artifacts/bench_kernels.json", "w") as f:
-        json.dump(rows, f, indent=1)
-    return rows
+    # no writes here: the entry point that ran (benchmarks.run, or the
+    # __main__ block below) owns the artifacts/ detail file, and only a
+    # full-size benchmarks.run may update the tracked BENCH_kernels.json
+    return {"engines": rows, "fused_vs_split": fused_vs_split}
 
 
 if __name__ == "__main__":
-    main()
+    import os
+
+    os.makedirs("artifacts", exist_ok=True)
+    out = main()
+    with open("artifacts/bench_kernels.json", "w") as f:
+        json.dump(out, f, indent=1)

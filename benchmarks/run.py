@@ -83,12 +83,28 @@ def main() -> None:
         ))
 
     if only is None or "kernels" in only:
+        import json
+
         from . import bench_kernels
 
-        rows = bench_kernels.main(n_records=1500 if args.quick else 4000)
-        for r in rows:
+        out = bench_kernels.main(n_records=1500 if args.quick else 4000)
+        for r in out["engines"]:
             csv_rows.append((f"kernel_{r['engine']}", r["us_per_record"],
                              f"{r['records_per_s']}rec/s;{r['effective_GBps']}GBps"))
+        for r in out["fused_vs_split"]:
+            csv_rows.append((
+                f"kernel_fused_{r['backend']}", r["fused_us_per_record"],
+                f"split_{r['split_us_per_record']}us;x{r['speedup']};"
+                f"launches_{r['launches_split']}->{r['launches_fused']}",
+            ))
+        with open("artifacts/bench_kernels.json", "w") as f:
+            json.dump(out, f, indent=1)
+        if not args.quick:
+            # machine-readable perf-trajectory artifact (tracked in git):
+            # only full-size runs may update it, so PR-over-PR numbers
+            # stay comparable
+            with open("BENCH_kernels.json", "w") as f:
+                json.dump(out, f, indent=1)
 
     if only is None or "roofline" in only:
         from . import bench_roofline

@@ -42,7 +42,10 @@ import time
 
 t0 = time.perf_counter()
 chunks = [encode_chunk(records[i:i + 1000]) for i in range(0, N_RECORDS, 1000)]
-bitvecs = [engine.eval_packed(c, report.plan.clauses) for c in chunks]
+# eval_fused = the single-pass pipeline: packed per-clause bitvectors, the
+# OR'd load mask, and per-clause popcounts from one evaluation (one kernel
+# launch on the pallas/xla engines — DESIGN.md §3.4)
+bitvecs = [engine.eval_fused(c, report.plan.clauses) for c in chunks]
 prefilter_s = time.perf_counter() - t0
 
 # 3) server: partial loading (§VI-A)

@@ -1,0 +1,6 @@
+"""Compatibility shims for optional third-party packages.
+
+The tier-1 environment bakes in the jax toolchain but not every dev
+dependency; modules here provide gated stand-ins (see conftest.py) so the
+test suite collects and runs without network access.
+"""

@@ -1,0 +1,215 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API.
+
+Activated by conftest.py ONLY when the real package is not installed.  It
+implements the subset our tests use — ``given`` / ``settings`` and the
+``integers`` / ``booleans`` / ``sampled_from`` / ``lists`` / ``text`` /
+``composite`` strategies — as deterministic random sampling: each test
+function gets a fixed per-test seed, so failures reproduce run-to-run.
+
+No shrinking, no database, no health checks.  When real hypothesis is
+available it takes priority (conftest tries the real import first), so this
+shim never shadows the genuine article.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    """Base strategy: subclasses implement ``do_draw(rng)``."""
+
+    def do_draw(self, rng: random.Random) -> Any:  # pragma: no cover
+        raise NotImplementedError
+
+    def example(self, rng: random.Random) -> Any:
+        return self.do_draw(rng)
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = min_value, max_value
+
+    def do_draw(self, rng):
+        # bias a little toward the endpoints (cheap boundary coverage)
+        r = rng.random()
+        if r < 0.05:
+            return self.min_value
+        if r < 0.10:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Booleans(Strategy):
+    def do_draw(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def do_draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size=0, max_size=None, unique=False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        self.unique = unique
+
+    def do_draw(self, rng):
+        if self.unique and isinstance(self.elements, _SampledFrom):
+            pool = list(self.elements.elements)
+            hi = min(self.max_size, len(pool))
+            lo = min(self.min_size, hi)
+            n = rng.randint(lo, hi)
+            return rng.sample(pool, n)
+        n = rng.randint(self.min_size, self.max_size)
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            v = self.elements.do_draw(rng)
+            attempts += 1
+            if self.unique:
+                k = repr(v)
+                if k in seen:
+                    continue
+                seen.add(k)
+            out.append(v)
+        return out
+
+
+class _Text(Strategy):
+    def __init__(self, alphabet=None, min_size=0, max_size=None):
+        self.alphabet = alphabet or "abcdefghijklmnopqrstuvwxyz "
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 12
+
+    def do_draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return "".join(rng.choice(self.alphabet) for _ in range(n))
+
+
+class _Composite(Strategy):
+    def __init__(self, fn: Callable, args: tuple, kwargs: dict):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def do_draw(self, rng):
+        draw = lambda strategy: strategy.do_draw(rng)  # noqa: E731
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31) -> Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, *, min_size=0, max_size=None, unique=False) -> Strategy:
+        return _Lists(elements, min_size, max_size, unique)
+
+    @staticmethod
+    def text(alphabet=None, *, min_size=0, max_size=None) -> Strategy:
+        return _Text(alphabet, min_size, max_size)
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., Strategy]:
+        @functools.wraps(fn)
+        def make(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+
+        return make
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording the example budget on the test function."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    """Abort the current example (not the test) when condition is false."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*fixture_args, **fixture_kwargs):
+            inner = fn
+            n = getattr(inner, "_shim_max_examples", None)
+            if n is None:
+                n = getattr(runner, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 5 * n + 50:
+                attempts += 1
+                args = tuple(s.do_draw(rng) for s in arg_strategies)
+                kwargs = {k: s.do_draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim seed {seed}, example {ran}): "
+                        f"args={args!r} kwargs={kwargs!r}"
+                    ) from e
+                ran += 1
+
+        # pytest must not mistake the drawn parameters for fixtures: hide
+        # them from the reported signature (the wrapper fills them itself).
+        if hasattr(runner, "__wrapped__"):
+            del runner.__wrapped__
+        try:
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            n_drawn = len(arg_strategies)
+            keep = params[: len(params) - n_drawn] if n_drawn else params
+            keep = [p for p in keep if p.name not in kw_strategies]
+            runner.__signature__ = sig.replace(parameters=keep)
+        except (TypeError, ValueError):  # pragma: no cover
+            pass
+        return runner
+
+    return deco
+
+
+class HealthCheck:  # accepted and ignored
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return []

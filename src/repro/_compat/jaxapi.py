@@ -1,0 +1,30 @@
+"""Shims over jax APIs whose shapes changed across versions.
+
+The mesh-context helpers (``current_mesh`` / ``use_mesh``) live in
+:mod:`repro.dist.sharding` next to their consumers; everything else
+version-sensitive goes here.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_mesh(dev_array, axes) -> Mesh:
+    """Mesh constructor tolerant of pre-AxisType jax versions."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return Mesh(dev_array, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return Mesh(dev_array, axes)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every jax version.
+
+    Older jax returns one dict per device (a list); newer jax returns the
+    dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost

@@ -11,6 +11,8 @@ ingest path) and a jnp flavor (device-side skipping / kernels).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 try:  # jnp flavor is optional at import time (host-only tools).
@@ -49,6 +51,8 @@ def pack(bits: np.ndarray) -> np.ndarray:
 def unpack(words: np.ndarray, n_records: int) -> np.ndarray:
     """Inverse of :func:`pack` -> bool array (..., n_records)."""
     words = np.asarray(words, dtype=np.uint32)
+    if words.size == 0:  # zero-clause / zero-record: reshape(-1) can't infer
+        return np.zeros(words.shape[:-1] + (n_records,), dtype=bool)
     shifts = np.arange(WORD_BITS, dtype=np.uint32)
     bits = (words[..., None] >> shifts) & np.uint32(1)
     bits = bits.reshape(words.shape[:-1] + (-1,))
@@ -72,13 +76,68 @@ def bv_or_many(words: np.ndarray) -> np.ndarray:
     return np.bitwise_or.reduce(np.asarray(words, dtype=np.uint32), axis=0)
 
 
+def _popcount_rows_unpack(words: np.ndarray) -> np.ndarray:
+    """np.bitwise_count-free per-row popcount (numpy < 2.0)."""
+    w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+    if w.size == 0:
+        return np.zeros((w.shape[0],), np.int64)
+    bytes_ = w.view(np.uint8).reshape(w.shape[0], -1)
+    return np.unpackbits(bytes_, axis=1).sum(axis=1, dtype=np.int64)
+
+
+if hasattr(np, "bitwise_count"):
+    def popcount_rows(words: np.ndarray) -> np.ndarray:
+        """int64[P]: per-row popcount of uint32[P, W]."""
+        w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+        if w.size == 0:
+            return np.zeros((w.shape[0],), np.int64)
+        return np.bitwise_count(w).sum(axis=1, dtype=np.int64)
+else:  # pragma: no cover — exercised via the _popcount_unpack regression test
+    popcount_rows = _popcount_rows_unpack
+
+
 def popcount(words: np.ndarray) -> int:
-    return int(np.bitwise_count(np.asarray(words, dtype=np.uint32)).sum())
+    return int(popcount_rows(np.asarray(words, np.uint32).reshape(1, -1)).sum())
+
+
+def _popcount_unpack(words: np.ndarray) -> int:
+    """Fallback-path popcount, exposed for the numpy<2 regression test."""
+    return int(_popcount_rows_unpack(
+        np.asarray(words, np.uint32).reshape(1, -1)).sum())
 
 
 def select_indices(words: np.ndarray, n_records: int) -> np.ndarray:
     """Indices of set bits, in record order (data-skipping gather list)."""
     return np.nonzero(unpack(words, n_records))[0]
+
+
+@dataclass(frozen=True)
+class ChunkBitvectors:
+    """Everything one chunk evaluation produces, in packed form.
+
+    The fused kernel path (``kernels.fused``) emits all three fields from a
+    single device pass; the host engines derive them from their bool hits.
+    ``or_words`` is the ingest load mask (OR over clauses) — the server
+    uses it directly instead of re-reducing on the host — and ``counts``
+    the per-clause popcounts, which ingest accumulates into the store's
+    observed per-clause selectivities (planner feedback; DESIGN.md §8).
+    """
+
+    words: np.ndarray      # uint32[C, W] — per-clause packed bitvectors
+    or_words: np.ndarray   # uint32[W]    — OR over clauses (load mask)
+    counts: np.ndarray     # int32[C]     — per-clause popcounts
+    n_records: int
+
+    @classmethod
+    def from_bits(cls, bits: np.ndarray) -> "ChunkBitvectors":
+        """Host-side construction from bool hits (C, R)."""
+        bits = np.asarray(bits, dtype=bool)
+        c, r = bits.shape
+        words = pack(bits)
+        or_words = (bv_or_many(words) if c
+                    else np.zeros((num_words(r),), np.uint32))
+        counts = bits.sum(axis=1, dtype=np.int32)
+        return cls(words=words, or_words=or_words, counts=counts, n_records=r)
 
 
 # ---------------------------------------------------------------------------

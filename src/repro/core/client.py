@@ -97,10 +97,17 @@ def encode_patterns(patterns: Sequence[bytes], *, max_len: int = 64
 # ---------------------------------------------------------------------------
 
 def window_hits(data: np.ndarray, pattern: bytes) -> np.ndarray:
-    """bool[R, L-m+1]: window j matches pattern exactly."""
+    """bool[R, L-m+1]: window j matches pattern exactly.
+
+    An empty pattern matches at every position (``b"" in x`` semantics) —
+    the engine-equivalence contract: PythonEngine and the kernels treat a
+    zero-length pattern as match-all.
+    """
     m = len(pattern)
     L = data.shape[1]
-    if m == 0 or m > L:
+    if m == 0:
+        return np.ones((data.shape[0], L + 1), dtype=bool)
+    if m > L:
         return np.zeros((data.shape[0], max(L - m + 1, 0)), dtype=bool)
     pat = np.frombuffer(pattern, dtype=np.uint8)
     acc = data[:, 0 : L - m + 1] == pat[0]
@@ -179,6 +186,10 @@ def key_value_match(data: np.ndarray, key_pat: bytes, val_pat: bytes) -> np.ndar
 def eval_simple(data: np.ndarray, pred: SimplePredicate) -> np.ndarray:
     pats = pred.patterns()
     if pred.kind is Kind.KEY_VALUE:
+        if len(pats[1]) == 0:
+            # empty value pattern degrades to key presence — mirrors
+            # kernels.plan.compile_plan and matches_raw (find(b"") != -1)
+            return any_match(data, pats[0])
         return key_value_match(data, pats[0], pats[1])
     return any_match(data, pats[0])
 
@@ -190,11 +201,52 @@ def eval_clause(data: np.ndarray, cl: Clause) -> np.ndarray:
     return out
 
 
+def dedup_terms(clauses: Sequence[Clause]
+                ) -> tuple[list[SimplePredicate], np.ndarray]:
+    """Unique predicates across a clause list + clause-membership matrix.
+
+    Two terms that compile to the same pattern strings (and kind) evaluate
+    identically, so they share one slot.  Returns ``(terms, membership)``
+    with ``membership bool[C, P]``: clause c contains predicate p.  Every
+    engine combines per-clause hits as ``membership @ hits > 0`` — the OR
+    over disjuncts — so a disjunct shared by several clauses is evaluated
+    once per chunk, not once per clause.
+    """
+    uniq: dict[tuple, int] = {}
+    terms: list[SimplePredicate] = []
+    for cl in clauses:
+        for t in cl.terms:
+            key = (t.kind is Kind.KEY_VALUE, t.patterns())
+            if key not in uniq:
+                uniq[key] = len(terms)
+                terms.append(t)
+    membership = np.zeros((len(clauses), len(terms)), dtype=bool)
+    for ci, cl in enumerate(clauses):
+        for t in cl.terms:
+            membership[ci, uniq[(t.kind is Kind.KEY_VALUE, t.patterns())]] = True
+    return terms, membership
+
+
 # ---------------------------------------------------------------------------
 # engines
 # ---------------------------------------------------------------------------
 
-class PythonEngine:
+class _HostEngine:
+    """Shared packed/fused derivations for the host-side engines."""
+
+    def eval(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
+        raise NotImplementedError
+
+    def eval_packed(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
+        return bitvector.pack(self.eval(chunk, clauses))
+
+    def eval_fused(self, chunk: Chunk,
+                   clauses: Sequence[Clause]) -> bitvector.ChunkBitvectors:
+        """Same contract as the fused kernel pass (bitvectors+mask+counts)."""
+        return bitvector.ChunkBitvectors.from_bits(self.eval(chunk, clauses))
+
+
+class PythonEngine(_HostEngine):
     """Paper-faithful string::find oracle (slow; ground truth)."""
 
     name = "python"
@@ -207,23 +259,25 @@ class PythonEngine:
                 out[pi, ri] = cl.matches_raw(rec)
         return out
 
-    def eval_packed(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
-        return bitvector.pack(self.eval(chunk, clauses))
 
+class NumpyEngine(_HostEngine):
+    """Vectorized sliding-window engine on the dense chunk.
 
-class NumpyEngine:
-    """Vectorized sliding-window engine on the dense chunk."""
+    Mirrors the fused kernel's dedup: a disjunct shared by several clauses
+    is evaluated once per chunk, then clauses OR their members' hit rows.
+    """
 
     name = "numpy"
 
     def eval(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
-        out = np.zeros((len(clauses), chunk.n_records), dtype=bool)
-        for pi, cl in enumerate(clauses):
-            out[pi] = eval_clause(chunk.data, cl)
-        return out
-
-    def eval_packed(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
-        return bitvector.pack(self.eval(chunk, clauses))
+        terms, membership = dedup_terms(clauses)
+        R = chunk.n_records
+        if not terms or R == 0:
+            return np.zeros((len(clauses), R), dtype=bool)
+        hits = np.zeros((len(terms), R), dtype=bool)
+        for ti, t in enumerate(terms):
+            hits[ti] = eval_simple(chunk.data, t)
+        return membership @ hits  # bool matmul == OR over member predicates
 
 
 def get_engine(name: str):

@@ -106,19 +106,63 @@ class CiaoStore:
         self.raw: list[RawRemainder] = []
         self.jit_blocks: list[Block] = []   # promoted raw rows (no bitvectors)
         self.stats = LoadStats()
+        # per-clause match totals (client popcounts): observed-selectivity
+        # feedback for the planner (paper §V workload estimation)
+        self.clause_counts = np.zeros((plan.n,), np.int64)
+
+    def observed_selectivities(self) -> np.ndarray:
+        """float64[P]: fraction of ingested records matching each clause."""
+        n = max(self.stats.n_records, 1)
+        return self.clause_counts / n
 
     # -- ingest -------------------------------------------------------------
-    def ingest_chunk(self, chunk: Chunk, bitvecs: np.ndarray) -> LoadStats:
-        """Partial loading of one chunk (uint32[P, W] client bit-vectors)."""
+    def ingest_chunk(
+        self, chunk: Chunk,
+        bitvecs: np.ndarray | bitvector.ChunkBitvectors,
+    ) -> LoadStats:
+        """Partial loading of one chunk.
+
+        Accepts either raw ``uint32[P, W]`` client bit-vectors, or the full
+        :class:`~repro.core.bitvector.ChunkBitvectors` a fused engine pass
+        emits — in that case the load mask arrives precomputed (the kernel
+        already OR'd the clauses on device) and no host reduction runs.
+        """
         t0 = time.perf_counter()
         n = chunk.n_records
+        # validate BOTH dimensions BEFORE touching stats: a rejected
+        # ingest must not corrupt n_records / observed selectivities
+        if isinstance(bitvecs, bitvector.ChunkBitvectors):
+            if bitvecs.n_records != n:
+                raise ValueError(
+                    f"bitvectors cover {bitvecs.n_records} records, "
+                    f"chunk has {n}")
+            n_cl = bitvecs.words.shape[0]
+        else:
+            raw = np.asarray(bitvecs)
+            n_cl = raw.shape[0]
+            if n_cl and raw.shape[-1] != bitvector.num_words(n):
+                raise ValueError(
+                    f"bitvector words cover {raw.shape[-1] * 32} records, "
+                    f"chunk has {n}")
+        if n_cl != self.plan.n:
+            raise ValueError(
+                f"bitvectors cover {n_cl} clauses, plan has {self.plan.n} "
+                "(stale client plan?)")
         self.stats.n_records += n
+        any_words: np.ndarray | None = None
+        if isinstance(bitvecs, bitvector.ChunkBitvectors):
+            any_words = bitvecs.or_words
+            self.clause_counts += bitvecs.counts
+            bitvecs = bitvecs.words
+        elif self.plan.n:
+            self.clause_counts += bitvector.popcount_rows(bitvecs)
         if self.plan.n == 0:
             load_idx = np.arange(n)
             keep_idx = np.array([], dtype=np.int64)
             block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
         else:
-            any_words = bitvector.bv_or_many(bitvecs)
+            if any_words is None:
+                any_words = bitvector.bv_or_many(bitvecs)
             load_mask = bitvector.unpack(any_words, n)
             load_idx = np.nonzero(load_mask)[0]
             keep_idx = np.nonzero(~load_mask)[0]

@@ -49,11 +49,12 @@ class ClientShard:
     def __post_init__(self) -> None:
         self._stream = record_stream(self.dataset, seed=1000 + self.shard_id)
 
-    def next_chunk(self) -> tuple[Chunk, np.ndarray]:
+    def next_chunk(self) -> tuple[Chunk, bitvector.ChunkBitvectors]:
         recs = [next(self._stream) for _ in range(self.chunk_records)]
         chunk = encode_chunk(recs)
-        bv = self.engine.eval_packed(chunk, self.plan.clauses)
-        return chunk, bv
+        # fused single-pass evaluation: the ingest load mask ships
+        # precomputed alongside the bitvectors (one launch on kernel engines)
+        return chunk, self.engine.eval_fused(chunk, self.plan.clauses)
 
 
 @dataclass(order=True)

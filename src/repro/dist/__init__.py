@@ -1,0 +1,11 @@
+"""Distributed-execution support: logical-axis sharding rules + collectives.
+
+Restored as a minimal-but-functional package (DESIGN.md §6): ``sharding``
+resolves the logical axis names recorded by ``models.layers.mk`` into mesh
+``PartitionSpec``s and provides the activation-constraint helpers the model
+code calls on every block boundary.  ``collectives`` holds the multi-chip
+primitives; in this build they are documented stubs (``IS_STUB``) — the
+single-device paths never reach them, and the multi-device subprocess tests
+are skip-marked until the full implementations are restored.
+"""
+from . import collectives, sharding  # noqa: F401

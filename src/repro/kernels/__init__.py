@@ -1,11 +1,16 @@
 """Pallas TPU kernels (+ pure-jnp oracles in ref.py, jit wrappers in ops.py).
 
-  * substring_match — the paper's hot loop, TPU-adapted (DESIGN.md §3)
-  * bitvector_ops   — AND/OR/popcount streaming reduce for data skipping
+  * fused           — single-pass pushdown: chunk -> packed clause
+    bitvectors + load mask + popcounts in ONE launch (DESIGN.md §3.4)
+  * substring_match — the paper's hot loop, TPU-adapted (DESIGN.md §3);
+    still used stand-alone by ops.match_any / ops.match_key_value
+  * bitvector_ops   — AND/OR/popcount streaming reduce for query-time
+    data skipping (the ingest-side reduce now lives in the fused pass)
   * flash_attention — canonical grid-accumulated flash attention (GQA via
     BlockSpec index maps), used by the compute plane
 
-All validated in interpret mode; ops.match_any / ops.match_key_value /
-ops.reduce_bitvectors dispatch between pallas / pallas_interpret / xla.
+All validated in interpret mode; the ops wrappers dispatch between
+pallas / pallas_interpret / xla.
 """
 from . import ops, ref  # noqa: F401
+from .ops import clause_bitvectors  # noqa: F401

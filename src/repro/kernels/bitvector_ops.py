@@ -7,6 +7,11 @@ Given packed bit-vectors ``uint32[P, W]`` it produces, per 128-word tile:
 
 One pass, one kernel: on TPU this is a pure VPU streaming op; the popcount
 uses ``lax.population_count`` on the reduced words only.
+
+This kernel serves the QUERY side (AND over the pushed clauses of one
+query).  The ingest-side OR/load-mask/popcount that used to require a
+second launch per chunk is folded into the fused pushdown pass
+(:mod:`repro.kernels.fused`), so a chunk is fully evaluated in one launch.
 """
 from __future__ import annotations
 

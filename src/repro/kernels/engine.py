@@ -1,9 +1,12 @@
 """Kernel-backed client engine (implements the core engine protocol).
 
-Evaluates a clause list on a dense chunk with the Pallas kernels:
-simple predicates (exact / substring / key-presence) batch into one
-``match_any`` call over the deduplicated pattern set; key-value predicates
-dispatch to ``match_key_value``.  Disjunctions OR at the host level.
+The whole plan is compiled ONCE into a flat predicate table + clause
+membership matrix (:func:`compile_plan`), and a chunk is evaluated with a
+single fused device pass (``ops.clause_bitvectors``): simple and key-value
+predicates batch into one grid dimension with masked dynamic lengths, the
+clause OR-combine, bit-packing, load-mask OR and popcounts all happen on
+device.  No per-key-value-pair launches, no host-side OR/pack
+(DESIGN.md §3.4).
 """
 from __future__ import annotations
 
@@ -12,10 +15,12 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import bitvector
-from repro.core.client import Chunk, encode_patterns
-from repro.core.predicates import Clause, Kind
+from repro.core.bitvector import ChunkBitvectors
+from repro.core.client import Chunk
+from repro.core.predicates import Clause
 
 from . import ops
+from .plan import CompiledPlan, compile_plan  # noqa: F401 (re-export)
 
 
 class KernelEngine:
@@ -26,44 +31,39 @@ class KernelEngine:
         self.backend = backend
         self.r_blk = r_blk
         self.name = backend
+        self._plan_cache: dict[tuple[Clause, ...], CompiledPlan] = {}
+
+    def _compiled(self, clauses: tuple[Clause, ...]) -> CompiledPlan:
+        plan = self._plan_cache.get(clauses)
+        if plan is None:
+            plan = compile_plan(clauses)
+            if len(self._plan_cache) > 64:  # plans change rarely; bound it
+                self._plan_cache.clear()
+            self._plan_cache[clauses] = plan
+        return plan
+
+    def eval_fused(self, chunk: Chunk, clauses: Sequence[Clause]) -> ChunkBitvectors:
+        """One device launch: packed bitvectors + load mask + popcounts."""
+        C, R = len(clauses), chunk.n_records
+        W = bitvector.num_words(R)
+        if C == 0 or R == 0:
+            return ChunkBitvectors(
+                words=np.zeros((C, W), np.uint32),
+                or_words=np.zeros((W,), np.uint32),
+                counts=np.zeros((C,), np.int32),
+                n_records=R,
+            )
+        plan = self._compiled(tuple(clauses))
+        words, or_words, counts = ops.clause_bitvectors(
+            chunk.data, plan, backend=self.backend, r_blk=self.r_blk,
+        )
+        return ChunkBitvectors(
+            words=words, or_words=or_words, counts=counts, n_records=R
+        )
 
     def eval(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
-        # 1) collect unique simple patterns across all clauses
-        simple_pats: dict[bytes, int] = {}
-        kv_pairs: dict[tuple[bytes, bytes], int] = {}
-        for cl in clauses:
-            for t in cl.terms:
-                if t.kind is Kind.KEY_VALUE:
-                    k, v = t.patterns()
-                    kv_pairs.setdefault((k, v), len(kv_pairs))
-                else:
-                    simple_pats.setdefault(t.patterns()[0], len(simple_pats))
-
-        R = chunk.n_records
-        simple_hits = np.zeros((len(simple_pats), R), dtype=bool)
-        if simple_pats:
-            pats, plens = encode_patterns(list(simple_pats))
-            simple_hits = ops.match_any(
-                chunk.data, pats, plens[:, None],
-                backend=self.backend, r_blk=self.r_blk,
-            )
-        kv_hits = np.zeros((len(kv_pairs), R), dtype=bool)
-        for (k, v), idx in kv_pairs.items():
-            kv_hits[idx] = ops.match_key_value(
-                chunk.data, k, v, backend=self.backend, r_blk=self.r_blk
-            )
-
-        # 2) combine into per-clause bits (OR over disjuncts)
-        out = np.zeros((len(clauses), R), dtype=bool)
-        for ci, cl in enumerate(clauses):
-            row = out[ci]
-            for t in cl.terms:
-                if t.kind is Kind.KEY_VALUE:
-                    k, v = t.patterns()
-                    row |= kv_hits[kv_pairs[(k, v)]]
-                else:
-                    row |= simple_hits[simple_pats[t.patterns()[0]]]
-        return out
+        fused = self.eval_fused(chunk, clauses)
+        return bitvector.unpack(fused.words, chunk.n_records)
 
     def eval_packed(self, chunk: Chunk, clauses: Sequence[Clause]) -> np.ndarray:
-        return bitvector.pack(self.eval(chunk, clauses))
+        return self.eval_fused(chunk, clauses).words

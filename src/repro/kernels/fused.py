@@ -1,0 +1,204 @@
+"""Fused single-pass pushdown kernel: chunk -> packed clause bitvectors.
+
+ONE ``pallas_call`` evaluates an entire pushdown plan on a dense chunk
+(DESIGN.md §3.4).  The seed path needed 1 launch for the simple-pattern set
+plus one launch *per key-value pair* (each a fresh jit specialization),
+then round-tripped bool hits to the host to OR disjuncts, pack bitvectors
+in numpy, and launched ``bitvector_reduce`` again for the load mask.  Here
+the whole chunk -> packed-bitvector path stays on device:
+
+  grid = (R/R_blk, P)   (predicate index innermost, so the record tile
+                         stays resident in VMEM across all P predicates)
+
+Per grid step (rb, p) the kernel evaluates predicate ``p`` on the record
+tile with *masked dynamic lengths* — both the simple any-position match and
+the key-value match reuse :func:`masked_window_eq`, so one compilation
+serves every pattern in the plan (no per-(mk, mv) specializations) — and
+ORs the per-record hits into a (C, R_blk) clause accumulator through the
+static clause-membership matrix.  At ``p == P-1`` it bit-packs the
+accumulator into uint32 words (little-endian, ``core.bitvector`` layout),
+ORs the clause words into the ingest load mask, and accumulates per-clause
+popcounts, emitting all three outputs from the same pass.
+
+Predicate encoding (built once per plan by ``kernels.engine``):
+  * ``keys  uint8[P, M]`` / ``klens int32[P, 1]`` — the pattern (simple) or
+    the key pattern (key-value), zero-padded to the plan-wide max ``M``;
+  * ``vals  uint8[P, M]`` / ``vlens int32[P, 1]`` — the value pattern
+    (key-value only; zeros otherwise);
+  * ``kinds int32[P, 1]`` — 0 = simple any-position, 1 = key-value;
+  * ``unbounded int32[P, 1]`` — key-value degraded to unbounded suffix
+    search (value pattern contains a delimiter);
+  * ``membership uint8[C, P]`` — clause c contains predicate p.
+
+Padding rows (R padded up to R_blk) are masked via the dynamic ``n_valid``
+scalar, so jit specializations key on the *bucketed* shape only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .substring_match import (
+    DELIM_BRACE,
+    DELIM_COMMA,
+    _segmented_suffix_any,
+    masked_window_eq,
+    select_shift_left,
+)
+
+WORD_BITS = 32
+
+
+def _clause_bitvectors_kernel(
+    key_ref, klen_ref, val_ref, vlen_ref, kind_ref, unb_ref, mem_ref, nv_ref,
+    data_ref, bv_ref, or_ref, cnt_ref, acc_ref, *, max_key_len: int,
+    max_val_len: int, n_clauses: int, r_blk: int,
+):
+    rb = pl.program_id(0)
+    p = pl.program_id(1)
+    n_p = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _fresh_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(p == 0, rb == 0))
+    def _fresh_chunk():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    data = data_ref[...]                       # (R_blk, L) uint8
+    key = key_ref[...]                         # (1, M)
+    mk = klen_ref[0, 0]
+    mv = vlen_ref[0, 0]
+    is_kv = kind_ref[0, 0] > 0
+
+    # first-character prefilter: the found/not-found cost asymmetry — a tile
+    # with zero candidate windows skips the O(M) inner reduction entirely.
+    first = data == key[0, 0]
+
+    def _eval_predicate():
+        key_hit = masked_window_eq(data, key[0], mk, max_key_len)
+
+        def _simple():
+            return jnp.logical_or(jnp.any(key_hit, axis=1), mk == 0)
+
+        def _key_value():
+            val_hit = masked_window_eq(data, val_ref[0], mv, max_val_len)
+
+            def _have_values():
+                # unbounded search == segmented search with no delimiters
+                delim = jnp.logical_and(
+                    jnp.logical_or(data == DELIM_COMMA, data == DELIM_BRACE),
+                    unb_ref[0, 0] == 0,
+                )
+                cond = _segmented_suffix_any(val_hit, delim)
+                # value region starts mk bytes after the key (dynamic mk)
+                region = select_shift_left(cond, mk, max_key_len)
+                return jnp.any(jnp.logical_and(key_hit, region), axis=1)
+
+            # second prefilter: no value window in the tile -> no match,
+            # skip the scan + shift chain (the expensive stages)
+            return lax.cond(
+                jnp.any(val_hit), _have_values,
+                lambda: jnp.zeros((r_blk,), dtype=jnp.bool_),
+            )
+
+        return lax.cond(is_kv, _key_value, _simple)
+
+    hit = lax.cond(
+        jnp.logical_or(jnp.any(first), mk == 0),
+        _eval_predicate,
+        lambda: jnp.zeros((r_blk,), dtype=jnp.bool_),
+    )
+
+    mem_col = mem_ref[...]                     # (C, 1) uint8
+    acc_ref[...] = acc_ref[...] | (mem_col * hit[None, :].astype(jnp.uint8))
+
+    @pl.when(p == n_p - 1)
+    def _emit():
+        row = rb * r_blk + lax.broadcasted_iota(jnp.int32, (1, r_blk), 1)
+        valid = (row < nv_ref[0, 0]).astype(jnp.uint8)
+        bits = acc_ref[...] * valid            # (C, R_blk) in {0, 1}
+
+        shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+        grouped = bits.astype(jnp.uint32).reshape(
+            n_clauses, r_blk // WORD_BITS, WORD_BITS
+        )
+        words = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+        bv_ref[...] = words
+
+        or_words = words[0]
+        for c in range(1, n_clauses):          # C is a static block dim
+            or_words = jnp.bitwise_or(or_words, words[c])
+        or_ref[0, :] = or_words
+
+        cnt_ref[...] += jnp.sum(bits, axis=1, dtype=jnp.int32)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_blk", "interpret")
+)
+def clause_bitvectors_fused(
+    data: jnp.ndarray,        # uint8[R, L]    (R % r_blk == 0)
+    keys: jnp.ndarray,        # uint8[P, M]
+    klens: jnp.ndarray,       # int32[P, 1]
+    vals: jnp.ndarray,        # uint8[P, M]
+    vlens: jnp.ndarray,       # int32[P, 1]
+    kinds: jnp.ndarray,       # int32[P, 1]
+    unbounded: jnp.ndarray,   # int32[P, 1]
+    membership: jnp.ndarray,  # uint8[C, P]
+    n_valid: jnp.ndarray,     # int32[1, 1]
+    *,
+    r_blk: int = 256,
+    interpret: bool = True,
+):
+    """(words uint32[C, R/32], or_words uint32[R/32], counts int32[C])."""
+    R, L = data.shape
+    P, Mk = keys.shape
+    Mv = vals.shape[1]
+    C = membership.shape[0]
+    if R % r_blk or r_blk % WORD_BITS:
+        raise ValueError(f"R={R} not a multiple of r_blk={r_blk} (mult of 32)")
+    W = R // WORD_BITS
+    w_blk = r_blk // WORD_BITS
+    grid = (R // r_blk, P)
+    kernel = functools.partial(
+        _clause_bitvectors_kernel,
+        max_key_len=Mk, max_val_len=Mv, n_clauses=C, r_blk=r_blk,
+    )
+    words, or_words, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Mk), lambda rb, p: (p, 0)),     # keys
+            pl.BlockSpec((1, 1), lambda rb, p: (p, 0)),      # klens
+            pl.BlockSpec((1, Mv), lambda rb, p: (p, 0)),     # vals
+            pl.BlockSpec((1, 1), lambda rb, p: (p, 0)),      # vlens
+            pl.BlockSpec((1, 1), lambda rb, p: (p, 0)),      # kinds
+            pl.BlockSpec((1, 1), lambda rb, p: (p, 0)),      # unbounded
+            pl.BlockSpec((C, 1), lambda rb, p: (0, p)),      # membership col
+            pl.BlockSpec((1, 1), lambda rb, p: (0, 0)),      # n_valid
+            pl.BlockSpec((r_blk, L), lambda rb, p: (rb, 0)),  # record tile
+        ],
+        out_specs=[
+            pl.BlockSpec((C, w_blk), lambda rb, p: (0, rb)),
+            pl.BlockSpec((1, w_blk), lambda rb, p: (0, rb)),
+            pl.BlockSpec((C, 1), lambda rb, p: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, W), jnp.uint32),
+            jax.ShapeDtypeStruct((1, W), jnp.uint32),
+            jax.ShapeDtypeStruct((C, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            # clause accumulator for the current record tile
+            pltpu.VMEM((C, r_blk), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(keys, klens, vals, vlens, kinds, unbounded, membership, n_valid, data)
+    return words, or_words[0], counts[:, 0]

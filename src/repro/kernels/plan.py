@@ -1,0 +1,116 @@
+"""Plan compilation: clause list -> device-ready predicate tables.
+
+Three levels of dedup (DESIGN.md §3.3), each mirroring how real plans
+repeat themselves:
+
+  * term-level   — a disjunct shared by several clauses gets ONE predicate
+    slot (``core.client.dedup_terms``);
+  * key-level    — key-value predicates over the same field share one
+    window-equality pass (``"age" = 7`` and ``"age" = 11`` search the same
+    ``'"age"'`` pattern), and simple patterns live in the SAME unique-key
+    table, so ``age != NULL`` reuses it too;
+  * value-level  — the value-side confinement scan depends only on
+    ``(value pattern, unbounded)``, so repeated values across fields share
+    one scan.
+
+``CompiledPlan`` carries both representations: the unique tables + index
+vectors (consumed by the xla oracle) and the flat per-predicate arrays
+(consumed by the Pallas kernel, whose grid is per-predicate).  Predicates
+are ordered simple-first so the simple/key-value boundary is a static
+split point.  Key and value patterns get SEPARATE padded widths — values
+are typically much shorter than quoted keys, so the value window loops
+stay tight.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.client import dedup_terms, encode_patterns
+from repro.core.predicates import Clause, Kind
+
+_PAT_ALIGN = 8  # pattern width bucket (stabilizes jit specializations)
+
+
+def _bucket(n: int) -> int:
+    return max(((n + _PAT_ALIGN - 1) // _PAT_ALIGN) * _PAT_ALIGN, _PAT_ALIGN)
+
+
+@dataclass(frozen=True)
+class CompiledPlan:
+    """Device-ready encoding of a clause list (see kernels.fused/ref)."""
+
+    # flat per-predicate arrays (Pallas kernel path), simple-first
+    keys: np.ndarray        # uint8[P, Mk]
+    klens: np.ndarray       # int32[P]
+    vals: np.ndarray        # uint8[P, Mv]
+    vlens: np.ndarray       # int32[P]
+    kinds: np.ndarray       # int32[P]   0 = simple, 1 = key-value
+    unbounded: np.ndarray   # int32[P]
+    membership: np.ndarray  # uint8[C, P]
+    # unique tables + index vectors (xla oracle path)
+    ukeys: np.ndarray       # uint8[Uk, Mk]
+    uklens: np.ndarray      # int32[Uk]
+    uvals: np.ndarray       # uint8[Uv, Mv]
+    uvlens: np.ndarray      # int32[Uv]
+    uunb: np.ndarray        # int32[Uv]  unbounded flag per unique value
+    key_ids: np.ndarray     # int32[P]   predicate -> unique key row
+    val_ids: np.ndarray     # int32[P]   predicate -> unique value row (kv)
+
+    @property
+    def n_preds(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n_simple(self) -> int:
+        return int(np.sum(self.kinds == 0))
+
+    @property
+    def n_clauses(self) -> int:
+        return self.membership.shape[0]
+
+
+def compile_plan(clauses: Sequence[Clause]) -> CompiledPlan:
+    terms, membership = dedup_terms(clauses)
+    rows = []
+    for ti, t in enumerate(terms):
+        pats = t.patterns()
+        if t.kind is Kind.KEY_VALUE and len(pats[1]) > 0:
+            k, v = pats
+            rows.append((ti, k, v, 1, int(b"," in v or b"}" in v)))
+        else:
+            # key-value with an empty value pattern degrades to key presence
+            rows.append((ti, pats[0], b"", 0, 0))
+    rows.sort(key=lambda r: r[3])  # stable: simple block, then key-value
+    P = len(rows)
+
+    uk: dict[bytes, int] = {}
+    uv: dict[tuple[bytes, int], int] = {}
+    key_ids = np.zeros((P,), np.int32)
+    val_ids = np.zeros((P,), np.int32)
+    kinds = np.zeros((P,), np.int32)
+    unb = np.zeros((P,), np.int32)
+    perm = np.zeros((P,), np.int64)
+    for i, (ti, k, v, kind, u) in enumerate(rows):
+        key_ids[i] = uk.setdefault(k, len(uk))
+        if kind:
+            val_ids[i] = uv.setdefault((v, u), len(uv))
+        kinds[i], unb[i], perm[i] = kind, u, ti
+
+    Mk = _bucket(max((len(k) for k in uk), default=1))
+    Mv = _bucket(max((len(v) for v, _ in uv), default=1))
+    ukeys, uklens = encode_patterns(list(uk), max_len=Mk)
+    uvals, uvlens = encode_patterns([v for v, _ in uv], max_len=Mv)
+    uunb = np.array([u for _, u in uv], np.int32).reshape(-1)
+    return CompiledPlan(
+        keys=ukeys[key_ids], klens=uklens[key_ids],
+        vals=uvals[val_ids] if len(uv) else np.zeros((P, Mv), np.uint8),
+        vlens=np.where(kinds > 0, uvlens[val_ids] if len(uv) else 0, 0
+                       ).astype(np.int32),
+        kinds=kinds, unbounded=unb,
+        membership=membership[:, perm].astype(np.uint8),
+        ukeys=ukeys, uklens=uklens, uvals=uvals, uvlens=uvlens, uunb=uunb,
+        key_ids=key_ids, val_ids=val_ids,
+    )

@@ -86,6 +86,116 @@ def key_value_match_ref(data, key_pat, val_pat, *, mk: int, mv: int, unbounded: 
     return jnp.any(hit, axis=1).astype(jnp.uint8)[None, :]
 
 
+def _masked_window_eq(data, pat, m, max_len: int):
+    """Window-eq with DYNAMIC length m (mask positions where i >= m)."""
+    acc = data == pat[0]
+    for i in range(1, max_len):
+        acc = jnp.logical_and(
+            acc, jnp.logical_or(_shift_left(data, i) == pat[i], i >= m)
+        )
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_simple",))
+def clause_bitvectors_ref(data, ukeys, uklens, uvals, uvlens, uunb,
+                          key_ids, val_ids, membership, n_valid,
+                          *, n_simple: int):
+    """jnp oracle for the fused pushdown pass (kernels.fused).
+
+    Same contract as :func:`repro.kernels.fused.clause_bitvectors_fused`
+    minus the R-blocking: returns packed per-clause words ``uint32[C, W]``,
+    the OR'd load-mask words ``uint32[W]`` and per-clause popcounts
+    ``int32[C]``, with rows >= ``n_valid`` masked out.
+
+    Exploits the plan structure (``kernels.plan.compile_plan``):
+    predicates arrive simple-first with a static ``n_simple`` boundary so
+    the simple block skips the key-value machinery; window equality runs
+    once per UNIQUE key pattern (shared by simple patterns and key-value
+    keys) and the value-confinement scan once per UNIQUE (value,
+    unbounded) pair — per-predicate work is just a roll + AND.
+    """
+    from repro.core import bitvector
+
+    R, L = data.shape
+    Uk, Mk = ukeys.shape
+    Uv, Mv = uvals.shape
+    P = key_ids.shape[0]
+
+    # one window-equality pass per unique key/simple pattern
+    ukey_hit = jax.vmap(
+        lambda k, m: _masked_window_eq(data, k, m, Mk))(ukeys, uklens)
+    any_key = jnp.any(ukey_hit, axis=2)                     # (Uk, R)
+
+    parts = []
+    if n_simple:
+        ks = key_ids[:n_simple]
+        parts.append(jnp.logical_or(any_key[ks], (uklens[ks] == 0)[:, None]))
+    if n_simple < P:
+        delim_raw = jnp.logical_or(data == DELIM_COMMA, data == DELIM_BRACE)
+
+        # positions/counts are bounded by the (static) stride L: int16
+        # halves scan traffic for normal chunks, int32 keeps correctness
+        # for strides past the int16 sentinel (no silent wraparound)
+        pos_dt = jnp.int16 if L < 0x7FFF else jnp.int32
+        big = jnp.array(0x7FFF if L < 0x7FFF else 0x7FFFFFFF, dtype=pos_dt)
+
+        def one_val(val, mv, unb):
+            """cond[p] = usable value occurrence at/after p, same segment.
+
+            Reformulated around the NEAREST next value hit: delimiter
+            counts are monotone, so if the nearest hit nv[p] crosses a
+            delimiter every farther hit does too.  One min-scan + one
+            gather — cheaper than the paired int32 max-scan-with-resets
+            the stand-alone kernel uses.
+            """
+            val_hit = _masked_window_eq(data, val, mv, Mv)
+            delim = jnp.logical_and(delim_raw, unb == 0)
+            pos = lax.broadcasted_iota(pos_dt, val_hit.shape, 1)
+            usable = jnp.where(
+                jnp.logical_and(val_hit, jnp.logical_not(delim)), pos, big)
+            nv = jnp.flip(
+                lax.associative_scan(
+                    jnp.minimum, jnp.flip(usable, axis=1), axis=1),
+                axis=1,
+            )
+            # E[p] = # delimiters in [0, p): none inside [p, nv[p])
+            dinc = jnp.cumsum(delim.astype(pos_dt), axis=1, dtype=pos_dt)
+            excl = dinc - delim.astype(pos_dt)
+            hit_found = nv < big
+            e_at_nv = jnp.take_along_axis(
+                excl, jnp.where(hit_found, nv, 0).astype(jnp.int32), axis=1)
+            return jnp.logical_and(hit_found, e_at_nv == excl)
+
+        # one confinement scan per unique (value, unbounded) pair
+        ucond = jax.vmap(one_val)(uvals, uvlens, uunb)      # (Uv, R, L)
+        jpos = lax.broadcasted_iota(jnp.int32, (R, L), 1)
+
+        def one_kv(kid, vid):
+            # cond[j + mk] via one dynamic roll (O(L) vs the O(Mk * L)
+            # select-over-static-shifts chain the Pallas kernel needs); a
+            # key window at j only fits when j + mk <= L, so wrap-around
+            # is masked.
+            mk = uklens[kid]
+            region = jnp.where(
+                jpos < L - mk, jnp.roll(ucond[vid], -mk, axis=1), False)
+            return jnp.any(jnp.logical_and(ukey_hit[kid], region), axis=1)
+
+        parts.append(jax.vmap(one_kv)(key_ids[n_simple:], val_ids[n_simple:]))
+    hits = jnp.concatenate(parts, axis=0)                   # bool[P, R]
+    valid = jnp.arange(R, dtype=jnp.int32) < n_valid[0, 0]
+    # clause OR over member predicates == membership @ hits > 0
+    combined = jnp.einsum(
+        "cp,pr->cr", membership.astype(jnp.int32), hits.astype(jnp.int32)
+    )
+    bits = jnp.logical_and(combined > 0, valid[None, :])
+    words = bitvector.jnp_pack(bits)
+    or_words = lax.reduce(
+        words, jnp.uint32(0), lambda a, b: jnp.bitwise_or(a, b), (0,)
+    )
+    counts = jnp.sum(bits, axis=1, dtype=jnp.int32)
+    return words, or_words, counts
+
+
 @jax.jit
 def bitvector_reduce_ref(bitvecs):
     and_w = lax.reduce(

@@ -46,6 +46,34 @@ def _shift_left(x: jnp.ndarray, i: int) -> jnp.ndarray:
     return jnp.concatenate([x[:, i:], pad], axis=1)
 
 
+def masked_window_eq(data: jnp.ndarray, pat_row: jnp.ndarray, m: jnp.ndarray,
+                     max_len: int) -> jnp.ndarray:
+    """(R_blk, L) bool: window at j equals pat_row[:m], m DYNAMIC (masked).
+
+    The masking trick from :func:`multi_match_any`: positions where the
+    pattern is already exhausted (i >= m) stay valid, so one compilation
+    serves every pattern length up to ``max_len``.  Shared with the fused
+    pushdown kernel (DESIGN.md §3).
+    """
+    acc = data == pat_row[0]
+    for i in range(1, max_len):
+        eq = _shift_left(data, i) == pat_row[i]
+        acc = jnp.logical_and(acc, jnp.logical_or(eq, i >= m))
+    return acc
+
+
+def select_shift_left(x: jnp.ndarray, n: jnp.ndarray, max_shift: int) -> jnp.ndarray:
+    """x[:, j+n] for DYNAMIC n in [0, max_shift] via select-over-static-shifts.
+
+    TPU lanes cannot gather by a runtime offset cheaply; a chain of
+    ``max_shift`` static shifts + selects keeps everything on the VPU.
+    """
+    out = x
+    for i in range(1, max_shift + 1):
+        out = jnp.where(n == i, _shift_left(x, i), out)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # kernel A: multi-pattern any-position match
 # ---------------------------------------------------------------------------

@@ -16,6 +16,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro._compat import jaxapi as _compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -30,10 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "jax import)"
         )
     dev_array = np.array(devices[:need]).reshape(shape)
-    return Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _compat.make_mesh(dev_array, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
@@ -42,7 +41,4 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     devices = jax.devices()
     if len(devices) < need:
         raise RuntimeError(f"need {need} devices, have {len(devices)}")
-    return Mesh(
-        np.array(devices[:need]).reshape(shape), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _compat.make_mesh(np.array(devices[:need]).reshape(shape), axes)

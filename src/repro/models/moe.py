@@ -58,7 +58,9 @@ def apply_moe_sharded(p, x, cfg: ModelConfig):
     from jax.sharding import PartitionSpec as P
 
     m: MoEConfig = cfg.moe
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.dist.sharding import current_mesh
+
+    mesh = current_mesh()
     n_model = mesh.shape["model"]
     baxes = tuple(a for a in ("pod", "data")
                   if a in mesh.shape and mesh.shape[a] > 1
@@ -148,9 +150,11 @@ def apply_moe_sharded(p, x, cfg: ModelConfig):
 
 
 def moe_sharding_available(cfg: ModelConfig) -> bool:
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.dist.sharding import current_mesh
+
+    mesh = current_mesh()
     try:
-        if mesh is None or mesh.empty or "model" not in mesh.shape:
+        if mesh is None or "model" not in mesh.shape:
             return False
         n_model = mesh.shape["model"]
         return n_model > 1 and cfg.moe.n_experts % n_model == 0

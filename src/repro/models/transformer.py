@@ -40,9 +40,11 @@ from .layers import Leaf, apply_mlp, embed_tokens, init_embeddings, init_mlp, mk
 def _use_sharded_decode(alloc: int) -> bool:
     """Flash-decoding shard_map path: on when a model axis exists and the
     cache's sequence dim divides it (EXPERIMENTS.md §Perf, decode cells)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.dist.sharding import current_mesh
+
+    mesh = current_mesh()
     try:
-        return (mesh is not None and not mesh.empty and "model" in mesh.shape
+        return (mesh is not None and "model" in mesh.shape
                 and mesh.shape["model"] > 1 and alloc % mesh.shape["model"] == 0)
     except Exception:
         return False

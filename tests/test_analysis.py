@@ -77,7 +77,9 @@ def _flops_from_compiled(cfg, shape, kind="train"):
         def fn(params, inputs):
             return model.prefill(params, inputs, s_alloc=shape.seq_len + 8)
         compiled = jax.jit(fn).lower(values_sds, specs).compile()
-    return float(compiled.cost_analysis()["flops"])
+    from repro._compat.jaxapi import cost_analysis
+
+    return float(cost_analysis(compiled)["flops"])
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v3-671b", "recurrentgemma-9b"])
