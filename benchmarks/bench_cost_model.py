@@ -11,9 +11,7 @@ from __future__ import annotations
 
 import json
 
-import numpy as np
-
-from repro.core.client import NumpyEngine, PythonEngine, encode_chunk
+from repro.core.client import NumpyEngine, encode_chunk
 from repro.core.cost_model import calibrate
 from repro.core.predicates import exact, key_value, substring
 from repro.data.datasets import generate_records

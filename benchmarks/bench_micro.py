@@ -10,19 +10,18 @@
 from __future__ import annotations
 
 import json
-import time
 
 import numpy as np
 
 from repro.core.client import NumpyEngine, encode_chunk
-from repro.core.predicates import Clause, Query, clause, substring
+from repro.core.predicates import Query
 from repro.core.server import (
     CiaoStore, DataSkippingScanner, FullScanBaseline, PushdownPlan,
 )
 from repro.core.workload import Workload, estimate_selectivities
 from repro.data.datasets import generate_records, predicate_pool
 
-from .common import make_workload, run_end_to_end
+from .common import make_workload
 
 
 def _ingest(records, plan, chunk_size=1000):

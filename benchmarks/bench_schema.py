@@ -1,0 +1,133 @@
+"""Shape validation for benchmark JSON artifacts (the CI smoke gate).
+
+``BENCH_kernels.json`` is the tracked perf-trajectory artifact: PR-over-PR
+numbers are only comparable if every writer emits the same shape.  This
+module is the single source of truth for that shape — ``benchmarks.run``
+validates before writing, CI validates the emitted files, and the tier-1
+suite validates the tracked copy — so the artifact can never regress to a
+malformed form.
+
+    PYTHONPATH=src python -m benchmarks.bench_schema FILE [FILE ...]
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+
+class SchemaError(ValueError):
+    """A benchmark artifact does not match its declared shape."""
+
+
+def _require(cond: bool, where: str, msg: str) -> None:
+    if not cond:
+        raise SchemaError(f"{where}: {msg}")
+
+
+def _check_fields(row: dict, spec: dict[str, type | tuple], where: str) -> None:
+    _require(isinstance(row, dict), where, f"expected object, got {type(row).__name__}")
+    for key, typ in spec.items():
+        _require(key in row, where, f"missing key {key!r}")
+        _require(isinstance(row[key], typ) and not (
+            typ is not bool and isinstance(row[key], bool)),
+            where, f"{key!r} expected {typ}, got {row[key]!r}")
+
+
+_ENGINE_ROW = {
+    "engine": str,
+    "records_per_s": numbers.Integral,
+    "us_per_record": numbers.Real,
+    "effective_GBps": numbers.Real,
+}
+
+_FUSED_ROW = {
+    "backend": str,
+    "n_records": numbers.Integral,
+    "n_clauses": numbers.Integral,
+    "n_kv_pairs": numbers.Integral,
+    "split_us_per_record": numbers.Real,
+    "fused_us_per_record": numbers.Real,
+    "speedup": numbers.Real,
+    "launches_split": numbers.Integral,
+    "launches_fused": numbers.Integral,
+}
+
+
+def validate_kernels(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid kernels artifact."""
+    _require(isinstance(obj, dict), "kernels", "top level must be an object")
+    for section, spec, min_rows in (
+        ("engines", _ENGINE_ROW, 2),
+        ("fused_vs_split", _FUSED_ROW, 1),
+    ):
+        _require(section in obj, "kernels", f"missing section {section!r}")
+        rows = obj[section]
+        _require(isinstance(rows, list), section, "must be a list")
+        _require(len(rows) >= min_rows, section,
+                 f"expected >= {min_rows} rows, got {len(rows)}")
+        for i, row in enumerate(rows):
+            _check_fields(row, spec, f"{section}[{i}]")
+    for i, row in enumerate(obj["engines"]):
+        _require(row["us_per_record"] > 0, f"engines[{i}]",
+                 "us_per_record must be positive")
+    for i, row in enumerate(obj["fused_vs_split"]):
+        _require(row["launches_fused"] == 1, f"fused_vs_split[{i}]",
+                 "the fused path is ONE launch by contract")
+
+
+def validate_replan(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid replan artifact."""
+    _require(isinstance(obj, dict), "replan", "top level must be an object")
+    for key in ("budget_us", "static", "adaptive",
+                "post_drift_scan_speedup", "eff_loading_ratio_delta"):
+        _require(key in obj, "replan", f"missing key {key!r}")
+    for side in ("static", "adaptive"):
+        _check_fields(obj[side], {
+            "epoch": numbers.Integral,
+            "eff_loading_ratio": numbers.Real,
+            "post_drift_scan_s": numbers.Real,
+        }, side)
+    _require(obj["adaptive"]["epoch"] >= 1, "replan",
+             "adaptive run never advanced the plan epoch")
+
+
+_VALIDATORS = {
+    "bench_kernels.json": validate_kernels,
+    "BENCH_kernels.json": validate_kernels,
+    "bench_replan.json": validate_replan,
+}
+
+
+def validate_file(path: str) -> str:
+    """Validate one artifact by filename convention; returns the kind."""
+    name = path.rsplit("/", 1)[-1]
+    validator = _VALIDATORS.get(name)
+    if validator is None:
+        raise SchemaError(f"no schema registered for {name!r}")
+    with open(path) as f:
+        try:
+            obj = json.load(f)
+        except json.JSONDecodeError as e:
+            raise SchemaError(f"{path}: not valid JSON ({e})") from e
+    validator(obj)
+    return name
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.bench_schema FILE [FILE ...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        try:
+            validate_file(path)
+        except SchemaError as e:
+            print(f"SCHEMA FAIL {path}: {e}", file=sys.stderr)
+            return 1
+        print(f"schema ok: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core.predicates import Query, clause, key_value
 from repro.core.selection import (
-    SelectionProblem, brute_force, celf_greedy, combined_celf, combined_greedy,
+    SelectionProblem, brute_force, celf_greedy, combined_greedy,
     greedy,
 )
 

@@ -9,16 +9,15 @@ baseline(budget=0) time / CIAO time.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.client import NumpyEngine, encode_chunk
-from repro.core.cost_model import CostModel, calibrate
+from repro.core.cost_model import CostModel
 from repro.core.planner import build_plan
-from repro.core.predicates import Query
 from repro.core.server import CiaoStore, DataSkippingScanner, FullScanBaseline, PushdownPlan
-from repro.core.workload import Workload, estimate_selectivities, generate_workload
+from repro.core.workload import Workload, generate_workload
 from repro.data.datasets import generate_records, predicate_pool
 
 

@@ -9,20 +9,45 @@ and writes the detailed JSON artifacts under artifacts/.
 from __future__ import annotations
 
 import argparse
+import json
 import os
-import sys
-import time
 
 
 def _row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def write_kernels_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_kernels.json",
+) -> list[str]:
+    """Write the kernels benchmark JSON; returns the paths written.
+
+    The schema gate runs FIRST (a malformed artifact is a bug, not data).
+    Quick runs only ever write under ``artifacts_dir`` — the tracked
+    perf-trajectory file records full-size numbers exclusively, so a CI
+    smoke run can never clobber PR-over-PR comparability.
+    """
+    from .bench_schema import validate_kernels
+
+    validate_kernels(out)
+    detail = os.path.join(artifacts_dir, "bench_kernels.json")
+    with open(detail, "w") as f:
+        json.dump(out, f, indent=1)
+    written = [detail]
+    if not quick:
+        with open(tracked_path, "w") as f:
+            json.dump(out, f, indent=1)
+        written.append(tracked_path)
+    return written
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None,
-                    help="comma list: e2e,micro,cost,selection,kernels,roofline")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list: e2e,micro,cost,selection,kernels,replan,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -35,8 +60,6 @@ def main() -> None:
         n = 6000 if args.quick else 20000
         rows = bench_end_to_end.run(n_records=n,
                                     n_queries_exec=20 if args.quick else 60)
-        import json
-
         with open("artifacts/bench_end_to_end.json", "w") as f:
             json.dump(rows, f, indent=1)
         best = {}
@@ -83,8 +106,6 @@ def main() -> None:
         ))
 
     if only is None or "kernels" in only:
-        import json
-
         from . import bench_kernels
 
         out = bench_kernels.main(n_records=1500 if args.quick else 4000)
@@ -97,14 +118,27 @@ def main() -> None:
                 f"split_{r['split_us_per_record']}us;x{r['speedup']};"
                 f"launches_{r['launches_split']}->{r['launches_fused']}",
             ))
-        with open("artifacts/bench_kernels.json", "w") as f:
+        write_kernels_artifacts(out, quick=args.quick)
+
+    if only is None or "replan" in only:
+        from . import bench_replan
+        from .bench_schema import validate_replan
+
+        out = bench_replan.run(
+            n_records=4096 if args.quick else 16384,
+            queries_per_phase=80 if args.quick else 150,
+            n_tail_queries=30 if args.quick else 60,
+        )
+        validate_replan(out)
+        with open("artifacts/bench_replan.json", "w") as f:
             json.dump(out, f, indent=1)
-        if not args.quick:
-            # machine-readable perf-trajectory artifact (tracked in git):
-            # only full-size runs may update it, so PR-over-PR numbers
-            # stay comparable
-            with open("BENCH_kernels.json", "w") as f:
-                json.dump(out, f, indent=1)
+        csv_rows.append((
+            "replan_drift", 0.0,
+            f"scan_x{out['post_drift_scan_speedup']};"
+            f"ratio_{out['adaptive']['eff_loading_ratio']:.2f}vs"
+            f"{out['static']['eff_loading_ratio']:.2f};"
+            f"epochs_{out['adaptive']['epoch']}",
+        ))
 
     if only is None or "roofline" in only:
         from . import bench_roofline

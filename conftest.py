@@ -22,3 +22,10 @@ except ImportError:
 
     sys.modules["hypothesis"] = _shim
     sys.modules["hypothesis.strategies"] = _shim.strategies
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "ci_smoke: reduced-size end-to-end gates the CI workflow also runs",
+    )

@@ -25,7 +25,6 @@ if args.full_100m:
     import dataclasses
 
     from repro.configs import get_config
-    from repro.configs import qwen3_1_7b
 
     base = get_config("qwen3-1.7b")
     cfg_100m = dataclasses.replace(

@@ -109,7 +109,9 @@ def _analyze(comps: dict[str, _Comp]) -> None:
             # called computations
             is_while = bool(_WHILE_RE.search(line)) or " while(" in line
             body_name = cond_name = None
-            for m in re.finditer(r"(body|condition|to_apply|true_computation|false_computation)=%?([\w.\-]+)", line):
+            _role_re = (r"(body|condition|to_apply|true_computation"
+                        r"|false_computation)=%?([\w.\-]+)")
+            for m in re.finditer(_role_re, line):
                 role, name = m.group(1), m.group(2)
                 if role == "body":
                     body_name = name

@@ -15,7 +15,6 @@ for the ring's reduce+broadcast phases).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .base import SHAPES, ModelConfig, MoEConfig, MLAConfig, ShapeConfig, shape_applicable  # noqa: F401
+from .base import (  # noqa: F401
+    SHAPES, MLAConfig, ModelConfig, MoEConfig, ShapeConfig,
+    shape_applicable,
+)
 
 ARCHS: dict[str, str] = {
     "seamless-m4t-medium": "seamless_m4t_medium",

@@ -8,7 +8,7 @@ structure (GQA ratio, MoE routing, MLA ranks, block pattern, ...).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
@@ -137,7 +137,9 @@ class ModelConfig:
     def reduced(self) -> "ModelConfig":
         """Structure-preserving shrink for CPU smoke tests."""
         kw: dict = {}
-        kw["n_layers"] = min(self.n_layers, 2 if not self.block_pattern else len(self.block_pattern))
+        kw["n_layers"] = min(
+            self.n_layers,
+            2 if not self.block_pattern else len(self.block_pattern))
         kw["d_model"] = 64
         ratio = max(self.n_heads // max(self.n_kv_heads, 1), 1)
         kw["n_heads"] = 4
@@ -196,5 +198,6 @@ SHAPES: dict[str, ShapeConfig] = {
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """(runs?, reason-if-skipped) — skips documented in DESIGN.md §5."""
     if shape.name == "long_500k" and not cfg.is_subquadratic():
-        return False, "pure full-attention arch: 500k decode context is quadratic; skipped per assignment"
+        return False, ("pure full-attention arch: 500k decode context "
+                       "is quadratic; skipped per assignment")
     return True, ""

@@ -1,4 +1,14 @@
 """CIAO core: the paper's contribution (predicates, selection, loading)."""
+from .bitvector import pack, popcount, unpack  # noqa: F401
+from .client import (  # noqa: F401
+    Chunk,
+    NumpyEngine,
+    PythonEngine,
+    encode_chunk,
+    get_engine,
+)
+from .cost_model import CostModel, calibrate, fit  # noqa: F401
+from .planner import PlanReport, build_plan, plan_for_clients  # noqa: F401
 from .predicates import (  # noqa: F401
     Clause,
     Kind,
@@ -12,10 +22,12 @@ from .predicates import (  # noqa: F401
     query,
     substring,
 )
-from .bitvector import pack, unpack, popcount  # noqa: F401
-from .client import Chunk, NumpyEngine, PythonEngine, encode_chunk, get_engine  # noqa: F401
-from .cost_model import CostModel, calibrate, fit  # noqa: F401
-from .planner import PlanReport, build_plan, plan_for_clients  # noqa: F401
+from .replan import (  # noqa: F401
+    DriftSignal,
+    ReplanEvent,
+    Replanner,
+    ReplanPolicy,
+)
 from .selection import (  # noqa: F401
     SelectionProblem,
     SelectionResult,
@@ -31,5 +43,14 @@ from .server import (  # noqa: F401
     DataSkippingScanner,
     FullScanBaseline,
     PushdownPlan,
+    StaleEpochError,
+    evolve_plan,
 )
-from .workload import Workload, estimate_selectivities, generate_workload  # noqa: F401
+from .workload import (  # noqa: F401
+    DriftPhase,
+    Workload,
+    drifting_query_stream,
+    drifting_workloads,
+    estimate_selectivities,
+    generate_workload,
+)

@@ -17,7 +17,7 @@ of the cost of evaluating each simple predicate").
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 import numpy as np
@@ -56,6 +56,23 @@ class CostModel:
 
     def coefficients(self) -> np.ndarray:
         return np.array([self.k1, self.k2, self.k3, self.k4, self.c])
+
+    def scaled(self, factor: float) -> "CostModel":
+        """Multiplicatively recalibrated copy (online feedback, §V-D).
+
+        Clients report measured whole-plan eval time per record; the ratio
+        observed/predicted recalibrates every coefficient at once.  This is
+        the cheap online complement to the full regression refit
+        (:func:`fit`): it corrects hardware-speed drift without needing
+        per-pattern probe timings on the client.
+        """
+        if factor <= 0:
+            raise ValueError(f"scale factor must be positive, got {factor}")
+        return CostModel(
+            k1=self.k1 * factor, k2=self.k2 * factor,
+            k3=self.k3 * factor, k4=self.k4 * factor,
+            c=self.c * factor, avg_record_len=self.avg_record_len,
+        )
 
 
 @dataclass
@@ -99,7 +116,9 @@ def fit(
         k3=float(coef[2]),
         k4=float(coef[3]),
         c=float(coef[4]),
-        avg_record_len=float(avg_record_len if avg_record_len is not None else np.mean(record_lens)),
+        avg_record_len=float(
+            avg_record_len if avg_record_len is not None
+            else np.mean(record_lens)),
     )
     return CalibrationResult(
         model=model,
@@ -107,6 +126,43 @@ def fit(
         n_probes=len(y),
         residual_us=float(np.sqrt(ss_res / max(len(y), 1))),
     )
+
+
+def calibrate_scaled(
+    records: Sequence[bytes],
+    probe_clauses: Sequence[Clause],
+    engine,
+    *,
+    base: CostModel | None = None,
+    sel: dict[Clause, float] | None = None,
+    repeats: int = 3,
+) -> CostModel:
+    """Whole-plan timed-probe recalibration on a production engine (§V-D).
+
+    Times ``engine.eval_fused`` over the probe clause set on the encoded
+    record sample and scales ``base`` by observed/predicted — the same
+    multiplicative recalibration the replanner applies online, so every
+    clause cost stays positive (an unconstrained :func:`fit` does not
+    guarantee that).  Size the probe like the plans the budget will buy:
+    vectorized engines amortize shared chunk scans, so probing with a much
+    larger plan understates live per-clause cost.
+    """
+    from .client import encode_chunk
+    from .workload import estimate_selectivities
+
+    base = base or CostModel()
+    if sel is None:
+        sel = estimate_selectivities(probe_clauses, records)
+    predicted_us = sum(base.clause_cost(c, sel[c]) for c in probe_clauses)
+    chunk = encode_chunk(records)
+    engine.eval_fused(chunk, probe_clauses)  # warm caches / jit
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        engine.eval_fused(chunk, probe_clauses)
+        best = min(best, time.perf_counter() - t0)
+    observed_us = best / max(chunk.n_records, 1) * 1e6
+    return base.scaled(max(observed_us / max(predicted_us, 1e-9), 1e-3))
 
 
 def calibrate(

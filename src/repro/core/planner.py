@@ -12,7 +12,7 @@ so under-powered clients push fewer predicates (possibly none).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 from .cost_model import CostModel

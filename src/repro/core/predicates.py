@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import enum
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Iterable, Sequence
 
 
@@ -202,6 +202,26 @@ def clause(*terms: SimplePredicate) -> Clause:
 def query(*clauses_: Clause | SimplePredicate, freq: float = 1.0) -> Query:
     cs = tuple(c if isinstance(c, Clause) else Clause((c,)) for c in clauses_)
     return Query(cs, freq=freq)
+
+
+# ---------------------------------------------------------------------------
+# JSON-safe (de)serialization — plan persistence (server checkpoints)
+# ---------------------------------------------------------------------------
+
+def predicate_to_obj(p: SimplePredicate) -> dict:
+    return {"kind": p.kind.value, "key": p.key, "value": p.value}
+
+
+def predicate_from_obj(d: dict) -> SimplePredicate:
+    return SimplePredicate(Kind(d["kind"]), d["key"], d.get("value"))
+
+
+def clause_to_obj(c: Clause) -> list[dict]:
+    return [predicate_to_obj(t) for t in c.terms]
+
+
+def clause_from_obj(terms: Sequence[dict]) -> Clause:
+    return Clause(tuple(predicate_from_obj(t) for t in terms))
 
 
 def all_patterns(clauses_: Iterable[Clause]) -> list[bytes]:

@@ -1,0 +1,255 @@
+"""Closed-loop adaptive replanning (plan epochs) — the control plane.
+
+CIAO's planner picks a clause set from *estimated* selectivities and costs;
+this module closes the paper's feedback loop (§V workload estimation) by
+periodically re-solving the budgeted selection from what the system actually
+observed:
+
+  * **selectivity feedback** — ``CiaoStore`` accumulates live per-clause
+    popcounts from the fused client kernels; observed selectivities replace
+    the sample estimates for every currently pushed clause;
+  * **workload feedback** — the scanner logs every query; the re-solve runs
+    over a sliding window of the live workload, so a Zipf shift in which
+    clauses are *queried* moves the pushed set;
+  * **cost feedback** — clients report measured whole-plan eval timings;
+    the cost model is recalibrated online (``CostModel.scaled``, §V-D)
+    before each re-solve so budgets keep meaning wall-clock µs/record.
+
+A replan emits a new **plan epoch** (``server.evolve_plan``): surviving
+clauses keep their stable global ids, the store registers the epoch and
+keeps per-epoch stats, and the ingest coordinator broadcasts the new plan
+to every client shard mid-stream.  Invariants are in DESIGN.md §11.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .cost_model import CostModel
+from .planner import PlanReport, build_plan
+from .predicates import Clause, Query
+from .server import CiaoStore, PushdownPlan, evolve_plan
+from .workload import Workload, estimate_selectivities
+
+SEL_FLOOR = 1e-4
+
+
+@dataclass(frozen=True)
+class ReplanPolicy:
+    """When to check for drift, and how much drift triggers a replan."""
+
+    check_every_records: int = 2048   # min records ingested between checks
+    min_observe_records: int = 512    # don't trust tiny per-epoch samples
+    min_coverage: float = 0.5         # replan if < this fraction of recent
+                                      # queries has >= 1 pushed clause
+    sel_drift_threshold: float = 0.5  # replan if max relative |obs - plan|
+                                      # selectivity error exceeds this
+    sel_noise_floor: float = 0.02     # relative-error denominator floor: a
+                                      # floored 1e-4 estimate observed at
+                                      # 5e-4 is sampling noise, not drift
+    workload_window: int = 64         # recent queries used for the re-solve
+    min_window_queries: int = 8       # need this many logged queries
+    recalibrate_cost: bool = True
+    max_cost_scale: float = 100.0     # clamp for the online recalibration
+
+
+@dataclass(frozen=True)
+class DriftSignal:
+    """One drift measurement (kept in ``Replanner.history`` for telemetry)."""
+
+    coverage: float        # fraction of window queries with >= 1 pushed clause
+    sel_drift: float       # max relative observed-vs-planned selectivity error
+    n_observed: int        # records observed under the current epoch
+    n_window: int          # queries in the workload window
+
+    def triggers(self, policy: ReplanPolicy) -> str | None:
+        if self.n_observed < policy.min_observe_records:
+            return None
+        if self.n_window >= policy.min_window_queries and \
+                self.coverage < policy.min_coverage:
+            return "coverage"
+        if self.sel_drift > policy.sel_drift_threshold:
+            return "selectivity"
+        return None
+
+
+@dataclass
+class ReplanEvent:
+    """One epoch bump: what changed and why."""
+
+    epoch: int
+    reason: str
+    signal: DriftSignal
+    report: PlanReport
+    remap: np.ndarray          # new local row -> previous local row, -1 = new
+    cost_scale: float
+
+    @property
+    def n_survivors(self) -> int:
+        return int(np.sum(self.remap >= 0))
+
+    def describe(self) -> str:
+        return (
+            f"epoch {self.epoch} [{self.reason}] coverage="
+            f"{self.signal.coverage:.2f} sel_drift={self.signal.sel_drift:.2f}"
+            f" pushed={len(self.remap)} survivors={self.n_survivors}"
+            f" cost_scale={self.cost_scale:.3g}"
+        )
+
+
+class Replanner:
+    """Closed-loop planner: observe → detect drift → re-solve → bump epoch.
+
+    Wraps one :class:`CiaoStore` (single client class; per-class budgets
+    get one replanner per class store, mirroring ``plan_for_clients``).
+    Call :meth:`observe_timing` as client timing reports arrive and
+    :meth:`step` after every ingest; ``step`` returns the new
+    :class:`PushdownPlan` when it advanced the epoch, else ``None``.
+    """
+
+    def __init__(
+        self,
+        store: CiaoStore,
+        sample_records: Sequence[bytes],
+        *,
+        budget_us: float,
+        base_workload: Workload | None = None,
+        cost_model: CostModel | None = None,
+        policy: ReplanPolicy | None = None,
+        algorithm: str = "celf",
+        planned_sel: Mapping[Clause, float] | None = None,
+    ):
+        self.store = store
+        self.sample_records = list(sample_records)
+        self.budget_us = budget_us
+        self.base_workload = base_workload
+        self.cost_model = cost_model or CostModel()
+        self.policy = policy or ReplanPolicy()
+        self.algorithm = algorithm
+        # selectivity cache: sample-based estimates for pool clauses, plus
+        # the values the CURRENT plan was built with (drift reference)
+        self._sel_cache: dict[Clause, float] = dict(planned_sel or {})
+        self._planned_sel: dict[Clause, float] = {
+            c: self._sel_cache.get(c, SEL_FLOOR) for c in store.plan.clauses
+        }
+        self._records_at_last_check = 0
+        # online cost recalibration state (µs totals, predicted vs observed)
+        self._pred_us = 0.0
+        self._obs_us = 0.0
+        self.cost_scale = 1.0
+        self.history: list[ReplanEvent] = []
+
+    # -- feedback intake -----------------------------------------------------
+    def observe_timing(self, n_records: int, elapsed_s: float) -> None:
+        """Client timing report: whole-plan eval of ``n_records`` records."""
+        if n_records <= 0 or not self.store.plan.n:
+            return
+        predicted = self._predicted_plan_us() * n_records
+        self._pred_us += predicted
+        self._obs_us += elapsed_s * 1e6
+        if self.policy.recalibrate_cost and self._pred_us > 0:
+            self.cost_scale = float(np.clip(
+                self._obs_us / self._pred_us,
+                1.0 / self.policy.max_cost_scale, self.policy.max_cost_scale,
+            ))
+
+    def _predicted_plan_us(self) -> float:
+        plan = self.store.plan
+        sel = self._planned_sel
+        return sum(
+            self.cost_model.clause_cost(c, sel.get(c, SEL_FLOOR))
+            for c in plan.clauses
+        )
+
+    # -- drift detection -----------------------------------------------------
+    def _window(self) -> list[Query]:
+        return self.store.query_log[-self.policy.workload_window:]
+
+    def drift_signal(self) -> DriftSignal:
+        store = self.store
+        plan = store.plan
+        window = self._window()
+        if window and plan.n:
+            coverage = float(np.mean(
+                [1.0 if plan.pushed_in(q) else 0.0 for q in window]))
+        else:
+            coverage = 1.0 if plan.n else 0.0
+        n_obs = store.epoch_records()
+        sel_drift = 0.0
+        if plan.n and n_obs:
+            obs = store.observed_selectivities()
+            for c, i in plan.ids.items():
+                planned = max(self._planned_sel.get(c, SEL_FLOOR), SEL_FLOOR)
+                denom = max(planned, self.policy.sel_noise_floor)
+                sel_drift = max(sel_drift,
+                                abs(float(obs[i]) - planned) / denom)
+        return DriftSignal(coverage=coverage, sel_drift=sel_drift,
+                           n_observed=n_obs, n_window=len(window))
+
+    # -- the loop ------------------------------------------------------------
+    def step(self, force: bool = False) -> PushdownPlan | None:
+        """Check drift; re-solve and advance the store epoch if triggered."""
+        store = self.store
+        if not force:
+            since = store.stats.n_records - self._records_at_last_check
+            if since < self.policy.check_every_records:
+                return None
+        self._records_at_last_check = store.stats.n_records
+        signal = self.drift_signal()
+        reason = "forced" if force else signal.triggers(self.policy)
+        if reason is None:
+            return None
+        return self._replan(reason, signal)
+
+    def _replan(self, reason: str, signal: DriftSignal) -> PushdownPlan | None:
+        store = self.store
+        window = self._window()
+        if len(window) >= self.policy.min_window_queries:
+            workload = Workload(name=f"observed@{store.epoch}",
+                                queries=list(window))
+        elif self.base_workload is not None:
+            workload = self.base_workload
+        else:
+            return None
+        # merge selectivities: sample estimates for unseen pool clauses,
+        # live observed values for everything the current plan pushes
+        pool = workload.clause_pool()
+        missing = [c for c in pool if c not in self._sel_cache]
+        if missing:
+            self._sel_cache.update(
+                estimate_selectivities(missing, self.sample_records))
+        sel = {c: self._sel_cache[c] for c in pool}
+        obs = store.observed_selectivities()
+        if signal.n_observed >= self.policy.min_observe_records:
+            for c, i in store.plan.ids.items():
+                self._sel_cache[c] = max(float(obs[i]), SEL_FLOOR)
+                if c in sel:
+                    sel[c] = self._sel_cache[c]
+        cm = (self.cost_model.scaled(self.cost_scale)
+              if self.policy.recalibrate_cost else self.cost_model)
+        report = build_plan(
+            workload, self.sample_records, budget_us=self.budget_us,
+            cost_model=cm, algorithm=self.algorithm, sel=sel,
+        )
+        if set(report.plan.clauses) == set(store.plan.clauses):
+            # same selection (order is solver-dependent): an epoch bump
+            # would only reset the drift-observation sample for nothing.
+            # The observed values become the new drift reference — without
+            # this the sel-drift trigger never clears and every subsequent
+            # check would re-run the whole solve just to land here again.
+            self._planned_sel = {
+                c: self._sel_cache.get(c, sel.get(c, SEL_FLOOR))
+                for c in store.plan.clauses
+            }
+            return None
+        new_plan = evolve_plan(store.plan, report.plan.clauses)
+        remap = store.advance_epoch(new_plan)
+        self._planned_sel = {c: sel.get(c, SEL_FLOOR)
+                             for c in new_plan.clauses}
+        self.history.append(ReplanEvent(
+            epoch=new_plan.epoch, reason=reason, signal=signal,
+            report=report, remap=remap, cost_scale=self.cost_scale,
+        ))
+        return new_plan

@@ -25,25 +25,48 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Any, Iterable, Sequence
+from typing import Any, Sequence
 
 import numpy as np
 
 from . import bitvector
 from .client import Chunk
-from .predicates import Clause, Query
+from .predicates import Clause, Query, clause_from_obj, clause_to_obj
+
+
+class StaleEpochError(ValueError):
+    """A chunk evaluated under a superseded plan epoch reached ingest."""
 
 
 @dataclass
 class PushdownPlan:
-    """The selected clause set, with stable ids (paper Fig. 2 hashmap)."""
+    """The selected clause set, with stable ids (paper Fig. 2 hashmap).
+
+    ``ids`` are *local* row indices — the position of each clause's
+    bitvector row within chunks evaluated under this plan.  ``global_ids``
+    are *stable* across plan epochs: a clause that survives a replan keeps
+    its global id even when its local row moves, which is what makes
+    bitvectors ingested under epoch *k* remain queryable after epoch *k+1*
+    (DESIGN.md §11).  Epoch 0 defaults to ``global == local``.
+    """
 
     clauses: list[Clause]
     ids: dict[Clause, int] = field(default_factory=dict)
+    epoch: int = 0
+    global_ids: dict[Clause, int] = field(default_factory=dict)
+    # highest global id ever issued across the whole epoch chain — NOT the
+    # max over this plan's survivors: a gid retired two epochs ago must
+    # never be re-issued (it would alias another clause's old bitvectors)
+    gid_watermark: int = -1
 
     def __post_init__(self) -> None:
         if not self.ids:
             self.ids = {c: i for i, c in enumerate(self.clauses)}
+        if not self.global_ids:
+            self.global_ids = dict(self.ids)
+        self.gid_watermark = max(
+            self.gid_watermark,
+            max(self.global_ids.values(), default=-1))
 
     def pushed_in(self, q: Query) -> list[int]:
         return [self.ids[c] for c in q.clauses if c in self.ids]
@@ -52,13 +75,66 @@ class PushdownPlan:
     def n(self) -> int:
         return len(self.clauses)
 
+    def remap_from(self, old: "PushdownPlan") -> np.ndarray:
+        """int32[self.n]: new local row -> old local row, -1 if newly pushed.
+
+        Matched on stable global ids, so the table is valid even when a
+        clause's local bitvector row moved between epochs.
+        """
+        by_gid = {old.global_ids[c]: i for c, i in old.ids.items()}
+        out = np.full((self.n,), -1, np.int32)
+        for c, i in self.ids.items():
+            out[i] = by_gid.get(self.global_ids[c], -1)
+        return out
+
+    def to_obj(self) -> dict:
+        order = sorted(self.ids, key=self.ids.__getitem__)
+        return {
+            "epoch": self.epoch,
+            "clauses": [clause_to_obj(c) for c in order],
+            "global_ids": [self.global_ids[c] for c in order],
+            "gid_watermark": self.gid_watermark,
+        }
+
+    @classmethod
+    def from_obj(cls, d: dict) -> "PushdownPlan":
+        clauses = [clause_from_obj(t) for t in d["clauses"]]
+        return cls(
+            clauses=clauses,
+            epoch=int(d["epoch"]),
+            global_ids=dict(zip(clauses, d["global_ids"])),
+            gid_watermark=int(d.get("gid_watermark", -1)),
+        )
+
+
+def evolve_plan(prev: PushdownPlan, clauses: Sequence[Clause]) -> PushdownPlan:
+    """Next-epoch plan: surviving clauses keep their stable global ids,
+    newly pushed clauses draw fresh ids above the chain-wide watermark (a
+    gid retired in ANY earlier epoch is never re-issued)."""
+    next_gid = prev.gid_watermark + 1
+    gids: dict[Clause, int] = {}
+    for c in clauses:
+        if c in prev.global_ids:
+            gids[c] = prev.global_ids[c]
+        else:
+            gids[c] = next_gid
+            next_gid += 1
+    return PushdownPlan(clauses=list(clauses), epoch=prev.epoch + 1,
+                        global_ids=gids, gid_watermark=next_gid - 1)
+
 
 @dataclass
 class Block:
-    """One loaded block: parsed rows + bitvector metadata (uint32[P, W])."""
+    """One loaded block: parsed rows + bitvector metadata (uint32[P, W]).
+
+    ``epoch`` names the plan the bitvector rows were evaluated under —
+    row order follows that epoch's local clause ids, NOT the store's
+    current plan.
+    """
 
     rows: list[dict]
     bitvectors: np.ndarray
+    epoch: int = 0
 
     @property
     def n_rows(self) -> int:
@@ -67,10 +143,15 @@ class Block:
 
 @dataclass
 class RawRemainder:
-    """Unloaded rows of one chunk, kept as a dense uint8 sub-chunk."""
+    """Unloaded rows of one chunk, kept as a dense uint8 sub-chunk.
+
+    ``epoch``: these rows matched NO clause of that epoch's plan — they are
+    skippable exactly for queries with >= 1 clause pushed in that epoch.
+    """
 
     data: np.ndarray      # uint8[R, L]
     lengths: np.ndarray   # int32[R]
+    epoch: int = 0
 
     @property
     def n(self) -> int:
@@ -98,27 +179,119 @@ class LoadStats:
 
 
 class CiaoStore:
-    """Parsed blocks + raw remainder + per-block bitvector metadata."""
+    """Parsed blocks + raw remainder + per-block bitvector metadata.
+
+    The store is *epoch-versioned* (DESIGN.md §11): it keeps a registry of
+    every plan epoch it has ingested under, per-epoch clause statistics,
+    and tags blocks/remainders with their ingest epoch so data loaded under
+    epoch *k* stays queryable (and skippable) after a replan to *k+1*.
+    """
 
     def __init__(self, plan: PushdownPlan):
-        self.plan = plan
+        self.plan = plan                       # current epoch's plan
+        self.plans: dict[int, PushdownPlan] = {plan.epoch: plan}
         self.blocks: list[Block] = []
         self.raw: list[RawRemainder] = []
         self.jit_blocks: list[Block] = []   # promoted raw rows (no bitvectors)
         self.stats = LoadStats()
-        # per-clause match totals (client popcounts): observed-selectivity
-        # feedback for the planner (paper §V workload estimation)
-        self.clause_counts = np.zeros((plan.n,), np.int64)
+        # per-clause match totals (client popcounts) PER EPOCH:
+        # observed-selectivity feedback for the replanner (paper §V)
+        self._epoch_counts: dict[int, np.ndarray] = {
+            plan.epoch: np.zeros((plan.n,), np.int64)
+        }
+        self._epoch_records: dict[int, int] = {plan.epoch: 0}
+        # query feedback for workload re-estimation (replan control plane);
+        # bounded: consumers only ever read a recent window
+        self.query_log: list[Query] = []
+        self.query_log_cap = 4096
 
-    def observed_selectivities(self) -> np.ndarray:
-        """float64[P]: fraction of ingested records matching each clause."""
-        n = max(self.stats.n_records, 1)
-        return self.clause_counts / n
+    @property
+    def epoch(self) -> int:
+        return self.plan.epoch
+
+    @property
+    def clause_counts(self) -> np.ndarray:
+        """int64[P]: current epoch's per-clause match totals (live view)."""
+        return self._epoch_counts[self.plan.epoch]
+
+    @clause_counts.setter
+    def clause_counts(self, value: np.ndarray) -> None:
+        self._epoch_counts[self.plan.epoch] = np.asarray(value, np.int64)
+
+    def epoch_records(self, epoch: int | None = None) -> int:
+        """Records ingested under one epoch (current epoch by default)."""
+        return self._epoch_records[self.plan.epoch if epoch is None else epoch]
+
+    def observed_selectivities(self, epoch: int | None = None) -> np.ndarray:
+        """float64[P]: fraction of that epoch's records matching each clause."""
+        e = self.plan.epoch if epoch is None else epoch
+        n = max(self._epoch_records[e], 1)
+        return self._epoch_counts[e] / n
+
+    # -- plan epochs ---------------------------------------------------------
+    def advance_epoch(self, new_plan: PushdownPlan) -> np.ndarray:
+        """Install the next plan epoch; returns the new->old remap table.
+
+        Existing blocks keep their old-epoch bitvectors and stay queryable
+        through the registry; new ingests must arrive tagged with the new
+        epoch.  Per-epoch stats start fresh so observed selectivities track
+        the *current* plan, not a mixture.
+        """
+        if new_plan.epoch <= self.plan.epoch:
+            raise ValueError(
+                f"epoch must advance: {new_plan.epoch} <= {self.plan.epoch}")
+        remap = new_plan.remap_from(self.plan)
+        self.plans[new_plan.epoch] = new_plan
+        self.plan = new_plan
+        self._epoch_counts[new_plan.epoch] = np.zeros((new_plan.n,), np.int64)
+        self._epoch_records[new_plan.epoch] = 0
+        return remap
+
+    def remap_table(self, from_epoch: int, to_epoch: int) -> np.ndarray:
+        """int32[plans[to].n]: to-epoch local row -> from-epoch row or -1."""
+        return self.plans[to_epoch].remap_from(self.plans[from_epoch])
+
+    # -- query-path helpers (shared by scanner and recipe batcher) -----------
+    def log_query(self, q: Query) -> None:
+        self.query_log.append(q)
+        if len(self.query_log) > 2 * self.query_log_cap:
+            del self.query_log[:-self.query_log_cap]
+
+    def pushed_by_epoch(self, q: Query) -> "_EpochPushdown":
+        """Per-epoch local bitvector rows of the query's pushed clauses.
+
+        A block/remainder from epoch *e* is skippable iff this map's entry
+        for *e* is non-empty — THE epoch-skippability invariant
+        (DESIGN.md §11); every query path must resolve pushdown through it.
+        The map resolves epochs lazily through the live registry, so a
+        block ingested under an epoch created after the map was built
+        (replan racing a partially-consumed scan/batch iterator) still
+        resolves instead of failing.
+        """
+        m = _EpochPushdown(self, q)
+        m[self.plan.epoch]  # current epoch always resolved (used_skipping)
+        return m
+
+    def promote_uncovered_raw(self, pushed: dict[int, list[int]]) -> int:
+        """JIT-promote raw remainders whose epoch covers none of the query.
+
+        Rows in a remainder from epoch *e* matched no epoch-*e* clause, so
+        they can only be skipped when >= 1 query clause was pushed in *e*;
+        every other remainder may hold matches and is parsed exactly once.
+        Returns the number of rows promoted.
+        """
+        stale = {rr.epoch for rr in self.raw if not pushed[rr.epoch]}
+        if not stale:
+            return 0
+        before = self.stats.n_jit_loaded
+        self.jit_load_raw(only_epochs=stale)
+        return self.stats.n_jit_loaded - before
 
     # -- ingest -------------------------------------------------------------
     def ingest_chunk(
         self, chunk: Chunk,
         bitvecs: np.ndarray | bitvector.ChunkBitvectors,
+        *, epoch: int | None = None,
     ) -> LoadStats:
         """Partial loading of one chunk.
 
@@ -126,11 +299,21 @@ class CiaoStore:
         :class:`~repro.core.bitvector.ChunkBitvectors` a fused engine pass
         emits — in that case the load mask arrives precomputed (the kernel
         already OR'd the clauses on device) and no host reduction runs.
+
+        ``epoch`` tags which plan epoch the client evaluated under; a chunk
+        carrying a superseded epoch raises :class:`StaleEpochError` before
+        any state is touched (the coordinator re-evaluates it under the
+        current plan).  ``None`` means "current epoch" (single-plan
+        deployments never notice epochs).
         """
         t0 = time.perf_counter()
         n = chunk.n_records
-        # validate BOTH dimensions BEFORE touching stats: a rejected
-        # ingest must not corrupt n_records / observed selectivities
+        # validate epoch AND both dimensions BEFORE touching stats: a
+        # rejected ingest must not corrupt n_records / observed selectivities
+        if epoch is not None and epoch != self.plan.epoch:
+            raise StaleEpochError(
+                f"chunk evaluated under epoch {epoch}, store is at epoch "
+                f"{self.plan.epoch} (re-evaluate under the current plan)")
         if isinstance(bitvecs, bitvector.ChunkBitvectors):
             if bitvecs.n_records != n:
                 raise ValueError(
@@ -149,6 +332,7 @@ class CiaoStore:
                 f"bitvectors cover {n_cl} clauses, plan has {self.plan.n} "
                 "(stale client plan?)")
         self.stats.n_records += n
+        self._epoch_records[self.plan.epoch] += n
         any_words: np.ndarray | None = None
         if isinstance(bitvecs, bitvector.ChunkBitvectors):
             any_words = bitvecs.or_words
@@ -173,12 +357,14 @@ class CiaoStore:
         rows = [json.loads(chunk.record(i)) for i in load_idx]
         self.stats.parse_time_s += time.perf_counter() - tp0
         if rows:
-            self.blocks.append(Block(rows=rows, bitvectors=block_bv))
+            self.blocks.append(
+                Block(rows=rows, bitvectors=block_bv, epoch=self.plan.epoch))
         if len(keep_idx):
             self.raw.append(
                 RawRemainder(
                     data=chunk.data[keep_idx],          # numpy fancy-index, O(bytes)
                     lengths=chunk.lengths[keep_idx],
+                    epoch=self.plan.epoch,
                 )
             )
         self.stats.n_loaded += int(len(load_idx))
@@ -186,46 +372,168 @@ class CiaoStore:
         return self.stats
 
     # -- just-in-time loading (paper §I) -------------------------------------
-    def jit_load_raw(self) -> None:
-        """Parse the raw remainder once, promoting it to unfiltered blocks."""
+    def jit_load_raw(self, only_epochs: set[int] | None = None) -> None:
+        """Parse raw remainders once, promoting them to unfiltered blocks.
+
+        ``only_epochs`` restricts promotion to remainders ingested under
+        those epochs (the scanner promotes exactly the epochs whose plan
+        pushes none of a query's clauses); ``None`` promotes everything.
+        """
         if not self.raw:
             return
         t0 = time.perf_counter()
+        keep: list[RawRemainder] = []
         for rr in self.raw:
+            if only_epochs is not None and rr.epoch not in only_epochs:
+                keep.append(rr)
+                continue
             rows = [json.loads(rr.record(i)) for i in range(rr.n)]
             self.jit_blocks.append(
-                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32))
+                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
+                      epoch=rr.epoch)
             )
             self.stats.n_jit_loaded += rr.n
-        self.raw = []
+        self.raw = keep
         self.stats.jit_time_s += time.perf_counter() - t0
 
     # -- persistence (ingest checkpointing) ----------------------------------
     def save(self, path: str) -> None:
-        payload: dict[str, Any] = {"n_blocks": np.array(len(self.blocks))}
+        """Checkpoint the FULL store state.
+
+        Persists what the replan control plane depends on surviving a
+        restart: the plan-epoch registry, per-epoch clause counts and
+        record totals (observed selectivities), and :class:`LoadStats` —
+        previously these were silently dropped, so
+        ``observed_selectivities()`` returned zeros after a restore.
+        """
+        stats = self.stats
+        meta = {
+            "format": 2,
+            "current_epoch": self.plan.epoch,
+            "plans": [self.plans[e].to_obj() for e in sorted(self.plans)],
+            "epoch_records": {str(e): n for e, n in self._epoch_records.items()},
+            "epoch_counts": {
+                str(e): c.tolist() for e, c in self._epoch_counts.items()
+            },
+            "stats": {
+                "n_records": stats.n_records,
+                "n_loaded": stats.n_loaded,
+                "n_jit_loaded": stats.n_jit_loaded,
+                "load_time_s": stats.load_time_s,
+                "parse_time_s": stats.parse_time_s,
+                "jit_time_s": stats.jit_time_s,
+            },
+            # the workload-feedback window (coverage drift survives restore)
+            "query_log": [
+                {"freq": q.freq, "clauses": [clause_to_obj(c)
+                                             for c in q.clauses]}
+                for q in self.query_log[-self.query_log_cap:]
+            ],
+        }
+        payload: dict[str, Any] = {
+            "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
+            "n_blocks": np.array(len(self.blocks)),
+            "block_epochs": np.array([b.epoch for b in self.blocks], np.int64),
+            "n_raw": np.array(len(self.raw)),
+            "raw_epochs": np.array([r.epoch for r in self.raw], np.int64),
+            "n_jit": np.array(len(self.jit_blocks)),
+            "jit_epochs": np.array([b.epoch for b in self.jit_blocks], np.int64),
+        }
         for bi, blk in enumerate(self.blocks):
             payload[f"bv_{bi}"] = blk.bitvectors
             payload[f"rows_{bi}"] = np.frombuffer(
                 json.dumps(blk.rows).encode(), dtype=np.uint8
             )
-        payload["n_raw"] = np.array(len(self.raw))
         for ri, rr in enumerate(self.raw):
             payload[f"raw_data_{ri}"] = rr.data
             payload[f"raw_len_{ri}"] = rr.lengths
+        for ji, blk in enumerate(self.jit_blocks):
+            payload[f"jit_rows_{ji}"] = np.frombuffer(
+                json.dumps(blk.rows).encode(), dtype=np.uint8
+            )
         np.savez_compressed(path, **payload)
 
     @classmethod
-    def load(cls, path: str, plan: PushdownPlan) -> "CiaoStore":
+    def load(cls, path: str, plan: PushdownPlan | None = None) -> "CiaoStore":
+        """Restore a checkpoint.
+
+        ``plan`` is optional: the plan registry is persisted, so the saved
+        current plan is used when omitted.  When given, it must match the
+        saved current plan's clause set (a checkpoint restored under a
+        different plan would silently mis-index bitvector rows).
+        """
         z = np.load(path)
-        store = cls(plan)
+        if "meta" not in getattr(z, "files", ()):
+            raise ValueError(
+                f"{path}: unsupported checkpoint format (pre-epoch format 1 "
+                "has no plan registry / feedback state); re-ingest and save "
+                "with this version")
+        meta = json.loads(bytes(z["meta"].tobytes()).decode())
+        plans = [PushdownPlan.from_obj(p) for p in meta["plans"]]
+        by_epoch = {p.epoch: p for p in plans}
+        current = by_epoch[meta["current_epoch"]]
+        if plan is not None:
+            if list(plan.clauses) != list(current.clauses):
+                raise ValueError(
+                    "checkpoint was saved under a different plan "
+                    f"(epoch {current.epoch}, {current.n} clauses)")
+            current = plan if plan.epoch == current.epoch else current
+        store = cls(current)
+        store.plans = by_epoch | {current.epoch: current}
+        store._epoch_records = {
+            int(e): int(n) for e, n in meta["epoch_records"].items()
+        }
+        store._epoch_counts = {
+            int(e): np.asarray(c, dtype=np.int64)
+            for e, c in meta["epoch_counts"].items()
+        }
+        store.query_log = [
+            Query(tuple(clause_from_obj(c) for c in q["clauses"]),
+                  freq=float(q["freq"]))
+            for q in meta.get("query_log", [])
+        ]
+        s = meta["stats"]
+        store.stats = LoadStats(
+            n_records=int(s["n_records"]), n_loaded=int(s["n_loaded"]),
+            n_jit_loaded=int(s["n_jit_loaded"]),
+            load_time_s=float(s["load_time_s"]),
+            parse_time_s=float(s["parse_time_s"]),
+            jit_time_s=float(s["jit_time_s"]),
+        )
+        block_epochs = z["block_epochs"]
         for bi in range(int(z["n_blocks"])):
             rows = json.loads(bytes(z[f"rows_{bi}"].tobytes()).decode())
-            store.blocks.append(Block(rows=rows, bitvectors=z[f"bv_{bi}"]))
+            store.blocks.append(Block(rows=rows, bitvectors=z[f"bv_{bi}"],
+                                      epoch=int(block_epochs[bi])))
+        raw_epochs = z["raw_epochs"]
         for ri in range(int(z["n_raw"])):
             store.raw.append(
-                RawRemainder(data=z[f"raw_data_{ri}"], lengths=z[f"raw_len_{ri}"])
+                RawRemainder(data=z[f"raw_data_{ri}"],
+                             lengths=z[f"raw_len_{ri}"],
+                             epoch=int(raw_epochs[ri]))
+            )
+        jit_epochs = z["jit_epochs"]
+        for ji in range(int(z["n_jit"])):
+            rows = json.loads(bytes(z[f"jit_rows_{ji}"].tobytes()).decode())
+            store.jit_blocks.append(
+                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
+                      epoch=int(jit_epochs[ji]))
             )
         return store
+
+
+class _EpochPushdown(dict):
+    """Lazy epoch -> pushed-local-rows map backed by the plan registry."""
+
+    def __init__(self, store: CiaoStore, q: Query):
+        super().__init__()
+        self._store = store
+        self._q = q
+
+    def __missing__(self, epoch: int) -> list[int]:
+        pushed = self._store.plans[epoch].pushed_in(self._q)
+        self[epoch] = pushed
+        return pushed
 
 
 @dataclass
@@ -239,19 +547,34 @@ class ScanResult:
 
 
 class DataSkippingScanner:
-    """COUNT(*) scan with bitvector data skipping + exact re-verification."""
+    """COUNT(*) scan with bitvector data skipping + exact re-verification.
 
-    def __init__(self, store: CiaoStore):
+    Epoch-aware: each block's bitvector rows are indexed by the plan it was
+    ingested under, so skipping resolves the query's pushed clauses
+    *per block epoch* through the store's plan registry.  A raw remainder
+    from epoch *e* is skippable iff >= 1 query clause was pushed in epoch
+    *e* (its rows matched none of that plan's clauses); remainders whose
+    epoch covers none of the query are JIT-promoted, exactly once.
+
+    Every scan is appended to ``store.query_log`` — the replan control
+    plane's workload-drift signal (paper §V workload estimation).
+    """
+
+    def __init__(self, store: CiaoStore, *, log_queries: bool = True):
         self.store = store
+        self.log_queries = log_queries
 
     def scan(self, q: Query) -> ScanResult:
         t0 = time.perf_counter()
-        plan = self.store.plan
-        pushed = plan.pushed_in(q)
+        store = self.store
+        if self.log_queries:
+            store.log_query(q)
+        pushed_by_epoch = store.pushed_by_epoch(q)
         count = 0
         scanned = skipped = raw_parsed = 0
 
-        for blk in self.store.blocks:
+        for blk in store.blocks:
+            pushed = pushed_by_epoch[blk.epoch]
             if pushed:
                 words = bitvector.bv_and_many(blk.bitvectors[pushed])
                 idx = bitvector.select_indices(words, blk.n_rows)
@@ -266,24 +589,25 @@ class DataSkippingScanner:
                         count += 1
                 scanned += blk.n_rows
 
-        if not pushed:
-            # raw remainder may contain matches: JIT-promote once, then scan
-            if self.store.raw:
-                before = self.store.stats.n_jit_loaded
-                self.store.jit_load_raw()
-                raw_parsed = self.store.stats.n_jit_loaded - before
-            for blk in self.store.jit_blocks:
-                for row in blk.rows:
-                    if q.matches_exact(row):
-                        count += 1
-                scanned += blk.n_rows
+        # raw remainders not covered by their epoch's pushed clauses may
+        # contain matches: JIT-promote those epochs once, then scan every
+        # promoted block whose epoch doesn't cover the query
+        raw_parsed = store.promote_uncovered_raw(pushed_by_epoch)
+        for blk in store.jit_blocks:
+            if pushed_by_epoch[blk.epoch]:
+                skipped += blk.n_rows
+                continue
+            for row in blk.rows:
+                if q.matches_exact(row):
+                    count += 1
+            scanned += blk.n_rows
         return ScanResult(
             count=count,
             rows_scanned=scanned,
             rows_skipped=skipped,
             raw_parsed=raw_parsed,
             time_s=time.perf_counter() - t0,
-            used_skipping=bool(pushed),
+            used_skipping=any(pushed_by_epoch.values()),
         )
 
 

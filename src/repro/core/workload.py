@@ -12,8 +12,8 @@ selectivity estimation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Mapping, Sequence
+from dataclasses import dataclass
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -113,6 +113,60 @@ def estimate_selectivities(
         hits = sum(1 for r in sample_records if c.matches_raw(r))
         out[c] = max(hits / n, floor)
     return out
+
+
+# ---------------------------------------------------------------------------
+# workload drift (replan control plane's test signal; DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DriftPhase:
+    """One stationary regime of a piecewise-stationary query stream.
+
+    A phase draws ``n_queries`` from the clause pool with its own Zipf
+    parameter and its own rank permutation seed — shifting either between
+    phases moves the *hot* clause set, which is exactly the drift a static
+    epoch-0 plan cannot follow (Ta-Shma et al.: skipping indexes must track
+    workload drift to stay effective).
+    """
+
+    n_queries: int
+    distribution: str = "zipf"
+    zipf_a: float = 1.5
+    seed: int = 0
+    expected_preds_per_query: float = 3.0
+
+
+def drifting_workloads(
+    pool: Sequence[Clause],
+    phases: Sequence[DriftPhase],
+    *, name: str = "drift",
+) -> list[Workload]:
+    """One :class:`Workload` per phase (the piecewise-stationary stream)."""
+    out = []
+    for i, ph in enumerate(phases):
+        out.append(
+            generate_workload(
+                pool,
+                n_queries=ph.n_queries,
+                expected_preds_per_query=ph.expected_preds_per_query,
+                distribution=ph.distribution,
+                zipf_a=ph.zipf_a,
+                rng=np.random.default_rng(ph.seed),
+                name=f"{name}[{i}]",
+            )
+        )
+    return out
+
+
+def drifting_query_stream(
+    pool: Sequence[Clause],
+    phases: Sequence[DriftPhase],
+    *, name: str = "drift",
+) -> Iterator[Query]:
+    """Flat query iterator over the phases, in order (drift at boundaries)."""
+    for wl in drifting_workloads(pool, phases, name=name):
+        yield from wl.queries
 
 
 def uniform_frequencies(workload: Workload) -> Workload:

@@ -16,14 +16,12 @@ ingest checkpoint/restart tests rely on.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
-from typing import Callable, Iterator, Sequence
+from typing import Callable, Iterator
 
 import numpy as np
 
 from repro.core.predicates import (
     Clause,
-    SimplePredicate,
     clause,
     exact,
     key_value,

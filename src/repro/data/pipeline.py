@@ -18,10 +18,10 @@ Pieces:
 """
 from __future__ import annotations
 
-import heapq
 import json
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Sequence
 
@@ -30,14 +30,25 @@ import numpy as np
 from repro.core import bitvector
 from repro.core.client import Chunk, encode_chunk
 from repro.core.predicates import Query
-from repro.core.server import CiaoStore, PushdownPlan
+from repro.core.server import CiaoStore, PushdownPlan, StaleEpochError
 from repro.data.datasets import record_stream
 from repro.data.tokenizer import ByteTokenizer
 
 
 @dataclass
 class ClientShard:
-    """One data client with its own seed, engine, and speed class."""
+    """One data client with its own seed, engine, and speed class.
+
+    Plans are **hot-swappable** between chunks (:meth:`set_plan`): a replan
+    broadcast lands as a plain attribute swap, and the kernel engines only
+    retrace when the new compiled plan falls in a new ``(P, Mk, Mv)``
+    shape bucket (``kernels.plan`` pads pattern widths; ``kernels.ops``
+    pads record counts) — same-bucket epochs reuse the jit cache.
+
+    Each shard accumulates measured eval wall-clock
+    (:meth:`observed_us_per_record`) — the cost-model recalibration
+    feedback the replanner consumes (paper §V-D).
+    """
 
     dataset: str
     shard_id: int
@@ -48,13 +59,28 @@ class ClientShard:
 
     def __post_init__(self) -> None:
         self._stream = record_stream(self.dataset, seed=1000 + self.shard_id)
+        self.eval_time_s = 0.0
+        self.eval_records = 0
+
+    def set_plan(self, plan: PushdownPlan) -> None:
+        """Epoch bump: evaluate every subsequent chunk under ``plan``."""
+        self.plan = plan
 
     def next_chunk(self) -> tuple[Chunk, bitvector.ChunkBitvectors]:
         recs = [next(self._stream) for _ in range(self.chunk_records)]
         chunk = encode_chunk(recs)
         # fused single-pass evaluation: the ingest load mask ships
         # precomputed alongside the bitvectors (one launch on kernel engines)
-        return chunk, self.engine.eval_fused(chunk, self.plan.clauses)
+        t0 = time.perf_counter()
+        bv = self.engine.eval_fused(chunk, self.plan.clauses)
+        self.eval_time_s += time.perf_counter() - t0
+        self.eval_records += chunk.n_records
+        return chunk, bv
+
+    def observed_us_per_record(self) -> float:
+        if not self.eval_records:
+            return 0.0
+        return self.eval_time_s / self.eval_records * 1e6
 
 
 @dataclass(order=True)
@@ -77,12 +103,22 @@ class IngestCoordinator:
     """
 
     def __init__(self, clients: Sequence[ClientShard], store: CiaoStore,
-                 *, steal: bool = True):
+                 *, steal: bool = True, replanner=None,
+                 on_chunk: Callable[[int], None] | None = None):
         self.clients = list(clients)
         self.store = store
         self.steal = steal
+        self.replanner = replanner          # core.replan.Replanner protocol
+        self.on_chunk = on_chunk            # called with #chunks ingested
         self.stolen = 0
         self.makespan = 0.0
+        self.epoch_bumps = 0
+
+    def _broadcast(self, plan) -> None:
+        """Epoch bump: every shard evaluates subsequent chunks under it."""
+        for c in self.clients:
+            c.set_plan(plan)
+        self.epoch_bumps += 1
 
     def run(self, chunks_per_client: int) -> None:
         backlog = [chunks_per_client for _ in self.clients]
@@ -107,10 +143,33 @@ class IngestCoordinator:
                 self.stolen += 1
             else:
                 backlog[i] -= 1
-            chunk, bv = self.clients[i].next_chunk()
-            self.store.ingest_chunk(chunk, bv)
-            clock[i] += 1.0 / self.clients[i].speed
+            client = self.clients[i]
+            eval_before = client.eval_time_s
+            chunk, bv = client.next_chunk()
+            # plan-eval wall-clock only (the shard times eval_fused
+            # itself) — record generation/encoding must not leak into the
+            # replanner's cost-model recalibration
+            eval_s = client.eval_time_s - eval_before
+            # chunks carry their evaluation epoch; the window between a
+            # broadcast and a client's next chunk is where staleness lives,
+            # so a StaleEpochError re-evaluates under the current plan
+            try:
+                self.store.ingest_chunk(chunk, bv,
+                                        epoch=client.plan.epoch)
+            except StaleEpochError:
+                client.set_plan(self.store.plan)
+                bv = client.engine.eval_fused(chunk, client.plan.clauses)
+                self.store.ingest_chunk(chunk, bv,
+                                        epoch=client.plan.epoch)
+            clock[i] += 1.0 / client.speed
             done += 1
+            if self.on_chunk is not None:
+                self.on_chunk(done)
+            if self.replanner is not None:
+                self.replanner.observe_timing(chunk.n_records, eval_s)
+                new_plan = self.replanner.step()
+                if new_plan is not None:
+                    self._broadcast(new_plan)
         self.makespan = max(clock)
 
 
@@ -125,9 +184,14 @@ class RecipeBatcher:
         self.batch_size = batch_size
 
     def matching_records(self, recipe: Query) -> Iterator[bytes]:
-        plan = self.store.plan
-        pushed = plan.pushed_in(recipe)
-        for blk in self.store.blocks:
+        # epoch-aware skipping: each block's bitvector rows follow ITS
+        # ingest epoch's plan, and raw remainders are JIT-promoted only for
+        # epochs that push none of the recipe — the skippability invariant
+        # is single-sourced in the store's query-path helpers
+        store = self.store
+        pushed_by_epoch = store.pushed_by_epoch(recipe)
+        for blk in store.blocks:
+            pushed = pushed_by_epoch[blk.epoch]
             if pushed:
                 words = bitvector.bv_and_many(blk.bitvectors[pushed])
                 idx = bitvector.select_indices(words, blk.n_rows)
@@ -137,12 +201,13 @@ class RecipeBatcher:
                 row = blk.rows[i]
                 if recipe.matches_exact(row):
                     yield json.dumps(row, separators=(",", ":")).encode()
-        if not pushed:
-            self.store.jit_load_raw()
-            for blk in self.store.jit_blocks:
-                for row in blk.rows:
-                    if recipe.matches_exact(row):
-                        yield json.dumps(row, separators=(",", ":")).encode()
+        store.promote_uncovered_raw(pushed_by_epoch)
+        for blk in store.jit_blocks:
+            if pushed_by_epoch[blk.epoch]:
+                continue
+            for row in blk.rows:
+                if recipe.matches_exact(row):
+                    yield json.dumps(row, separators=(",", ":")).encode()
 
     def batches(self, recipe: Query, *, repeat: bool = True
                 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:

@@ -13,8 +13,8 @@ distinct record count (DESIGN.md §3.5).
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .bitvector_ops import bitvector_reduce

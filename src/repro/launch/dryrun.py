@@ -268,7 +268,9 @@ def main() -> None:
             ok, why = shape_applicable(cfg, SHAPES[shape_name])
             for mesh_kind in meshes:
                 tag = f"{arch} x {shape_name} x {mesh_kind}"
-                out_fn = os.path.join(args.out, f"{arch}_{shape_name}_{mesh_kind}{args.suffix}.json")
+                out_fn = os.path.join(
+                    args.out,
+                    f"{arch}_{shape_name}_{mesh_kind}{args.suffix}.json")
                 if args.skip_existing and os.path.exists(out_fn):
                     print(f"[skip-existing] {tag}")
                     continue

@@ -18,7 +18,6 @@ Three compute paths:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -27,7 +26,7 @@ from jax import lax
 
 from repro.configs.base import MLAConfig, ModelConfig
 
-from .layers import Leaf, apply_rope, mk, rmsnorm
+from .layers import apply_rope, mk, rmsnorm
 
 NEG_INF = -1e30
 

@@ -11,7 +11,6 @@ as part of the cache (cross K/V are position-independent).
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

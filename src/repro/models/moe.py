@@ -52,7 +52,6 @@ def apply_moe_sharded(p, x, cfg: ModelConfig):
     data-dependent scatter (measured 18.7 TB/device/step on
     deepseek-v3-671b x train_4k; see EXPERIMENTS.md).
     """
-    import functools
 
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P

@@ -14,7 +14,6 @@ sequence-sharded — attention returns partial softmax stats combined in
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -100,7 +99,9 @@ def _apply_block_seq(p, x, cfg: ModelConfig, block_type: str, positions, state):
                 qn, qr, ckv, krope = attn._mla_qkv(p["attn"], h, cfg, positions)
                 new_state = _write_cache_mla(state, ckv, krope[:, :, 0, :], positions)
         else:
-            mode = "local" if (cfg.attention == "local" or block_type == "attn" and cfg.window) else "causal"
+            mode = ("local" if (cfg.attention == "local"
+                                or block_type == "attn" and cfg.window)
+                    else "causal")
             q, k, v = attn._project_qkv(p["attn"], h, cfg, positions)
             a = attn.flash_attention(
                 q, k, v, q_positions=positions, k_positions=positions,
@@ -211,7 +212,8 @@ def _write_cache_mla(cache, ckv, krope, positions):
         }
     return {
         "ckv": lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
-        "krope": lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
+        "krope": lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
         "pos": lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32), (0,)),
     }
 
@@ -229,8 +231,13 @@ def _apply_block_decode(p, x, cfg: ModelConfig, block_type: str, cache,
             alloc = cache["ckv"].shape[1]
             wslot = cur_index % alloc if local else cur_index
             cache = {
-                "ckv": lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, wslot, 0)),
-                "krope": lax.dynamic_update_slice(cache["krope"], krope[:, :, 0].astype(cache["krope"].dtype), (0, wslot, 0)),
+                "ckv": lax.dynamic_update_slice(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                    (0, wslot, 0)),
+                "krope": lax.dynamic_update_slice(
+                    cache["krope"],
+                    krope[:, :, 0].astype(cache["krope"].dtype),
+                    (0, wslot, 0)),
                 "pos": lax.dynamic_update_slice(cache["pos"], pos1, (wslot,)),
             }
             m = cfg.mla
@@ -247,8 +254,12 @@ def _apply_block_decode(p, x, cfg: ModelConfig, block_type: str, cache,
             alloc = cache["k"].shape[1]
             wslot = cur_index % alloc if local else cur_index
             cache = {
-                "k": lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, wslot, 0, 0)),
-                "v": lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, wslot, 0, 0)),
+                "k": lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype),
+                    (0, wslot, 0, 0)),
+                "v": lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype),
+                    (0, wslot, 0, 0)),
                 "pos": lax.dynamic_update_slice(cache["pos"], pos1, (wslot,)),
             }
             o = None

@@ -8,7 +8,6 @@ knob (``opt_dtype``): fp32 everywhere except the 671B-class single-pod fit
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,6 @@ in ``repro.dist.collectives`` (pod-axis compression; see DESIGN.md §6).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ import dataclasses
 import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import flops as flops_mod
@@ -122,7 +120,6 @@ def test_estimate_close_to_six_nd_dense():
 def test_dryrun_artifacts_complete():
     """All 40 cells x 2 meshes recorded (ok or documented skip)."""
     import glob
-    import os
 
     files = glob.glob("artifacts/dryrun/*.json")
     if len(files) < 80:

@@ -1,0 +1,130 @@
+"""Benchmark artifact hygiene: schema gate + quick-run write discipline.
+
+The tracked ``BENCH_kernels.json`` is the PR-over-PR perf trajectory; these
+tests pin (a) its schema, (b) that ``--quick`` runs can never overwrite it,
+and (c) — under the ``ci_smoke`` marker — that a reduced-size benchmark run
+emits a schema-valid artifact end to end.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.bench_schema import (
+    SchemaError, validate_file, validate_kernels, validate_replan,
+)
+from benchmarks.run import write_kernels_artifacts
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_GOOD_KERNELS = {
+    "engines": [
+        {"engine": "python-bytes-find", "records_per_s": 10000,
+         "us_per_record": 100.0, "effective_GBps": 0.1},
+        {"engine": "xla-jit", "records_per_s": 500000,
+         "us_per_record": 2.0, "effective_GBps": 5.0},
+    ],
+    "fused_vs_split": [
+        {"backend": "xla", "n_records": 1000, "n_clauses": 12,
+         "n_kv_pairs": 5, "split_us_per_record": 10.0,
+         "fused_us_per_record": 4.0, "speedup": 2.5,
+         "launches_split": 7, "launches_fused": 1},
+    ],
+}
+
+
+def test_schema_accepts_tracked_artifact():
+    path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    assert validate_file(path) == "BENCH_kernels.json"
+
+
+def test_schema_accepts_wellformed_synthetic():
+    validate_kernels(_GOOD_KERNELS)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda o: o.pop("engines"),
+    lambda o: o.pop("fused_vs_split"),
+    lambda o: o["engines"][0].pop("us_per_record"),
+    lambda o: o["engines"][0].__setitem__("us_per_record", "fast"),
+    lambda o: o["engines"][0].__setitem__("us_per_record", -1.0),
+    lambda o: o["engines"].clear(),
+    lambda o: o["fused_vs_split"][0].__setitem__("launches_fused", 2),
+    lambda o: o["fused_vs_split"][0].__setitem__("speedup", None),
+])
+def test_schema_rejects_malformed_kernels(mutate):
+    obj = json.loads(json.dumps(_GOOD_KERNELS))
+    mutate(obj)
+    with pytest.raises(SchemaError):
+        validate_kernels(obj)
+
+
+def test_schema_rejects_unregistered_and_bad_json(tmp_path):
+    with pytest.raises(SchemaError):
+        validate_file(str(tmp_path / "mystery.json"))
+    p = tmp_path / "bench_kernels.json"
+    p.write_text("{not json")
+    with pytest.raises(SchemaError):
+        validate_file(str(p))
+
+
+def test_replan_schema_requires_epoch_advance():
+    obj = {
+        "budget_us": 50.0,
+        "post_drift_scan_speedup": 1.5,
+        "eff_loading_ratio_delta": 0.2,
+        "static": {"epoch": 0, "eff_loading_ratio": 1.0,
+                   "post_drift_scan_s": 2.0},
+        "adaptive": {"epoch": 1, "eff_loading_ratio": 0.7,
+                     "post_drift_scan_s": 1.3},
+    }
+    validate_replan(obj)
+    obj["adaptive"]["epoch"] = 0
+    with pytest.raises(SchemaError):
+        validate_replan(obj)
+
+
+def test_quick_run_never_touches_tracked_artifact(tmp_path):
+    """--quick writes under artifacts/ only; full runs update both."""
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    tracked = tmp_path / "BENCH_kernels.json"
+    tracked.write_text("SENTINEL")
+
+    written = write_kernels_artifacts(
+        _GOOD_KERNELS, quick=True,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert written == [str(artifacts / "bench_kernels.json")]
+    assert tracked.read_text() == "SENTINEL"  # quick run must not clobber
+
+    written = write_kernels_artifacts(
+        _GOOD_KERNELS, quick=False,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert str(tracked) in written
+    assert json.loads(tracked.read_text()) == _GOOD_KERNELS
+
+
+def test_malformed_output_never_reaches_disk(tmp_path):
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    bad = json.loads(json.dumps(_GOOD_KERNELS))
+    bad["engines"] = []
+    with pytest.raises(SchemaError):
+        write_kernels_artifacts(bad, quick=False,
+                                artifacts_dir=str(artifacts),
+                                tracked_path=str(tmp_path / "B.json"))
+    assert not (tmp_path / "B.json").exists()
+    assert not (artifacts / "bench_kernels.json").exists()
+
+
+@pytest.mark.ci_smoke
+def test_quick_benchmark_emits_schema_valid_artifact():
+    """Reduced-size end-to-end kernels benchmark -> valid artifact shape.
+
+    This is the CI smoke gate's in-suite twin (CI also runs the full
+    ``benchmarks.run --quick`` + ``bench_schema`` CLI on the emitted file).
+    """
+    from benchmarks import bench_kernels
+
+    out = bench_kernels.main(n_records=160, n_clauses=4, repeats=1)
+    validate_kernels(out)  # validated as-emitted, exactly like run.py writes

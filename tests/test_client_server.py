@@ -1,14 +1,13 @@
 """Engines agreement + partial loading + data skipping correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.client import Chunk, NumpyEngine, PythonEngine, encode_chunk
+from repro.core.client import NumpyEngine, PythonEngine, encode_chunk
 from repro.core.predicates import Query
 from repro.core.server import (
     CiaoStore, DataSkippingScanner, FullScanBaseline, PushdownPlan,
 )
-from repro.core.workload import generate_workload, estimate_selectivities
+from repro.core.workload import estimate_selectivities
 from repro.data.datasets import generate_records, predicate_pool
 
 DATASETS = ("yelp", "winlog", "ycsb")

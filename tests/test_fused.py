@@ -15,8 +15,7 @@ import pytest
 from repro.core import bitvector
 from repro.core.client import NumpyEngine, PythonEngine, encode_chunk
 from repro.core.predicates import (
-    Clause, Kind, SimplePredicate, clause, exact, key_value, presence,
-    substring,
+    Clause, SimplePredicate, clause, exact, key_value, presence, substring,
 )
 from repro.kernels.engine import KernelEngine, compile_plan
 
@@ -294,6 +293,77 @@ def test_single_kernel_launch_per_chunk(backend, monkeypatch):
     assert np.array_equal(out1.words, out2.words)
     expected = PythonEngine().eval_fused(chunk, clauses)
     assert np.array_equal(out1.words, expected.words)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_post_replan_plan_bit_identical(seed):
+    """Engine equivalence must hold PER EPOCH: after a replan evolves the
+    plan (dropped + surviving + fresh clauses, new local row order), every
+    engine still produces bit-identical packed bitvectors for the new
+    epoch's clause list."""
+    from repro.core.server import PushdownPlan, evolve_plan
+
+    rng = np.random.default_rng(4000 + seed)
+    objs = [_random_record(rng) for _ in range(24)]
+    recs = [json.dumps(o, separators=(",", ":")).encode() for o in objs]
+    chunk = encode_chunk(recs)
+    clauses0 = _random_clauses(rng, 5)
+    plan0 = PushdownPlan(clauses=clauses0)
+    # replan: drop two, keep three (shuffled rows), push two fresh clauses
+    survivors = [clauses0[4], clauses0[1], clauses0[2]]
+    plan1 = evolve_plan(plan0, survivors + _random_clauses(rng, 2))
+    assert plan1.remap_from(plan0).tolist()[:3] == [4, 1, 2]
+
+    expected = PythonEngine().eval_fused(chunk, plan1.clauses)
+    engines = [NumpyEngine()] + [KernelEngine(backend=b) for b in BACKENDS]
+    for eng in engines:
+        fused = eng.eval_fused(chunk, plan1.clauses)
+        assert np.array_equal(fused.words, expected.words), eng.name
+        assert np.array_equal(fused.or_words, expected.or_words), eng.name
+        assert np.array_equal(fused.counts, expected.counts), eng.name
+
+
+def test_hot_swap_same_bucket_epoch_no_retrace(monkeypatch):
+    """A replan whose compiled plan lands in the SAME (P, Mk, Mv) shape
+    bucket must not retrace the fused kernel (epoch hot-swap without
+    jit-thrash): only the first epoch's evaluation stages a pallas_call."""
+    from jax.experimental import pallas as pl
+
+    from repro.core.server import PushdownPlan, evolve_plan
+    from repro.kernels import fused as fused_mod
+
+    counted = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        counted.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fused_mod.pl, "pallas_call", counting)
+
+    rng = np.random.default_rng(11)
+    # unique record count so no previous jit specialization matches
+    objs = [_random_record(rng) for _ in range(37)]
+    recs = [json.dumps(o, separators=(",", ":")).encode() for o in objs]
+    chunk = encode_chunk(recs)
+    plan0 = PushdownPlan(clauses=[
+        clause(key_value("age", 7)), clause(presence("tags")),
+    ])
+    # same predicate count, same key, value in the same 8-byte width
+    # bucket -> identical compiled shapes, different constants
+    plan1 = evolve_plan(plan0, [
+        clause(key_value("age", 23)), clause(presence("city")),
+    ])
+    eng = KernelEngine(backend="pallas_interpret")
+    out0 = eng.eval_fused(chunk, plan0.clauses)
+    n_trace = len(counted)
+    assert n_trace <= 1  # one fresh specialization at most
+    out1 = eng.eval_fused(chunk, plan1.clauses)
+    assert len(counted) == n_trace, "same-bucket epoch swap retraced"
+    expected0 = PythonEngine().eval_fused(chunk, plan0.clauses)
+    expected1 = PythonEngine().eval_fused(chunk, plan1.clauses)
+    assert np.array_equal(out0.words, expected0.words)
+    assert np.array_equal(out1.words, expected1.words)
 
 
 def test_server_ingest_consumes_fused_outputs():

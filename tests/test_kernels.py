@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.client import NumpyEngine, PythonEngine, encode_chunk, encode_patterns
+from repro.core.client import PythonEngine, encode_chunk, encode_patterns
 from repro.data.datasets import generate_records, predicate_pool
 from repro.kernels import ops
 from repro.kernels.engine import KernelEngine
@@ -104,7 +104,6 @@ def test_match_any_property_random_bytes(seed, n_pat, rec_len):
 ])
 def test_flash_attention_kernel_vs_jnp_flash(shape):
     """Pallas flash attention (interpret) vs the production jnp flash path."""
-    import jax
     import jax.numpy as jnp
 
     from repro.kernels.flash_attention import flash_attention_tpu

@@ -141,7 +141,9 @@ def test_local_attention_window_respected(built):
     cfg_q = dataclasses.replace(cfg_q, attention="local", window=8)
     mq = build_model(cfg_q)
     vq, _ = split(mq.init(jax.random.PRNGKey(0)))
-    fq = jax.jit(lambda v, t: __import__("repro.models.transformer", fromlist=["forward"]).forward(v, cfg_q, t)[0])
+    fq = jax.jit(lambda v, t: __import__(
+        "repro.models.transformer", fromlist=["forward"]
+    ).forward(v, cfg_q, t)[0])
     lq1, lq2 = fq(vq, t1), fq(vq, t2)
     # last position is > window away from position 0
     np.testing.assert_allclose(

@@ -1,12 +1,10 @@
 """Predicate semantics: pattern compilation, no-false-negative invariant."""
 import json
 
-import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.predicates import (
-    Clause, Kind, Query, clause, exact, key_value, presence, query, substring,
+    clause, exact, key_value, presence, query, substring,
 )
 
 

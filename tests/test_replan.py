@@ -1,0 +1,383 @@
+"""Adaptive replanning: plan epochs, remap stability, closed-loop control.
+
+Invariants under test (DESIGN.md §11):
+  * global clause ids are stable across epochs; the remap table maps new
+    local bitvector rows to old ones exactly;
+  * a stale-epoch ingest raises BEFORE any state mutates (no corruption);
+  * data ingested under epoch k stays queryable — and skippable — after
+    epoch k+1 (scan counts always match the full-scan baseline);
+  * checkpoints persist the feedback state (observed selectivities,
+    LoadStats, plan registry) the replanner depends on;
+  * plan hot-swaps between same-shape-bucket epochs do not retrace the
+    fused kernel.
+"""
+import numpy as np
+import pytest
+
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.cost_model import CostModel
+from repro.core.predicates import Query, clause, presence
+from repro.core.replan import Replanner, ReplanPolicy
+from repro.core.server import (
+    CiaoStore, DataSkippingScanner, FullScanBaseline, PushdownPlan,
+    StaleEpochError, evolve_plan,
+)
+from repro.core.workload import (
+    DriftPhase, drifting_workloads, estimate_selectivities,
+)
+from repro.data.datasets import generate_records, predicate_pool
+from repro.data.pipeline import ClientShard, IngestCoordinator
+
+
+def _ycsb_plans():
+    pool = predicate_pool("ycsb")
+    recs = generate_records("ycsb", 600, seed=2)
+    sel = estimate_selectivities(pool, recs[:300])
+    ranked = sorted(pool, key=lambda c: abs(sel[c] - 0.2))
+    return ranked, recs
+
+
+# ---------------------------------------------------------------------------
+# plan epochs and id remapping
+# ---------------------------------------------------------------------------
+
+def test_evolve_plan_stable_global_ids_and_remap():
+    a, b, c, d = (clause(presence("a")), clause(presence("b")),
+                  clause(presence("c")), clause(presence("d")))
+    p0 = PushdownPlan(clauses=[a, b, c])
+    assert p0.epoch == 0 and p0.global_ids == p0.ids
+    # drop b, keep c (moves local row), add d
+    p1 = evolve_plan(p0, [c, d, a])
+    assert p1.epoch == 1
+    assert p1.global_ids[a] == p0.global_ids[a]   # survivor keeps gid
+    assert p1.global_ids[c] == p0.global_ids[c]
+    assert p1.global_ids[d] == 3                   # fresh monotonic id
+    remap = p1.remap_from(p0)
+    assert remap.tolist() == [p0.ids[c], -1, p0.ids[a]]
+    # dropped-then-repushed clause draws a FRESH id (old bitvector rows
+    # were computed under a plan that still had it, so reuse would alias)
+    p2 = evolve_plan(p1, [b, d])
+    assert p2.global_ids[d] == p1.global_ids[d]
+    assert p2.global_ids[b] == 4
+    assert p2.remap_from(p1).tolist() == [-1, p1.ids[d]]
+
+
+def test_retired_global_id_never_reissued():
+    """A gid freed two epochs ago must not alias a brand-new clause.
+
+    Regression: the fresh-id counter once ran off the PREVIOUS plan's
+    survivors only, so [a,b] -> [a] -> [a,c] re-issued b's gid to c and
+    remap_table(0, 2) mapped c onto b's epoch-0 bitvector rows.
+    """
+    a, b, c = (clause(presence("a")), clause(presence("b")),
+               clause(presence("c")))
+    p0 = PushdownPlan(clauses=[a, b])          # gids a:0, b:1
+    p1 = evolve_plan(p0, [a])                  # b's gid 1 retired
+    p2 = evolve_plan(p1, [a, c])
+    assert p2.global_ids[c] == 2               # NOT b's retired gid 1
+    assert p2.remap_from(p0).tolist() == [0, -1]  # c is no epoch-0 survivor
+    assert p2.gid_watermark == 2
+
+
+def test_scan_iterator_survives_mid_stream_epoch_advance():
+    """pushed_by_epoch resolves epochs created after the map was built
+    (replan racing a partially-consumed batch iterator)."""
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:2])
+    store = CiaoStore(plan0)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:200])
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, plan0.clauses))
+    recipe = Query((ranked[0],))
+    pushed = store.pushed_by_epoch(recipe)
+    # epoch 1 appears while the consumer holds the map
+    plan1 = evolve_plan(plan0, [ranked[0], ranked[3]])
+    store.advance_epoch(plan1)
+    chunk2 = encode_chunk(recs[200:400])
+    store.ingest_chunk(chunk2, eng.eval_fused(chunk2, plan1.clauses), epoch=1)
+    for blk in store.blocks:
+        assert pushed[blk.epoch] is not None  # lazy resolve, no KeyError
+    # end-to-end: the batcher iterator built before the bump keeps working
+    from repro.data.pipeline import RecipeBatcher
+    from repro.data.tokenizer import ByteTokenizer
+
+    store2 = CiaoStore(PushdownPlan(clauses=ranked[:2]))
+    store2.ingest_chunk(chunk, eng.eval_fused(chunk, ranked[:2]))
+    batcher = RecipeBatcher(store2, ByteTokenizer(vocab_size=1024),
+                            seq_len=32, batch_size=2)
+    it = batcher.matching_records(recipe)
+    next(it)  # start the generator (snapshots the epoch map)
+    store2.advance_epoch(evolve_plan(store2.plan, [ranked[0], ranked[3]]))
+    store2.ingest_chunk(chunk2, eng.eval_fused(chunk2, store2.plan.clauses),
+                        epoch=1)
+    n = sum(1 for _ in it)  # must not raise KeyError on epoch-1 blocks
+    assert n >= 0
+
+
+def test_advance_epoch_rejects_non_monotonic():
+    plan = PushdownPlan(clauses=[clause(presence("a"))])
+    store = CiaoStore(plan)
+    with pytest.raises(ValueError):
+        store.advance_epoch(PushdownPlan(clauses=[clause(presence("b"))]))
+    new = evolve_plan(plan, [clause(presence("b"))])
+    remap = store.advance_epoch(new)
+    assert store.epoch == 1 and remap.tolist() == [-1]
+    assert store.remap_table(0, 1).tolist() == [-1]
+
+
+def test_stale_epoch_ingest_raises_without_corruption():
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:3])
+    store = CiaoStore(plan0)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:200])
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, plan0.clauses),
+                       epoch=0)
+    plan1 = evolve_plan(plan0, ranked[2:5])
+    store.advance_epoch(plan1)
+    before = (store.stats.n_records, store.stats.n_loaded,
+              len(store.blocks), store.epoch_records(1),
+              store.clause_counts.copy())
+    # a chunk evaluated under the superseded plan must be rejected whole
+    stale_bv = eng.eval_fused(chunk, plan0.clauses)
+    with pytest.raises(StaleEpochError):
+        store.ingest_chunk(chunk, stale_bv, epoch=0)
+    assert (store.stats.n_records, store.stats.n_loaded,
+            len(store.blocks), store.epoch_records(1)) == before[:4]
+    assert np.array_equal(store.clause_counts, before[4])
+    # re-evaluated under the current plan it is accepted
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, plan1.clauses), epoch=1)
+    assert store.epoch_records(1) == 200
+
+
+def test_cross_epoch_scan_counts_match_baseline():
+    """Bitvectors ingested under epoch k stay queryable after k+1."""
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:3])
+    store = CiaoStore(plan0)
+    base = FullScanBaseline()
+    eng = NumpyEngine()
+    for lo in range(0, 300, 100):
+        chunk = encode_chunk(recs[lo:lo + 100])
+        store.ingest_chunk(chunk, eng.eval_fused(chunk, plan0.clauses))
+        base.ingest_chunk(chunk)
+    plan1 = evolve_plan(plan0, [ranked[2], ranked[4], ranked[5]])
+    store.advance_epoch(plan1)
+    for lo in range(300, 600, 100):
+        chunk = encode_chunk(recs[lo:lo + 100])
+        store.ingest_chunk(chunk, eng.eval_fused(chunk, plan1.clauses),
+                           epoch=1)
+        base.ingest_chunk(chunk)
+    scanner = DataSkippingScanner(store)
+    # pushed in both epochs / only old / only new / never pushed
+    probes = [ranked[2], ranked[0], ranked[4], ranked[7]]
+    for c in probes:
+        q = Query((c,))
+        assert scanner.scan(q).count == base.scan(q).count, c.describe()
+    q = Query((ranked[2], ranked[4]))
+    assert scanner.scan(q).count == base.scan(q).count
+    assert store.stats.n_jit_loaded > 0  # old-only probes promoted some raw
+
+
+def test_epoch1_raw_remainder_not_promoted_for_covered_queries():
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:2])
+    store = CiaoStore(plan0)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:300])
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, plan0.clauses))
+    plan1 = evolve_plan(plan0, [ranked[0], ranked[3]])
+    store.advance_epoch(plan1)
+    chunk2 = encode_chunk(recs[300:600])
+    store.ingest_chunk(chunk2, eng.eval_fused(chunk2, plan1.clauses), epoch=1)
+    scanner = DataSkippingScanner(store)
+    # ranked[0] is pushed in BOTH epochs: fully covered, zero JIT loads
+    r = scanner.scan(Query((ranked[0],)))
+    assert r.used_skipping and r.raw_parsed == 0
+    assert store.stats.n_jit_loaded == 0
+    # ranked[3] is pushed only in epoch 1: epoch-0 raw promoted, epoch-1 kept
+    r = scanner.scan(Query((ranked[3],)))
+    assert r.raw_parsed > 0
+    assert all(rr.epoch == 1 for rr in store.raw)
+
+
+# ---------------------------------------------------------------------------
+# persistence (the save/load bugfix)
+# ---------------------------------------------------------------------------
+
+def test_save_load_preserves_selectivities_stats_and_epochs(tmp_path):
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:3])
+    store = CiaoStore(plan0)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:300])
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, plan0.clauses))
+    plan1 = evolve_plan(plan0, [ranked[2], ranked[4]])
+    store.advance_epoch(plan1)
+    chunk2 = encode_chunk(recs[300:500])
+    store.ingest_chunk(chunk2, eng.eval_fused(chunk2, plan1.clauses), epoch=1)
+    # force a JIT promotion so every block list is non-trivial
+    DataSkippingScanner(store).scan(Query((ranked[7],)))
+
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    loaded = CiaoStore.load(path)
+
+    # the replanner's feedback state survives the restore
+    assert loaded.epoch == 1
+    # ... including the workload window (coverage drift resumes warm)
+    assert loaded.query_log == store.query_log
+    assert sorted(loaded.plans) == [0, 1]
+    assert loaded.plans[0].clauses == plan0.clauses
+    assert loaded.plan.global_ids == plan1.global_ids
+    for e in (0, 1):
+        assert loaded.epoch_records(e) == store.epoch_records(e)
+        assert np.array_equal(loaded.observed_selectivities(e),
+                              store.observed_selectivities(e))
+    assert loaded.observed_selectivities().any()  # regression: was all-zero
+    s0, s1 = store.stats, loaded.stats
+    assert (s0.n_records, s0.n_loaded, s0.n_jit_loaded) == \
+        (s1.n_records, s1.n_loaded, s1.n_jit_loaded)
+    assert s1.loading_ratio == s0.loading_ratio
+
+    # scans agree block-for-block after restore
+    q = Query((ranked[4],))
+    r1 = DataSkippingScanner(store, log_queries=False).scan(q)
+    r2 = DataSkippingScanner(loaded, log_queries=False).scan(q)
+    assert (r1.count, r1.rows_scanned) == (r2.count, r2.rows_scanned)
+
+    # restoring under a mismatched plan is rejected loudly
+    with pytest.raises(ValueError):
+        CiaoStore.load(path, PushdownPlan(clauses=ranked[5:7]))
+
+
+# ---------------------------------------------------------------------------
+# the control loop
+# ---------------------------------------------------------------------------
+
+def _drift_setup(n_queries=60):
+    pool = predicate_pool("ycsb")
+    wl1, wl2 = drifting_workloads(
+        pool,
+        [DriftPhase(n_queries, "zipf", 1.5, seed=1),
+         DriftPhase(n_queries, "zipf", 2.0, seed=7)],
+    )
+    sample = generate_records("ycsb", 300, seed=17)
+    return pool, wl1, wl2, sample
+
+
+def test_replanner_bumps_epoch_on_coverage_drift():
+    pool, wl1, wl2, sample = _drift_setup()
+    sel = estimate_selectivities(wl1.clause_pool(), sample)
+    hot = sorted(wl1.clause_pool(),
+                 key=lambda c: sum(1 for q in wl1.queries if c in q.clauses))
+    plan0 = PushdownPlan(clauses=hot[-2:])
+    store = CiaoStore(plan0)
+    policy = ReplanPolicy(check_every_records=256, min_observe_records=128,
+                          workload_window=24, min_window_queries=8)
+    repl = Replanner(store, sample, budget_us=60.0, base_workload=wl1,
+                     cost_model=CostModel().scaled(20.0), policy=policy,
+                     planned_sel=sel)
+    eng = NumpyEngine()
+    scanner = DataSkippingScanner(store)
+    shards = [ClientShard("ycsb", i, eng, plan0, chunk_records=128)
+              for i in range(2)]
+    q1, q2 = iter(wl1.queries), iter(wl2.queries)
+
+    def on_chunk(done):
+        src = q1 if store.epoch == 0 and done <= 4 else q2
+        for _ in range(4):
+            q = next(src, None)
+            if q is not None:
+                scanner.scan(q)
+
+    coord = IngestCoordinator(shards, store, replanner=repl,
+                              on_chunk=on_chunk)
+    coord.run(chunks_per_client=6)
+    assert coord.epoch_bumps >= 1
+    assert store.epoch >= 1
+    assert repl.history[0].reason == "coverage"
+    # the broadcast reached every shard: all evaluate the current plan
+    assert all(s.plan is store.plan for s in shards)
+    # ingest continued under the new epoch
+    assert store.epoch_records(store.epoch) > 0
+    # client timing reports recalibrated the cost model
+    assert repl.cost_scale != 1.0
+
+
+def test_replanner_quiet_without_drift():
+    pool, wl1, _, sample = _drift_setup()
+    sel = estimate_selectivities(wl1.clause_pool(), sample)
+    hot = sorted(wl1.clause_pool(),
+                 key=lambda c: sum(1 for q in wl1.queries if c in q.clauses))
+    plan0 = PushdownPlan(clauses=hot[-2:])
+    store = CiaoStore(plan0)
+    policy = ReplanPolicy(check_every_records=256, min_observe_records=128,
+                          workload_window=24, min_window_queries=8)
+    repl = Replanner(store, sample, budget_us=60.0, base_workload=wl1,
+                     cost_model=CostModel().scaled(20.0), policy=policy,
+                     planned_sel=sel)
+    eng = NumpyEngine()
+    scanner = DataSkippingScanner(store)
+    shards = [ClientShard("ycsb", i, eng, plan0, chunk_records=128)
+              for i in range(2)]
+    qs = iter(wl1.queries * 2)  # stationary workload: same distribution
+
+    def on_chunk(done):
+        for _ in range(4):
+            q = next(qs, None)
+            if q is not None:
+                scanner.scan(q)
+
+    coord = IngestCoordinator(shards, store, replanner=repl,
+                              on_chunk=on_chunk)
+    coord.run(chunks_per_client=6)
+    assert store.epoch == 0 and coord.epoch_bumps == 0
+
+
+def test_observe_timing_recalibrates_and_clamps():
+    ranked, recs = _ycsb_plans()
+    plan0 = PushdownPlan(clauses=ranked[:2])
+    store = CiaoStore(plan0)
+    repl = Replanner(store, recs[:100], budget_us=5.0,
+                     policy=ReplanPolicy(max_cost_scale=50.0))
+    predicted = repl._predicted_plan_us()
+    assert predicted > 0
+    # observed exactly 3x the predicted cost -> scale 3
+    repl.observe_timing(1000, predicted * 3 * 1000 / 1e6)
+    assert repl.cost_scale == pytest.approx(3.0, rel=1e-6)
+    # absurd reports clamp at the policy bound
+    repl.observe_timing(1000, predicted * 1e6 * 1000 / 1e6)
+    assert repl.cost_scale <= 50.0
+    m = CostModel()
+    s = m.scaled(2.0)
+    assert s.clause_cost(plan0.clauses[0], 0.1) == pytest.approx(
+        2.0 * m.clause_cost(plan0.clauses[0], 0.1))
+    with pytest.raises(ValueError):
+        m.scaled(0.0)
+
+
+def test_query_log_stays_bounded():
+    plan = PushdownPlan(clauses=[clause(presence("a"))])
+    store = CiaoStore(plan)
+    store.query_log_cap = 10
+    q = Query((plan.clauses[0],))
+    for _ in range(100):
+        store.log_query(q)
+    assert len(store.query_log) <= 20  # trimmed at 2x cap, back to cap
+    assert store.query_log[-1] is q
+
+
+def test_forced_step_same_selection_is_a_noop():
+    pool, wl1, _, sample = _drift_setup()
+    rep_sel = estimate_selectivities(wl1.clause_pool(), sample)
+    from repro.core.planner import build_plan
+    cm = CostModel().scaled(20.0)
+    rep = build_plan(wl1, sample, budget_us=60.0, cost_model=cm)
+    store = CiaoStore(PushdownPlan(clauses=list(rep.plan.clauses)))
+    repl = Replanner(store, sample, budget_us=60.0, base_workload=wl1,
+                     cost_model=cm, planned_sel=rep_sel,
+                     policy=ReplanPolicy(recalibrate_cost=False))
+    # no observations at all: the re-solve reproduces the same selection
+    assert repl.step(force=True) is None
+    assert store.epoch == 0 and not repl.history

@@ -1,9 +1,8 @@
 """Submodular selection: invariants, approximation bound, CELF equivalence."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.predicates import Clause, Query, clause, key_value
+from repro.core.predicates import Query, clause, key_value
 from repro.core.selection import (
     SelectionProblem,
     brute_force,

@@ -13,7 +13,7 @@ from repro.models.model import build_model
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
 from repro.train.optimizer import OptConfig
-from repro.train.train_step import make_train_step, quantize_int8, dequantize_int8
+from repro.train.train_step import dequantize_int8, make_train_step, quantize_int8
 
 SHAPE = ShapeConfig("smoke", "train", 64, 4)
 
