@@ -92,10 +92,69 @@ def validate_replan(obj: dict) -> None:
              "adaptive run never advanced the plan epoch")
 
 
+_TIER_SCENARIO_ROW = {
+    "mode": str,
+    "tier_assignment": list,
+    "budget_spent_us": numbers.Real,
+    "budget_ok": bool,
+    "n_records": numbers.Integral,
+    "eff_loading_ratio": numbers.Real,
+    "loading_s": numbers.Real,
+    "scan_s": numbers.Real,
+    "end_to_end_s": numbers.Real,
+    "retier_events": numbers.Integral,
+}
+
+
+def validate_tiers(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid tiers artifact.
+
+    Beyond shape, this gates the benchmark's CLAIM: the tier allocator
+    must beat BOTH uniform baselines on effective loading ratio and
+    end-to-end time, within the global budget, on a nested family.
+    """
+    _require(isinstance(obj, dict), "tiers", "top level must be an object")
+    for key in ("global_budget_us", "fleet", "tiers", "tiered",
+                "uniform_min", "uniform_max", "wins"):
+        _require(key in obj, "tiers", f"missing key {key!r}")
+    _require(isinstance(obj["tiers"], dict), "tiers",
+             "'tiers' must be an object")
+    sizes = obj["tiers"].get("sizes")
+    _require(isinstance(sizes, list) and len(sizes) >= 2, "tiers.sizes",
+             "need >= 2 nested tiers")
+    _require(all(a <= b for a, b in zip(sizes, sizes[1:])), "tiers.sizes",
+             f"tier sizes must be ascending (nested): {sizes}")
+    for side in ("tiered", "uniform_min", "uniform_max"):
+        _check_fields(obj[side], _TIER_SCENARIO_ROW, side)
+        _require(obj[side]["eff_loading_ratio"] > 0, side,
+                 "eff_loading_ratio must be positive")
+    tiered, umin, umax = (obj["tiered"], obj["uniform_min"],
+                          obj["uniform_max"])
+    _require(tiered["budget_ok"], "tiered",
+             "the allocator exceeded the global budget")
+    _require(tiered["retier_events"] >= 1, "tiered",
+             "cost-drift re-tiering never fired (the drift demo must "
+             "re-solve the allocation)")
+    _require(not umax["budget_ok"], "uniform_max",
+             "uniform-max fit the budget: the scenario has no trade-off")
+    _require(
+        tiered["eff_loading_ratio"]
+        < min(umin["eff_loading_ratio"], umax["eff_loading_ratio"]),
+        "tiers", "tiered allocation must beat both uniform baselines on "
+        "effective loading ratio")
+    _require(
+        tiered["end_to_end_s"]
+        < min(umin["end_to_end_s"], umax["end_to_end_s"]),
+        "tiers", "tiered allocation must beat both uniform baselines on "
+        "end-to-end time")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
     "bench_replan.json": validate_replan,
+    "bench_tiers.json": validate_tiers,
+    "BENCH_tiers.json": validate_tiers,
 }
 
 

@@ -1,0 +1,326 @@
+"""Heterogeneous-fleet benchmark: tiered allocation vs uniform budgets.
+
+The paper's §VI trade-off — "different budgets for different clients" —
+measured end to end on a fleet of 1 fast, 4 medium and 8 slow clients
+(speed = relative records/sec; measured eval wall-clock is divided by
+speed, so a slow device also *evaluates* slower).  One ``PlanFamily`` of
+nested budget tiers is solved with a single CELF run; three policies
+split the SAME global client-cost budget (fleet-record-weighted average
+µs/record):
+
+  * ``tiered``      — ``FleetTierAllocator`` (greedy multiple-choice
+    knapsack over per-client cost scales): cheap/fast clients climb
+    tiers while slow clients run a short prefix.  The policy comparison
+    runs on frozen ``1/speed`` cost-scale priors so the allocation is
+    deterministic; cost-drift re-tiering is then demonstrated after the
+    measured phase by degrading one client 5x and letting the next
+    cost-report check re-solve (``retier_demo`` in the artifact);
+  * ``uniform_min`` — the largest SINGLE tier the whole fleet can run
+    within the budget (slow clients' cost inflation caps everyone at the
+    floor tier);
+  * ``uniform_max`` — every client runs the top tier, budget be damned
+    (the "just push everything" baseline; reported as infeasible).
+
+The query batch is the workload's held-out tail restricted to queries the
+MID tier covers (steady-state coverage is the replan control plane's job
+— bench_replan measures drift; this benchmark isolates allocation).  The
+floor tier does NOT cover all of them, which is exactly the trade-off:
+uniform-min's whole store sits at floor coverage, so the first uncovered
+query JIT-promotes every remainder (effective loading ratio -> ~1, scans
+crawl through promoted rows); uniform-max avoids that by burning slow
+clients (full-plan eval at 4x time inflation dominates loading) and by
+loading the fat high-selectivity tail of the clause set on every chunk.
+The tiered allocator pays floor coverage only for the slow fifth of the
+records and keeps the fleet inside the budget.
+
+Metrics per policy (ingest + the query batch):
+
+  * ``eff_loading_ratio`` — (loaded + JIT-loaded) / ingested records;
+  * ``loading_s``         — max per-client eval wall-clock (the fleet
+    works in parallel; slow-device inflation included) + server load;
+  * ``scan_s``            — wall-clock of the query batch;
+  * ``end_to_end_s``      — loading_s + scan_s;
+  * ``budget_spent_us``   — modeled fleet spend with live cost scales,
+    sum_j weight_j * scale_j * tier_cost[t_j].
+
+``bench_schema.validate_tiers`` gates the artifact: tiered must beat
+BOTH baselines on eff_loading_ratio and end_to_end_s, within budget.
+
+    PYTHONPATH=src python -m benchmarks.bench_tiers
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.cost_model import CostModel, calibrate_scaled
+from repro.core.planner import build_plan_family
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore, DataSkippingScanner, PlanFamily
+from repro.core.workload import Workload, generate_workload
+from repro.data.datasets import generate_records, predicate_pool
+from repro.data.pipeline import ClientShard, FleetTierAllocator, IngestCoordinator
+
+FLEET = ((4.0, 1), (1.0, 4), (0.25, 8))   # (speed, count): fast/medium/slow
+
+
+def _fleet_shards(dataset: str, plan, chunk_records: int,
+                  cost_ewma_alpha: float = 0.3) -> list[ClientShard]:
+    eng = NumpyEngine()
+    shards = []
+    for speed, count in FLEET:
+        for _ in range(count):
+            shards.append(ClientShard(dataset, len(shards), eng, plan,
+                                      chunk_records=chunk_records,
+                                      speed=speed,
+                                      cost_ewma_alpha=cost_ewma_alpha))
+    return shards
+
+
+def _weights(shards: list[ClientShard]) -> np.ndarray:
+    rates = np.array([s.speed * s.chunk_records for s in shards])
+    return rates / rates.sum()
+
+
+def _modeled_spend(family: PlanFamily, shards) -> float:
+    w = _weights(shards)
+    return float(sum(
+        wi * s.cost_scale * family.tier_costs[s.tier]
+        for wi, s in zip(w, shards)))
+
+
+def _measured_tier_costs(family: PlanFamily, sample: list[bytes],
+                         repeats: int = 3) -> tuple[float, ...]:
+    """Per-tier measured µs/record on THIS hardware (paper §V-D spirit).
+
+    The analytic cost model prices clauses additively, but a vectorized
+    engine amortizes per-chunk overheads — the floor tier's real cost is
+    NOT 1/20th of the top tier's.  Re-pricing the family's tiers from
+    timed probes keeps the allocator's budget arithmetic and every
+    shard's cost-scale EWMA (measured / modeled) anchored to the same
+    scale, so allocations don't drift with the machine the benchmark
+    happens to run on.
+    """
+    eng = NumpyEngine()
+    chunk = encode_chunk(sample)
+    costs = []
+    for s in family.tier_sizes:
+        if s == 0:
+            costs.append(0.0)
+            continue
+        cl = family.plan.clauses[:s]
+        eng.eval_fused(chunk, cl)   # warm any caches
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            eng.eval_fused(chunk, cl)
+            best = min(best, time.perf_counter() - t0)
+        costs.append(best / max(chunk.n_records, 1) * 1e6)
+    return tuple(float(c) for c in np.maximum.accumulate(costs))
+
+
+def _uniform_min_tier(family: PlanFamily, shards, budget_us: float) -> int:
+    """Largest single tier the whole fleet can run within the budget."""
+    w = _weights(shards)
+    fleet_scale = float(sum(wi * s.cost_scale for wi, s in zip(w, shards)))
+    t_min = 0
+    for t, cost in enumerate(family.tier_costs):
+        if fleet_scale * cost <= budget_us + 1e-9:
+            t_min = t
+    return t_min
+
+
+def _scenario(
+    mode: str, *, dataset: str, family: PlanFamily, budget_us: float,
+    exec_queries: list[Query], chunk_records: int, chunks_per_client: int,
+) -> dict:
+    store = CiaoStore(family)
+    # frozen cost-scale priors (1/speed): the POLICY comparison must be
+    # deterministic, not a function of transient host timing noise — live
+    # EWMA re-tiering is exercised by the drift demo below and by
+    # tests/test_tiers.py::test_retier_on_cost_drift
+    shards = _fleet_shards(dataset, family.plan, chunk_records,
+                           cost_ewma_alpha=0.0)
+    allocator = None
+    if mode == "tiered":
+        allocator = FleetTierAllocator(family, budget_us,
+                                       retier_every_records=8 * chunk_records)
+    elif mode == "uniform_min":
+        t = _uniform_min_tier(family, shards, budget_us)
+        for s in shards:
+            s.set_family(family, t)
+    elif mode == "uniform_max":
+        for s in shards:
+            s.set_family(family, family.top_tier)
+    else:
+        raise ValueError(mode)
+    # work stealing ON: idle fast clients claim pending slots, so record
+    # volume lands rate-proportionally (the allocator's weight model) and
+    # a stolen chunk ships the STEALING client's tier coverage
+    coord = IngestCoordinator(shards, store, allocator=allocator)
+    coord.run(chunks_per_client=chunks_per_client)
+
+    scanner = DataSkippingScanner(store)
+    t0 = time.perf_counter()
+    scanned = skipped = matches = 0
+    for q in exec_queries:
+        r = scanner.scan(q)
+        scanned += r.rows_scanned
+        skipped += r.rows_skipped
+        matches += r.count
+    scan_s = time.perf_counter() - t0
+
+    stats = store.stats
+    w = _weights(shards)
+    spent_us = _modeled_spend(family, shards)
+    measured_us = float(sum(
+        wi * s.observed_us_per_record() for wi, s in zip(w, shards)))
+    loading_s = max(s.eval_time_s for s in shards) + stats.load_time_s
+    assignment = [s.tier for s in shards]
+    retier_demo = None
+    if allocator is not None:
+        # cost-drift re-tiering demo (after the measured phase so metrics
+        # stay comparable): the busiest client degrades 5x; the next
+        # cost-report check must re-solve and demote it
+        before = [s.tier for s in shards]
+        shards[0].cost_scale *= 5.0
+        allocator.on_records(allocator.retier_every_records, shards)
+        retier_demo = {"before": before, "after": [s.tier for s in shards],
+                       "degraded_client": 0}
+    return {
+        "mode": mode,
+        "tier_assignment": assignment,
+        "budget_spent_us": round(spent_us, 4),
+        "measured_us_per_record": round(measured_us, 4),
+        "budget_ok": bool(spent_us <= budget_us * 1.10),  # EWMA drift slack
+        "n_records": stats.n_records,
+        "loading_ratio_ingest": round(stats.loading_ratio, 4),
+        "eff_loading_ratio": round(
+            (stats.n_loaded + stats.n_jit_loaded) / stats.n_records, 4),
+        "loading_s": round(loading_s, 4),
+        "scan_s": round(scan_s, 4),
+        "end_to_end_s": round(loading_s + scan_s, 4),
+        "rows_scanned": scanned,
+        "skip_frac": round(skipped / max(scanned + skipped, 1), 4),
+        "matches": matches,
+        "retier_events": allocator.retier_events if allocator else 0,
+        "retier_demo": retier_demo,
+        "group_records": {
+            f"{e}:{t}": n for (e, t), n in sorted(store.group_records.items())
+        },
+    }
+
+
+def run(
+    dataset: str = "ycsb", *, n_records: int = 13312,
+    n_queries: int = 300, n_exec_queries: int = 120, seed: int = 3,
+) -> dict:
+    pool = predicate_pool(dataset)
+    rng = np.random.default_rng(seed)
+    # zipf 1.1: hot clauses dominate but no single clause covers every
+    # query — the floor tier genuinely under-covers, the mid tier doesn't
+    wl = generate_workload(pool, n_queries=n_queries, distribution="zipf",
+                           zipf_a=1.1, rng=rng, name="fleet-queries")
+    sample = generate_records(dataset, 400, seed=17)
+    cost_model = calibrate_scaled(sample, pool[:4], NumpyEngine(),
+                                  base=CostModel())
+    sel = {c: 0.2 for c in pool}
+    costs = sorted(cost_model.clause_cost(c, sel[c]) for c in pool)
+    med = costs[len(costs) // 2]
+    # T0 ~ the hottest 1-2 clauses, T1 ~ a lean hot prefix, T2 ~ deep
+    # (the greedy keeps adding positive-gain clauses, including the fat
+    # high-selectivity band — real benefit for their queries, real load)
+    tier_budgets = [1.5 * med, 3.0 * med, 40.0 * med]
+    rep = build_plan_family(Workload(wl.name, wl.queries[:-n_exec_queries]),
+                            sample, tier_budgets_us=tier_budgets,
+                            cost_model=cost_model)
+    # re-price tiers from timed probes so budget arithmetic and the
+    # shards' cost-scale feedback share one measured scale
+    family = PlanFamily(
+        plan=rep.family.plan, tier_sizes=rep.family.tier_sizes,
+        budgets=rep.family.budgets,
+        tier_costs=_measured_tier_costs(rep.family, sample),
+        tier_values=rep.family.tier_values,
+    )
+    # global budget: the measured cost of {fast/medium -> mid tier,
+    # slow -> floor} with the 1/speed priors, +2% headroom.  It sits
+    # strictly between uniform-floor and uniform-mid affordability
+    # (0.8*c0 + 0.55*c1 < 1.3*c1 whenever c0 < c1), so the uniform
+    # baseline is capped at the floor tier while the allocator spreads
+    # the same spend across the fleet.
+    probe = _fleet_shards(dataset, family.plan, 1)
+    w = _weights(probe)
+    target = {4.0: 1, 1.0: 1, 0.25: 0}
+    budget_us = 1.02 * float(sum(
+        wi * s.cost_scale * family.tier_costs[target[s.speed]]
+        for wi, s in zip(w, probe)))
+
+    # the held-out query batch, restricted to mid-tier-covered queries
+    t1 = set(family.tier_clauses(1))
+    t0 = set(family.tier_clauses(0))
+    tail = wl.queries[-n_exec_queries:]
+    exec_queries = [q for q in tail if any(c in t1 for c in q.clauses)]
+    n_floor_uncovered = sum(
+        1 for q in exec_queries if not any(c in t0 for c in q.clauses))
+    if not n_floor_uncovered:
+        raise RuntimeError(
+            "degenerate workload: the floor tier covers every exec query "
+            "(no allocation trade-off to measure) — lower zipf_a")
+
+    chunk_records = 256
+    n_shards = sum(c for _, c in FLEET)
+    chunks_per_client = max(n_records // (n_shards * chunk_records), 1)
+
+    common = dict(dataset=dataset, family=family, budget_us=budget_us,
+                  exec_queries=exec_queries, chunk_records=chunk_records,
+                  chunks_per_client=chunks_per_client)
+    out = {
+        "global_budget_us": round(budget_us, 4),
+        "fleet": [{"speed": s, "count": c} for s, c in FLEET],
+        "tiers": {
+            "sizes": list(family.tier_sizes),
+            "budgets": [round(b, 4) for b in family.budgets],
+            "costs": [round(c, 4) for c in family.tier_costs],
+            "values": [round(v, 4) for v in family.tier_values],
+        },
+        "n_exec_queries": len(exec_queries),
+        "n_floor_uncovered_queries": n_floor_uncovered,
+        "tiered": _scenario("tiered", **common),
+        "uniform_min": _scenario("uniform_min", **common),
+        "uniform_max": _scenario("uniform_max", **common),
+    }
+    tiered = out["tiered"]
+    out["wins"] = {
+        "eff_loading_ratio": bool(
+            tiered["eff_loading_ratio"]
+            < min(out["uniform_min"]["eff_loading_ratio"],
+                  out["uniform_max"]["eff_loading_ratio"])),
+        "end_to_end_s": bool(
+            tiered["end_to_end_s"]
+            < min(out["uniform_min"]["end_to_end_s"],
+                  out["uniform_max"]["end_to_end_s"])),
+    }
+    for mode in ("tiered", "uniform_min", "uniform_max"):
+        r = out[mode]
+        print(f"[tiers] {mode:>11}: tiers={r['tier_assignment']} "
+              f"spent {r['budget_spent_us']:.2f}/{budget_us:.2f}us "
+              f"eff_ratio {r['eff_loading_ratio']:.2%} "
+              f"load {r['loading_s']:.2f}s scan {r['scan_s']:.2f}s "
+              f"e2e {r['end_to_end_s']:.2f}s skip {r['skip_frac']:.0%}")
+    print(f"[tiers] wins: {out['wins']} "
+          f"(retier_events={tiered['retier_events']}, "
+          f"{n_floor_uncovered}/{len(exec_queries)} exec queries uncovered "
+          f"at the floor tier)")
+    return out
+
+
+if __name__ == "__main__":
+    import os
+
+    os.makedirs("artifacts", exist_ok=True)
+    out = run()
+    with open("artifacts/bench_tiers.json", "w") as f:
+        json.dump(out, f, indent=1)

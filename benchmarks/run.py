@@ -17,21 +17,19 @@ def _row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
-def write_kernels_artifacts(
-    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
-    tracked_path: str = "BENCH_kernels.json",
+def _write_gated_artifacts(
+    out: dict, *, validator, detail_name: str, quick: bool,
+    artifacts_dir: str, tracked_path: str,
 ) -> list[str]:
-    """Write the kernels benchmark JSON; returns the paths written.
+    """Schema-gated artifact writer shared by every tracked benchmark.
 
     The schema gate runs FIRST (a malformed artifact is a bug, not data).
     Quick runs only ever write under ``artifacts_dir`` — the tracked
     perf-trajectory file records full-size numbers exclusively, so a CI
     smoke run can never clobber PR-over-PR comparability.
     """
-    from .bench_schema import validate_kernels
-
-    validate_kernels(out)
-    detail = os.path.join(artifacts_dir, "bench_kernels.json")
+    validator(out)
+    detail = os.path.join(artifacts_dir, detail_name)
     with open(detail, "w") as f:
         json.dump(out, f, indent=1)
     written = [detail]
@@ -42,12 +40,37 @@ def write_kernels_artifacts(
     return written
 
 
+def write_kernels_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_kernels.json",
+) -> list[str]:
+    """Write the kernels benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_kernels
+
+    return _write_gated_artifacts(
+        out, validator=validate_kernels, detail_name="bench_kernels.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
+def write_tiers_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_tiers.json",
+) -> list[str]:
+    """Write the tiered-fleet benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_tiers
+
+    return _write_gated_artifacts(
+        out, validator=validate_tiers, detail_name="bench_tiers.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: e2e,micro,cost,selection,kernels,replan,roofline")
+        help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
+             "roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -138,6 +161,26 @@ def main() -> None:
             f"ratio_{out['adaptive']['eff_loading_ratio']:.2f}vs"
             f"{out['static']['eff_loading_ratio']:.2f};"
             f"epochs_{out['adaptive']['epoch']}",
+        ))
+
+    if only is None or "tiers" in only:
+        from . import bench_tiers
+
+        out = bench_tiers.run(
+            n_records=4864 if args.quick else 13312,
+            n_queries=200 if args.quick else 300,
+            n_exec_queries=80 if args.quick else 120,
+        )
+        write_tiers_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "tiers_fleet", 0.0,
+            f"eff_{out['tiered']['eff_loading_ratio']:.2f}vs"
+            f"{out['uniform_min']['eff_loading_ratio']:.2f}/"
+            f"{out['uniform_max']['eff_loading_ratio']:.2f};"
+            f"e2e_{out['tiered']['end_to_end_s']}vs"
+            f"{out['uniform_min']['end_to_end_s']}/"
+            f"{out['uniform_max']['end_to_end_s']};"
+            f"retiers_{out['tiered']['retier_events']}",
         ))
 
     if only is None or "roofline" in only:

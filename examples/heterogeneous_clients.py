@@ -1,9 +1,11 @@
 """Heterogeneous client budgets (paper abstract: "different budgets for
-different clients") + straggler mitigation in one scenario.
+different clients") as ONE nested plan family + a fleet tier allocator.
 
-Three client classes — sensor (0.25 µs), edge box (1 µs), rack host (4 µs) —
-each get their own knapsack solve over the same workload; a slow straggler
-in the fleet is covered by work stealing.
+One CELF run solves every budget tier at once (T0 ⊆ T1 ⊆ T2 — nested
+prefixes of the same greedy order), the allocator splits a global
+client-cost budget across a mixed fleet by measured speed, a straggler
+is covered by work stealing, and the store ingests every tier into ONE
+coverage-aware block set — no per-class stores, no per-class jit traces.
 
     PYTHONPATH=src python examples/heterogeneous_clients.py
 """
@@ -14,43 +16,55 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.client import NumpyEngine
-from repro.core.planner import plan_for_clients
-from repro.core.server import CiaoStore
+from repro.core.planner import build_plan_family
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore, DataSkippingScanner
 from repro.core.workload import generate_workload
 from repro.data.datasets import generate_records, predicate_pool
-from repro.data.pipeline import ClientShard, IngestCoordinator
+from repro.data.pipeline import ClientShard, FleetTierAllocator, IngestCoordinator
 
 records = generate_records("winlog", 2000, seed=3)
 pool = predicate_pool("winlog")
-wl = generate_workload(pool, n_queries=100, distribution="zipf", zipf_a=1.5,
+wl = generate_workload(pool, n_queries=100, distribution="zipf", zipf_a=1.2,
                        rng=np.random.default_rng(1), name="ops-queries")
 
-plans = plan_for_clients(
-    wl, records[:500],
-    client_budgets_us={"sensor": 0.25, "edge": 1.0, "rack": 4.0},
-)
-for cls, rep in plans.items():
-    print(f"\n=== client class: {cls} ===")
-    print(rep.describe())
+# one solve, three nested budget tiers: sensor / edge box / rack host
+rep = build_plan_family(wl, records[:500],
+                        tier_budgets_us=[0.25, 1.0, 4.0])
+family = rep.family
+print(rep.tiered.describe())
+print(f"nested sizes {family.tier_sizes} — every tier is a prefix of the "
+      "same clause order, so all tiers share one compiled kernel\n")
 
-# fleet: 2 sensors (one a straggler), 1 edge, 1 rack — each with its class plan
+# fleet: 1 rack host, 1 edge box, 2 sensors (one a straggler); the
+# allocator splits a global budget of 1.75 us/record (fleet-weighted)
 eng = NumpyEngine()
 fleet = [
-    ClientShard("winlog", 0, eng, plans["sensor"].plan, chunk_records=128, speed=0.2),
-    ClientShard("winlog", 1, eng, plans["sensor"].plan, chunk_records=128),
-    ClientShard("winlog", 2, eng, plans["edge"].plan, chunk_records=128),
-    ClientShard("winlog", 3, eng, plans["rack"].plan, chunk_records=128),
+    ClientShard("winlog", 0, eng, family.plan, chunk_records=128, speed=4.0),
+    ClientShard("winlog", 1, eng, family.plan, chunk_records=128),
+    ClientShard("winlog", 2, eng, family.plan, chunk_records=128, speed=0.25),
+    ClientShard("winlog", 3, eng, family.plan, chunk_records=128, speed=0.2),
 ]
-# NOTE: one store per plan in production; single-plan store shown for the
-# largest class here to keep the example focused on scheduling.
-store = CiaoStore(plans["rack"].plan)
-coord = IngestCoordinator(
-    [ClientShard("winlog", i, eng, plans["rack"].plan, chunk_records=128,
-                 speed=(0.2 if i == 0 else 1.0)) for i in range(4)],
-    store,
-)
+store = CiaoStore(family)
+allocator = FleetTierAllocator(family, budget_us=1.75)
+coord = IngestCoordinator(fleet, store, allocator=allocator)
+print("tier assignment (rack, edge, sensor, straggler):",
+      [s.tier for s in fleet])
+print(allocator.allocation.describe())
+
 coord.run(chunks_per_client=4)
 print(f"\ningested {store.stats.n_records} records, "
       f"loading ratio {store.stats.loading_ratio:.1%}, "
       f"stolen chunks {coord.stolen}, makespan {coord.makespan:.1f} "
       f"(no-steal would be {4 / 0.2:.0f})")
+print("records per (epoch, tier):",
+      {k: v for k, v in sorted(store.group_records.items())})
+
+# scans skip with whatever coverage each block carries
+q = Query((family.plan.clauses[0],))
+r = DataSkippingScanner(store).scan(q)
+print(f"\nscan: count={r.count} scanned={r.rows_scanned} "
+      f"skipped={r.rows_skipped} — per-tier breakdown:")
+for (epoch, tier), g in sorted(r.groups.items()):
+    print(f"  epoch {epoch} tier {tier}: scanned={g.rows_scanned} "
+          f"skipped={g.rows_skipped} jit={g.raw_parsed}")

@@ -245,6 +245,23 @@ class _HostEngine:
         """Same contract as the fused kernel pass (bitvectors+mask+counts)."""
         return bitvector.ChunkBitvectors.from_bits(self.eval(chunk, clauses))
 
+    def eval_fused_prefix(self, chunk: Chunk, clauses: Sequence[Clause],
+                          n_clauses: int) -> bitvector.ChunkBitvectors:
+        """Tiered evaluation: the first ``n_clauses`` of ``clauses``.
+
+        Host engines have no jit traces to share, so the view is a plain
+        slice — work genuinely scales with the tier.  The kernel engines
+        override this with a shape-preserving subset view
+        (``KernelEngine.eval_fused_prefix``); both produce bit-identical
+        results to ``eval_fused(chunk, clauses[:n_clauses])`` and reject
+        the same out-of-range prefixes.
+        """
+        clauses = list(clauses)
+        if not 0 <= n_clauses <= len(clauses):
+            raise ValueError(
+                f"prefix {n_clauses} out of range 0..{len(clauses)}")
+        return self.eval_fused(chunk, clauses[:n_clauses])
+
 
 class PythonEngine(_HostEngine):
     """Paper-faithful string::find oracle (slow; ground truth)."""

@@ -20,10 +20,12 @@ from .predicates import Clause
 from .selection import (
     SelectionProblem,
     SelectionResult,
+    TieredSelection,
     combined_celf,
     combined_greedy,
+    tiered_celf,
 )
-from .server import PushdownPlan
+from .server import PlanFamily, PushdownPlan
 from .workload import Workload, estimate_selectivities
 
 
@@ -73,6 +75,72 @@ def build_plan(
     return PlanReport(
         plan=plan, selection=result, sel=sel_map, cost=cost_map, budget_us=budget_us
     )
+
+
+@dataclass
+class FamilyReport:
+    """A :class:`PlanFamily` plus the stats it was solved from."""
+
+    family: PlanFamily
+    tiered: TieredSelection
+    sel: dict[Clause, float]
+    cost: dict[Clause, float]
+
+    @property
+    def plan(self) -> PushdownPlan:
+        return self.family.plan
+
+    def describe(self) -> str:
+        lines = [self.tiered.describe()]
+        sizes = self.family.tier_sizes
+        for i, c in enumerate(self.family.plan.clauses):
+            tier = next(t for t, s in enumerate(sizes) if i < s)
+            lines.append(
+                f"  id={i} tier>={tier} sel={self.sel[c]:.4f} "
+                f"cost={self.cost[c]:.4f}us  {c.describe()}"
+            )
+        return "\n".join(lines)
+
+
+def build_plan_family(
+    workload: Workload,
+    sample_records: Sequence[bytes],
+    *,
+    tier_budgets_us: Sequence[float],
+    cost_model: CostModel | None = None,
+    sel: Mapping[Clause, float] | None = None,
+) -> FamilyReport:
+    """Solve every budget tier with ONE CELF run -> nested plan family.
+
+    The paper's per-client-budget trade-off (§VI) without per-class
+    re-solves: ``tiered_celf`` cuts the top-budget greedy order at each
+    budget, so tier *t* is the prefix-greedy solution for
+    ``tier_budgets_us[t]`` and T0 ⊆ T1 ⊆ … ⊆ Tk by construction.  The
+    returned family's ``tier_costs``/``tier_values`` feed the fleet
+    allocator (``selection.allocate_tiers``).
+    """
+    cost_model = cost_model or CostModel()
+    pool = workload.clause_pool()
+    sel_map = (dict(sel) if sel is not None
+               else estimate_selectivities(pool, sample_records))
+    cost_map = {c: cost_model.clause_cost(c, sel_map[c]) for c in pool}
+    problem = SelectionProblem(
+        queries=tuple(workload.queries),
+        sel=sel_map,
+        cost=cost_map,
+        budget=max(tier_budgets_us),
+    )
+    tiered = tiered_celf(problem, tier_budgets_us)
+    plan = PushdownPlan(clauses=list(tiered.order))
+    family = PlanFamily(
+        plan=plan,
+        tier_sizes=tiered.tier_sizes,
+        budgets=tiered.budgets,
+        tier_costs=tuple(tiered.tier_cost(t) for t in range(tiered.n_tiers)),
+        tier_values=tiered.objectives,
+    )
+    return FamilyReport(family=family, tiered=tiered, sel=sel_map,
+                        cost=cost_map)
 
 
 def plan_for_clients(

@@ -28,9 +28,11 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from .cost_model import CostModel
-from .planner import PlanReport, build_plan
+from .planner import PlanReport, build_plan, build_plan_family
 from .predicates import Clause, Query
-from .server import CiaoStore, PushdownPlan, evolve_plan
+from .server import (
+    CiaoStore, PlanFamily, PushdownPlan, evolve_family, evolve_plan,
+)
 from .workload import Workload, estimate_selectivities
 
 SEL_FLOOR = 1e-4
@@ -82,7 +84,7 @@ class ReplanEvent:
     epoch: int
     reason: str
     signal: DriftSignal
-    report: PlanReport
+    report: PlanReport          # FamilyReport under tiered replanning
     remap: np.ndarray          # new local row -> previous local row, -1 = new
     cost_scale: float
 
@@ -114,16 +116,33 @@ class Replanner:
         store: CiaoStore,
         sample_records: Sequence[bytes],
         *,
-        budget_us: float,
+        budget_us: float | None = None,
+        tier_budgets_us: Sequence[float] | None = None,
         base_workload: Workload | None = None,
         cost_model: CostModel | None = None,
         policy: ReplanPolicy | None = None,
         algorithm: str = "celf",
         planned_sel: Mapping[Clause, float] | None = None,
     ):
+        if budget_us is None and not tier_budgets_us:
+            raise ValueError("need budget_us or tier_budgets_us")
         self.store = store
         self.sample_records = list(sample_records)
-        self.budget_us = budget_us
+        # tiered mode: re-solves emit a whole PlanFamily (nested budget
+        # cut-points of one CELF run); the top tier budget IS the budget,
+        # so a conflicting explicit budget_us would be silently ignored —
+        # reject it instead
+        self.tier_budgets_us = (tuple(tier_budgets_us)
+                                if tier_budgets_us else None)
+        if self.tier_budgets_us is not None and budget_us is not None \
+                and float(budget_us) != max(self.tier_budgets_us):
+            raise ValueError(
+                f"conflicting budgets: budget_us={budget_us} but the top "
+                f"tier budget is {max(self.tier_budgets_us)} (tiered "
+                "re-solves run under the tier budgets; pass one or the "
+                "other)")
+        self.budget_us = (float(budget_us) if budget_us is not None
+                          else max(self.tier_budgets_us))
         self.base_workload = base_workload
         self.cost_model = cost_model or CostModel()
         self.policy = policy or ReplanPolicy()
@@ -142,11 +161,21 @@ class Replanner:
         self.history: list[ReplanEvent] = []
 
     # -- feedback intake -----------------------------------------------------
-    def observe_timing(self, n_records: int, elapsed_s: float) -> None:
-        """Client timing report: whole-plan eval of ``n_records`` records."""
+    def observe_timing(self, n_records: int, elapsed_s: float,
+                       n_clauses: int | None = None) -> None:
+        """Client timing report: plan eval of ``n_records`` records.
+
+        ``n_clauses`` names how many leading clauses the client actually
+        evaluated (its tier's coverage).  ``None`` means the whole plan —
+        a tiered fleet MUST pass its tier size, otherwise a mostly-floor
+        fleet's short-prefix timings get compared against whole-plan
+        predictions and the recalibration collapses toward the clamp.
+        """
         if n_records <= 0 or not self.store.plan.n:
             return
-        predicted = self._predicted_plan_us() * n_records
+        predicted = self._predicted_plan_us(n_clauses) * n_records
+        if predicted <= 0.0:
+            return  # empty tier: no cost signal in this report
         self._pred_us += predicted
         self._obs_us += elapsed_s * 1e6
         if self.policy.recalibrate_cost and self._pred_us > 0:
@@ -155,12 +184,14 @@ class Replanner:
                 1.0 / self.policy.max_cost_scale, self.policy.max_cost_scale,
             ))
 
-    def _predicted_plan_us(self) -> float:
+    def _predicted_plan_us(self, n_clauses: int | None = None) -> float:
         plan = self.store.plan
+        clauses = (plan.clauses if n_clauses is None
+                   else plan.clauses[:n_clauses])
         sel = self._planned_sel
         return sum(
             self.cost_model.clause_cost(c, sel.get(c, SEL_FLOOR))
-            for c in plan.clauses
+            for c in clauses
         )
 
     # -- drift detection -----------------------------------------------------
@@ -180,7 +211,13 @@ class Replanner:
         sel_drift = 0.0
         if plan.n and n_obs:
             obs = store.observed_selectivities()
+            cov = store.clause_records()
             for c, i in plan.ids.items():
+                # a clause no produced tier covered has obs == 0 by
+                # construction, not by measurement — drift must only be
+                # computed from adequately covered clauses
+                if cov[i] < self.policy.min_observe_records:
+                    continue
                 planned = max(self._planned_sel.get(c, SEL_FLOOR), SEL_FLOOR)
                 denom = max(planned, self.policy.sel_noise_floor)
                 sel_drift = max(sel_drift,
@@ -189,8 +226,12 @@ class Replanner:
                            n_observed=n_obs, n_window=len(window))
 
     # -- the loop ------------------------------------------------------------
-    def step(self, force: bool = False) -> PushdownPlan | None:
-        """Check drift; re-solve and advance the store epoch if triggered."""
+    def step(self, force: bool = False) -> "PushdownPlan | PlanFamily | None":
+        """Check drift; re-solve and advance the store epoch if triggered.
+
+        Returns the new plan (or, under ``tier_budgets_us``, the new
+        :class:`PlanFamily`) when the epoch advanced, else ``None``.
+        """
         store = self.store
         if not force:
             since = store.stats.n_records - self._records_at_last_check
@@ -222,13 +263,21 @@ class Replanner:
                 estimate_selectivities(missing, self.sample_records))
         sel = {c: self._sel_cache[c] for c in pool}
         obs = store.observed_selectivities()
+        cov = store.clause_records()
         if signal.n_observed >= self.policy.min_observe_records:
             for c, i in store.plan.ids.items():
+                # only clauses with real per-clause coverage update the
+                # cache: a tier-uncovered clause's obs of 0 would clobber
+                # its sample estimate with a fabricated floor value
+                if cov[i] < self.policy.min_observe_records:
+                    continue
                 self._sel_cache[c] = max(float(obs[i]), SEL_FLOOR)
                 if c in sel:
                     sel[c] = self._sel_cache[c]
         cm = (self.cost_model.scaled(self.cost_scale)
               if self.policy.recalibrate_cost else self.cost_model)
+        if self.tier_budgets_us is not None:
+            return self._replan_tiered(reason, signal, workload, sel, cm)
         report = build_plan(
             workload, self.sample_records, budget_us=self.budget_us,
             cost_model=cm, algorithm=self.algorithm, sel=sel,
@@ -253,3 +302,49 @@ class Replanner:
             report=report, remap=remap, cost_scale=self.cost_scale,
         ))
         return new_plan
+
+    def _replan_tiered(self, reason: str, signal: DriftSignal,
+                       workload: Workload, sel, cm) -> PlanFamily | None:
+        """Tiered re-solve: one CELF run, nested cut-points, new family.
+
+        Families are immutable per epoch — a chunk's coverage is validated
+        against ITS epoch's tier sizes, so even a pure tier-boundary move
+        (same clauses, shifted cut-points from cost recalibration) must
+        ride an epoch bump; in-flight chunks then fail with
+        StaleEpochError and get re-evaluated, never mis-validated.
+        """
+        store = self.store
+        rep = build_plan_family(
+            workload, self.sample_records,
+            tier_budgets_us=self.tier_budgets_us, cost_model=cm, sel=sel,
+        )
+        # no-change guard on per-tier clause SETS, not order: the greedy
+        # may swap near-equal-gain clauses within a tier after an obs
+        # update, and tiers are prefix cuts — if every cut's set matches
+        # (sizes equal), every tier's coverage is semantically identical
+        # and an epoch bump would only reset stats / invalidate chunks
+        same_tiers = (
+            rep.family.tier_sizes == store.family.tier_sizes
+            and all(
+                set(rep.tiered.order[:s]) == set(store.plan.clauses[:s])
+                for s in rep.family.tier_sizes)
+        )
+        if same_tiers:
+            self._planned_sel = {
+                c: self._sel_cache.get(c, sel.get(c, SEL_FLOOR))
+                for c in store.plan.clauses
+            }
+            return None
+        family = evolve_family(
+            store.plan, rep.tiered.order, rep.family.tier_sizes,
+            budgets=rep.family.budgets, tier_costs=rep.family.tier_costs,
+            tier_values=rep.family.tier_values,
+        )
+        remap = store.advance_epoch(family)
+        self._planned_sel = {c: sel.get(c, SEL_FLOOR)
+                             for c in family.plan.clauses}
+        self.history.append(ReplanEvent(
+            epoch=family.epoch, reason=reason, signal=signal,
+            report=rep, remap=remap, cost_scale=self.cost_scale,
+        ))
+        return family

@@ -22,7 +22,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Iterable, Mapping
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -166,13 +166,12 @@ def combined_greedy(problem: SelectionProblem) -> SelectionResult:
 # CELF lazy greedy (beyond-paper optimization, identical output)
 # ---------------------------------------------------------------------------
 
-def celf_greedy(problem: SelectionProblem, *, ratio: bool) -> SelectionResult:
-    """Lazy greedy with a max-heap of stale gains (upper bounds).
+def _celf_run(problem: SelectionProblem, *, ratio: bool
+              ) -> tuple[list[Clause], list[float], _Marginals]:
+    """The CELF loop itself: selection order + cumulative costs + marginals.
 
-    Submodularity guarantees a clause's marginal gain only decreases as S
-    grows, so a heap entry whose gain was computed at the current round size
-    is exact and safe to pop.  Ties are broken identically to the eager
-    greedy (by heap order on (-key, seq)).
+    Shared by :func:`celf_greedy` (single budget) and :func:`tiered_celf`
+    (nested budget cut-points over ONE run).
     """
     marg = _Marginals(problem)
     heap: list[tuple[float, int, Clause]] = []
@@ -182,8 +181,8 @@ def celf_greedy(problem: SelectionProblem, *, ratio: bool) -> SelectionResult:
         key = g / problem.cost[c] if ratio else g
         heapq.heappush(heap, (-key, next(seq), c))
     S: list[Clause] = []
+    cum_cost: list[float] = []
     spent = 0.0
-    stale: list[tuple[float, int, Clause]] = []
     round_id = 0
     fresh: dict[Clause, int] = {c: 0 for c in problem.candidates()}
     while heap:
@@ -193,6 +192,7 @@ def celf_greedy(problem: SelectionProblem, *, ratio: bool) -> SelectionResult:
         if fresh[c] == round_id:
             S.append(c)
             spent += problem.cost[c]
+            cum_cost.append(spent)
             marg.add(c)
             round_id += 1
         else:
@@ -200,10 +200,22 @@ def celf_greedy(problem: SelectionProblem, *, ratio: bool) -> SelectionResult:
             key = g / problem.cost[c] if ratio else g
             fresh[c] = round_id
             heapq.heappush(heap, (-key, sq, c))
+    return S, cum_cost, marg
+
+
+def celf_greedy(problem: SelectionProblem, *, ratio: bool) -> SelectionResult:
+    """Lazy greedy with a max-heap of stale gains (upper bounds).
+
+    Submodularity guarantees a clause's marginal gain only decreases as S
+    grows, so a heap entry whose gain was computed at the current round size
+    is exact and safe to pop.  Ties are broken identically to the eager
+    greedy (by heap order on (-key, seq)).
+    """
+    S, cum_cost, marg = _celf_run(problem, ratio=ratio)
     return SelectionResult(
         selected=S,
         objective=marg.objective_value(),
-        total_cost=spent,
+        total_cost=cum_cost[-1] if cum_cost else 0.0,
         algorithm="celf-ratio" if ratio else "celf-naive",
         evaluations=marg.evaluations,
     )
@@ -220,6 +232,188 @@ def combined_celf(problem: SelectionProblem) -> SelectionResult:
         algorithm=f"combined({best.algorithm})",
         evaluations=a.evaluations + b.evaluations,
     )
+
+
+# ---------------------------------------------------------------------------
+# multi-budget (tiered) selection — one CELF run, nested budget cut-points
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TieredSelection:
+    """Nested budget tiers T0 ⊆ T1 ⊆ … ⊆ Tk from ONE CELF run.
+
+    ``order`` is the greedy selection order under the TOP budget; tier *t*
+    is the longest prefix whose cumulative cost fits ``budgets[t]``.  The
+    greedy prefix property makes every tier the prefix-greedy solution for
+    its own budget, and the nesting invariant Ti ⊆ Ti+1 holds by
+    construction — which is what lets a fleet run unequal tiers against
+    ONE clause universe (clause local ids are prefix-stable across tiers).
+    """
+
+    budgets: tuple[float, ...]      # ascending
+    order: tuple[Clause, ...]       # greedy order under the top budget
+    cum_costs: tuple[float, ...]    # cumulative cost after each selection
+    tier_sizes: tuple[int, ...]     # |Tt|, non-decreasing, last == len(order)
+    objectives: tuple[float, ...]   # f(Tt) per tier
+    evaluations: int = 0
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.budgets)
+
+    def tier(self, t: int) -> tuple[Clause, ...]:
+        return self.order[: self.tier_sizes[t]]
+
+    def tier_cost(self, t: int) -> float:
+        k = self.tier_sizes[t]
+        return self.cum_costs[k - 1] if k else 0.0
+
+    def describe(self) -> str:
+        parts = [
+            f"T{t}: |S|={self.tier_sizes[t]} f={self.objectives[t]:.4f} "
+            f"cost={self.tier_cost(t):.3f}/{self.budgets[t]:.3f}"
+            for t in range(self.n_tiers)
+        ]
+        return "tiered-celf  " + "  ".join(parts)
+
+
+def tiered_celf(problem: SelectionProblem,
+                budgets: Sequence[float], *, ratio: bool = True
+                ) -> TieredSelection:
+    """Solve every budget tier with ONE CELF run (paper §VI trade-off).
+
+    ``problem.budget`` is ignored; the run uses ``max(budgets)``.  Budgets
+    must be ascending.  Because CELF emits clauses in greedy order with
+    monotone cumulative cost, cutting that order at each budget yields
+    nested tiers — no per-tier re-solve, so a k-tier family costs the same
+    marginal evaluations as the single top-budget solve.
+    """
+    if not budgets:
+        raise ValueError("need at least one tier budget")
+    bs = tuple(float(b) for b in budgets)
+    if any(b < 0 for b in bs):
+        raise ValueError(f"tier budgets must be non-negative: {bs}")
+    if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
+        raise ValueError(f"tier budgets must be ascending: {bs}")
+    top = SelectionProblem(queries=problem.queries, sel=problem.sel,
+                           cost=problem.cost, budget=bs[-1])
+    order, cum, marg = _celf_run(top, ratio=ratio)
+    sizes = []
+    for b in bs:
+        k = 0
+        while k < len(order) and cum[k] <= b + 1e-12:
+            k += 1
+        sizes.append(k)
+    objectives = tuple(objective(problem, order[:k]) for k in sizes)
+    return TieredSelection(
+        budgets=bs, order=tuple(order), cum_costs=tuple(cum),
+        tier_sizes=tuple(sizes), objectives=objectives,
+        evaluations=marg.evaluations,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fleet tier allocation — split a GLOBAL client-cost budget across clients
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClientProfile:
+    """What the allocator knows about one client.
+
+    ``cost_scale`` — measured µs spent per *modeled* µs of plan cost (a
+    slow phone has scale ≫ 1; recalibrated online from per-shard timing
+    reports).  ``weight`` — the client's share of ingested records per
+    unit time (its data volume: savings from pushing a clause set to this
+    client scale with how many records it contributes).
+    """
+
+    cost_scale: float = 1.0
+    weight: float = 1.0
+
+
+@dataclass
+class TierAllocation:
+    """Per-client tier assignment under a global cost budget."""
+
+    tiers: list[int]            # tier index per client
+    spent: float                # sum_j weight_j * scale_j * tier_cost[t_j]
+    budget: float
+    expected_savings: float     # sum_j weight_j * tier_value[t_j]
+    upgrades: int = 0           # greedy upgrade steps taken
+
+    @property
+    def feasible(self) -> bool:
+        return self.spent <= self.budget + 1e-9
+
+    def describe(self) -> str:
+        return (f"tiers={self.tiers} spent={self.spent:.3f}/"
+                f"{self.budget:.3f} savings={self.expected_savings:.4f}")
+
+
+def allocate_tiers(
+    tier_costs: Sequence[float],
+    tier_values: Sequence[float],
+    clients: Sequence[ClientProfile],
+    budget: float,
+) -> TierAllocation:
+    """Maximize expected server savings under a global client-cost budget.
+
+    Multiple-choice knapsack over the nested tiers: every client starts at
+    tier 0 and greedy upgrades are applied in order of marginal savings per
+    marginal cost, ``weight_j * Δvalue / (weight_j * scale_j * Δcost)``.
+    Along a CELF prefix the per-tier value increments are diminishing
+    (submodularity), so each client's upgrade ratios are non-increasing
+    and the greedy matches the LP-relaxation optimum up to one fractional
+    upgrade — the classical MCKP argument.
+
+    A client whose next upgrade does not fit is frozen (its later upgrades
+    are nested behind the unaffordable one).  Tier 0 is never refused: if
+    even the floor exceeds the budget the allocation is returned as-is
+    with ``feasible == False`` (the caller should widen the family or the
+    budget rather than silently dropping clients).
+    """
+    k = len(tier_costs)
+    if k != len(tier_values):
+        raise ValueError("tier_costs and tier_values must have equal length")
+    if any(c2 < c1 for c1, c2 in zip(tier_costs, tier_costs[1:])):
+        raise ValueError("tier costs must be non-decreasing (nested tiers)")
+    tiers = [0] * len(clients)
+    spent = sum(cl.weight * cl.cost_scale * tier_costs[0] for cl in clients)
+    savings = sum(cl.weight * tier_values[0] for cl in clients)
+    heap: list[tuple[float, int]] = []
+
+    def push_upgrade(j: int) -> None:
+        t = tiers[j]
+        if t + 1 >= k:
+            return
+        cl = clients[j]
+        dv = cl.weight * (tier_values[t + 1] - tier_values[t])
+        dc = cl.weight * cl.cost_scale * (tier_costs[t + 1] - tier_costs[t])
+        if dc <= 0.0:  # free upgrade (identical tier cut): take it outright
+            ratio = np.inf
+        else:
+            ratio = dv / dc
+        heapq.heappush(heap, (-ratio, j))
+
+    for j in range(len(clients)):
+        push_upgrade(j)
+    upgrades = 0
+    while heap:
+        _, j = heapq.heappop(heap)
+        t = tiers[j]
+        if t + 1 >= k:
+            continue
+        cl = clients[j]
+        dc = cl.weight * cl.cost_scale * (tier_costs[t + 1] - tier_costs[t])
+        if spent + dc > budget + 1e-9:
+            continue  # frozen: nested upgrades behind this one cost >= dc
+        tiers[j] = t + 1
+        spent += dc
+        savings += cl.weight * (tier_values[t + 1] - tier_values[t])
+        upgrades += 1
+        push_upgrade(j)
+    return TierAllocation(tiers=tiers, spent=spent, budget=float(budget),
+                          expected_savings=savings, upgrades=upgrades)
 
 
 # ---------------------------------------------------------------------------

@@ -124,17 +124,132 @@ def evolve_plan(prev: PushdownPlan, clauses: Sequence[Clause]) -> PushdownPlan:
 
 
 @dataclass
+class PlanFamily:
+    """Nested budget tiers over ONE epoch's clause universe (paper §VI).
+
+    ``plan`` is the TOP tier: the full clause list in greedy selection
+    order, carrying the epoch and the stable global ids.  Tier *t* is the
+    prefix of the first ``tier_sizes[t]`` clauses — the nesting invariant
+    T0 ⊆ T1 ⊆ … ⊆ Tk lives in local-id space, so a chunk evaluated at
+    tier *t* ships bitvector rows for exactly local rows
+    ``[0, tier_sizes[t])`` and its coverage is fully described by that one
+    prefix length (``n_covered``).  Lower tiers therefore need no plan
+    objects of their own: they are index-prefix views of the top tier,
+    which is also what lets every tier share one compiled kernel
+    (``kernels.plan.tier_view``).
+    """
+
+    plan: PushdownPlan
+    tier_sizes: tuple[int, ...]
+    budgets: tuple[float, ...] = ()       # per-tier budget cut-points (µs)
+    tier_costs: tuple[float, ...] = ()    # modeled µs/record per tier
+    tier_values: tuple[float, ...] = ()   # expected benefit f(Tt) per tier
+
+    def __post_init__(self) -> None:
+        self.tier_sizes = tuple(int(s) for s in self.tier_sizes)
+        if not self.tier_sizes:
+            raise ValueError("a PlanFamily needs >= 1 tier")
+        if any(s < 0 for s in self.tier_sizes) or any(
+                b < a for a, b in zip(self.tier_sizes, self.tier_sizes[1:])):
+            raise ValueError(
+                f"tier sizes must be non-negative and ascending "
+                f"(nested tiers): {self.tier_sizes}")
+        if self.tier_sizes[-1] != self.plan.n:
+            raise ValueError(
+                f"top tier must cover the whole plan: sizes "
+                f"{self.tier_sizes} vs {self.plan.n} clauses")
+        for name in ("budgets", "tier_costs", "tier_values"):
+            v = tuple(float(x) for x in getattr(self, name))
+            if v and len(v) != len(self.tier_sizes):
+                raise ValueError(f"{name} must have one entry per tier")
+            setattr(self, name, v)
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tier_sizes)
+
+    @property
+    def epoch(self) -> int:
+        return self.plan.epoch
+
+    @property
+    def top_tier(self) -> int:
+        return self.n_tiers - 1
+
+    def tier_clauses(self, tier: int) -> list[Clause]:
+        return self.plan.clauses[: self.tier_sizes[tier]]
+
+    def coverage_gids(self, n_covered: int) -> frozenset[int]:
+        """Global clause ids covered by the first ``n_covered`` local rows."""
+        return frozenset(
+            self.plan.global_ids[c]
+            for c, i in self.plan.ids.items() if i < n_covered
+        )
+
+    def to_obj(self) -> dict:
+        return {
+            "tier_sizes": list(self.tier_sizes),
+            "budgets": list(self.budgets),
+            "tier_costs": list(self.tier_costs),
+            "tier_values": list(self.tier_values),
+        }
+
+    @classmethod
+    def from_obj(cls, plan: PushdownPlan, d: dict) -> "PlanFamily":
+        return cls(plan=plan, tier_sizes=tuple(d["tier_sizes"]),
+                   budgets=tuple(d.get("budgets", ())),
+                   tier_costs=tuple(d.get("tier_costs", ())),
+                   tier_values=tuple(d.get("tier_values", ())))
+
+
+def trivial_family(plan: PushdownPlan) -> PlanFamily:
+    """Single-tier family: every client runs the whole plan."""
+    return PlanFamily(plan=plan, tier_sizes=(plan.n,))
+
+
+def evolve_family(
+    prev: "PlanFamily | PushdownPlan",
+    order: Sequence[Clause],
+    tier_sizes: Sequence[int],
+    *,
+    budgets: Sequence[float] = (),
+    tier_costs: Sequence[float] = (),
+    tier_values: Sequence[float] = (),
+) -> PlanFamily:
+    """Next-epoch family: the top tier evolves via :func:`evolve_plan`
+    (stable gids), lower tiers are fresh prefix cut-points of the new
+    greedy order.  Nesting holds per epoch by construction; across epochs
+    each tier's coverage is reconciled through the remap table exactly
+    like a whole plan's."""
+    prev_plan = prev.plan if isinstance(prev, PlanFamily) else prev
+    return PlanFamily(
+        plan=evolve_plan(prev_plan, order),
+        tier_sizes=tuple(tier_sizes),
+        budgets=tuple(budgets),
+        tier_costs=tuple(tier_costs),
+        tier_values=tuple(tier_values),
+    )
+
+
+@dataclass
 class Block:
     """One loaded block: parsed rows + bitvector metadata (uint32[P, W]).
 
     ``epoch`` names the plan the bitvector rows were evaluated under —
     row order follows that epoch's local clause ids, NOT the store's
-    current plan.
+    current plan.  ``n_covered`` is the block's coverage mask: the client
+    evaluated exactly the first ``n_covered`` local clause rows of that
+    epoch's plan (tiers are nested prefixes, so one length fully encodes
+    which global clause ids the block indexes — ``PlanFamily.
+    coverage_gids``).  ``-1`` means full coverage of its epoch's plan.
+    ``tier`` labels which family tier produced it (savings attribution).
     """
 
     rows: list[dict]
     bitvectors: np.ndarray
     epoch: int = 0
+    n_covered: int = -1
+    tier: int = 0
 
     @property
     def n_rows(self) -> int:
@@ -145,13 +260,18 @@ class Block:
 class RawRemainder:
     """Unloaded rows of one chunk, kept as a dense uint8 sub-chunk.
 
-    ``epoch``: these rows matched NO clause of that epoch's plan — they are
-    skippable exactly for queries with >= 1 clause pushed in that epoch.
+    ``epoch``/``n_covered``: these rows matched NO clause among the first
+    ``n_covered`` local rows of that epoch's plan — they are skippable
+    exactly for queries with >= 1 clause pushed *within that coverage*.
+    A low-tier remainder (small ``n_covered``) may still hold matches for
+    clauses outside its tier, so coverage must gate every skip decision.
     """
 
     data: np.ndarray      # uint8[R, L]
     lengths: np.ndarray   # int32[R]
     epoch: int = 0
+    n_covered: int = -1
+    tier: int = 0
 
     @property
     def n(self) -> int:
@@ -187,9 +307,16 @@ class CiaoStore:
     epoch *k* stays queryable (and skippable) after a replan to *k+1*.
     """
 
-    def __init__(self, plan: PushdownPlan):
+    def __init__(self, plan: "PushdownPlan | PlanFamily"):
+        if isinstance(plan, PlanFamily):
+            family = plan
+            plan = family.plan
+        else:
+            family = trivial_family(plan)
         self.plan = plan                       # current epoch's plan
+        self.family = family                   # current epoch's tier family
         self.plans: dict[int, PushdownPlan] = {plan.epoch: plan}
+        self.families: dict[int, PlanFamily] = {plan.epoch: family}
         self.blocks: list[Block] = []
         self.raw: list[RawRemainder] = []
         self.jit_blocks: list[Block] = []   # promoted raw rows (no bitvectors)
@@ -200,6 +327,15 @@ class CiaoStore:
             plan.epoch: np.zeros((plan.n,), np.int64)
         }
         self._epoch_records: dict[int, int] = {plan.epoch: 0}
+        # per-clause record denominators: with tiered ingest a clause is
+        # only evaluated on chunks whose coverage includes it, so observed
+        # selectivity needs a PER-CLAUSE denominator, not the epoch total
+        self._epoch_clause_records: dict[int, np.ndarray] = {
+            plan.epoch: np.zeros((plan.n,), np.int64)
+        }
+        # per-(epoch, tier) ingest attribution (benchmarks + allocator)
+        self.group_records: dict[tuple[int, int], int] = {}
+        self.group_loaded: dict[tuple[int, int], int] = {}
         # query feedback for workload re-estimation (replan control plane);
         # bounded: consumers only ever read a recent window
         self.query_log: list[Query] = []
@@ -222,29 +358,59 @@ class CiaoStore:
         """Records ingested under one epoch (current epoch by default)."""
         return self._epoch_records[self.plan.epoch if epoch is None else epoch]
 
-    def observed_selectivities(self, epoch: int | None = None) -> np.ndarray:
-        """float64[P]: fraction of that epoch's records matching each clause."""
+    def clause_records(self, epoch: int | None = None) -> np.ndarray:
+        """int64[P]: records whose coverage reached each clause's local row.
+
+        The per-clause denominator behind :meth:`observed_selectivities` —
+        under tiered ingest a clause outside every produced tier has a
+        ZERO count, and its observed selectivity of 0 is an artifact of
+        no coverage, not a measurement.  Consumers (the replanner's drift
+        detector) must gate on this before trusting the observation.
+        """
         e = self.plan.epoch if epoch is None else epoch
-        n = max(self._epoch_records[e], 1)
-        return self._epoch_counts[e] / n
+        return self._epoch_clause_records[e]
+
+    def observed_selectivities(self, epoch: int | None = None) -> np.ndarray:
+        """float64[P]: fraction of records matching each clause.
+
+        Per-clause denominators: under tiered ingest, clause *i* is only
+        evaluated on chunks whose coverage reaches past local row *i*, so
+        its selectivity is counts[i] / records-that-covered-i.  With
+        full-coverage ingest every denominator equals the epoch record
+        total (the pre-tier behaviour).
+        """
+        e = self.plan.epoch if epoch is None else epoch
+        denom = np.maximum(self._epoch_clause_records[e], 1)
+        return self._epoch_counts[e] / denom
 
     # -- plan epochs ---------------------------------------------------------
-    def advance_epoch(self, new_plan: PushdownPlan) -> np.ndarray:
+    def advance_epoch(self, new_plan: "PushdownPlan | PlanFamily") -> np.ndarray:
         """Install the next plan epoch; returns the new->old remap table.
 
+        Accepts a bare :class:`PushdownPlan` (single-tier deployments) or
+        a :class:`PlanFamily` (the family's top tier IS the plan).
         Existing blocks keep their old-epoch bitvectors and stay queryable
         through the registry; new ingests must arrive tagged with the new
         epoch.  Per-epoch stats start fresh so observed selectivities track
         the *current* plan, not a mixture.
         """
+        if isinstance(new_plan, PlanFamily):
+            family = new_plan
+            new_plan = family.plan
+        else:
+            family = trivial_family(new_plan)
         if new_plan.epoch <= self.plan.epoch:
             raise ValueError(
                 f"epoch must advance: {new_plan.epoch} <= {self.plan.epoch}")
         remap = new_plan.remap_from(self.plan)
         self.plans[new_plan.epoch] = new_plan
+        self.families[new_plan.epoch] = family
         self.plan = new_plan
+        self.family = family
         self._epoch_counts[new_plan.epoch] = np.zeros((new_plan.n,), np.int64)
         self._epoch_records[new_plan.epoch] = 0
+        self._epoch_clause_records[new_plan.epoch] = np.zeros(
+            (new_plan.n,), np.int64)
         return remap
 
     def remap_table(self, from_epoch: int, to_epoch: int) -> np.ndarray:
@@ -258,40 +424,44 @@ class CiaoStore:
             del self.query_log[:-self.query_log_cap]
 
     def pushed_by_epoch(self, q: Query) -> "_EpochPushdown":
-        """Per-epoch local bitvector rows of the query's pushed clauses.
+        """Pushed ∩ covered local bitvector rows, per (epoch, coverage).
 
-        A block/remainder from epoch *e* is skippable iff this map's entry
-        for *e* is non-empty — THE epoch-skippability invariant
-        (DESIGN.md §11); every query path must resolve pushdown through it.
-        The map resolves epochs lazily through the live registry, so a
-        block ingested under an epoch created after the map was built
-        (replan racing a partially-consumed scan/batch iterator) still
-        resolves instead of failing.
+        Indexed two ways: ``m[epoch]`` gives the query's pushed local rows
+        under that epoch's full plan, and ``m[(epoch, n_covered)]`` the
+        subset a block with that coverage actually indexes — pushed ∩
+        covered, THE (epoch, tier)-skippability invariant (DESIGN.md §12);
+        every query path must resolve pushdown through it.  The map
+        resolves lazily through the live registry, so a block ingested
+        under an epoch created after the map was built (replan racing a
+        partially-consumed scan/batch iterator) still resolves instead of
+        failing.
         """
         m = _EpochPushdown(self, q)
         m[self.plan.epoch]  # current epoch always resolved (used_skipping)
         return m
 
-    def promote_uncovered_raw(self, pushed: dict[int, list[int]]) -> int:
-        """JIT-promote raw remainders whose epoch covers none of the query.
+    def promote_uncovered_raw(
+        self, pushed: "_EpochPushdown",
+    ) -> dict[tuple[int, int], int]:
+        """JIT-promote raw remainders whose coverage misses the query.
 
-        Rows in a remainder from epoch *e* matched no epoch-*e* clause, so
-        they can only be skipped when >= 1 query clause was pushed in *e*;
+        Rows in a remainder from epoch *e* at coverage *k* matched none of
+        the first *k* clauses of that epoch's plan, so they can only be
+        skipped when >= 1 query clause was pushed *within that coverage*;
         every other remainder may hold matches and is parsed exactly once.
-        Returns the number of rows promoted.
+        Returns rows promoted per (epoch, tier) group.
         """
-        stale = {rr.epoch for rr in self.raw if not pushed[rr.epoch]}
+        stale = {(rr.epoch, rr.n_covered) for rr in self.raw
+                 if not pushed[(rr.epoch, rr.n_covered)]}
         if not stale:
-            return 0
-        before = self.stats.n_jit_loaded
-        self.jit_load_raw(only_epochs=stale)
-        return self.stats.n_jit_loaded - before
+            return {}
+        return self.jit_load_raw(only_groups=stale)
 
     # -- ingest -------------------------------------------------------------
     def ingest_chunk(
         self, chunk: Chunk,
         bitvecs: np.ndarray | bitvector.ChunkBitvectors,
-        *, epoch: int | None = None,
+        *, epoch: int | None = None, tier: int | None = None,
     ) -> LoadStats:
         """Partial loading of one chunk.
 
@@ -305,15 +475,34 @@ class CiaoStore:
         any state is touched (the coordinator re-evaluates it under the
         current plan).  ``None`` means "current epoch" (single-plan
         deployments never notice epochs).
+
+        ``tier`` tags which family tier the client evaluated: the chunk's
+        coverage mask is the tier's clause prefix, and the bitvector clause
+        dimension must equal ``family.tier_sizes[tier]`` exactly — a
+        mismatched coverage claim is rejected before any state is touched.
+        ``None`` means full coverage (the top tier).
         """
         t0 = time.perf_counter()
         n = chunk.n_records
-        # validate epoch AND both dimensions BEFORE touching stats: a
-        # rejected ingest must not corrupt n_records / observed selectivities
-        if epoch is not None and epoch != self.plan.epoch:
+        e = self.plan.epoch
+        # validate epoch, tier coverage AND both dimensions BEFORE touching
+        # stats: a rejected ingest must not corrupt n_records / observed
+        # selectivities
+        if epoch is not None and epoch != e:
             raise StaleEpochError(
                 f"chunk evaluated under epoch {epoch}, store is at epoch "
-                f"{self.plan.epoch} (re-evaluate under the current plan)")
+                f"{e} (re-evaluate under the current plan)")
+        family = self.family
+        if tier is None:
+            tier_idx = family.top_tier
+            n_cov = self.plan.n
+        else:
+            if not 0 <= tier < family.n_tiers:
+                raise ValueError(
+                    f"tier {tier} out of range: family has "
+                    f"{family.n_tiers} tiers")
+            tier_idx = int(tier)
+            n_cov = family.tier_sizes[tier_idx]
         if isinstance(bitvecs, bitvector.ChunkBitvectors):
             if bitvecs.n_records != n:
                 raise ValueError(
@@ -327,22 +516,33 @@ class CiaoStore:
                 raise ValueError(
                     f"bitvector words cover {raw.shape[-1] * 32} records, "
                     f"chunk has {n}")
-        if n_cl != self.plan.n:
+        if n_cl != n_cov:
             raise ValueError(
-                f"bitvectors cover {n_cl} clauses, plan has {self.plan.n} "
-                "(stale client plan?)")
+                f"bitvectors cover {n_cl} clauses, tier {tier_idx} of the "
+                f"epoch-{e} plan covers {n_cov} (stale client plan/tier?)")
         self.stats.n_records += n
-        self._epoch_records[self.plan.epoch] += n
+        self._epoch_records[e] += n
+        self._epoch_clause_records[e][:n_cov] += n
+        gkey = (e, tier_idx)
+        self.group_records[gkey] = self.group_records.get(gkey, 0) + n
         any_words: np.ndarray | None = None
         if isinstance(bitvecs, bitvector.ChunkBitvectors):
             any_words = bitvecs.or_words
-            self.clause_counts += bitvecs.counts
+            self.clause_counts[:n_cov] += bitvecs.counts
             bitvecs = bitvecs.words
-        elif self.plan.n:
-            self.clause_counts += bitvector.popcount_rows(bitvecs)
+        elif n_cov:
+            self.clause_counts[:n_cov] += bitvector.popcount_rows(bitvecs)
         if self.plan.n == 0:
+            # no plan at all: the store degenerates to full upfront loading
             load_idx = np.arange(n)
             keep_idx = np.array([], dtype=np.int64)
+            block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
+        elif n_cov == 0:
+            # an EMPTY tier of a non-empty plan pushes nothing: every row
+            # stays raw (zero coverage — never skippable, JIT-loaded on
+            # the first query that needs it)
+            load_idx = np.array([], dtype=np.int64)
+            keep_idx = np.arange(n)
             block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
         else:
             if any_words is None:
@@ -358,43 +558,59 @@ class CiaoStore:
         self.stats.parse_time_s += time.perf_counter() - tp0
         if rows:
             self.blocks.append(
-                Block(rows=rows, bitvectors=block_bv, epoch=self.plan.epoch))
+                Block(rows=rows, bitvectors=block_bv, epoch=e,
+                      n_covered=n_cov, tier=tier_idx))
         if len(keep_idx):
             self.raw.append(
                 RawRemainder(
                     data=chunk.data[keep_idx],          # numpy fancy-index, O(bytes)
                     lengths=chunk.lengths[keep_idx],
-                    epoch=self.plan.epoch,
+                    epoch=e, n_covered=n_cov, tier=tier_idx,
                 )
             )
         self.stats.n_loaded += int(len(load_idx))
+        self.group_loaded[gkey] = (
+            self.group_loaded.get(gkey, 0) + int(len(load_idx)))
         self.stats.load_time_s += time.perf_counter() - t0
         return self.stats
 
     # -- just-in-time loading (paper §I) -------------------------------------
-    def jit_load_raw(self, only_epochs: set[int] | None = None) -> None:
+    def jit_load_raw(
+        self, only_epochs: set[int] | None = None,
+        *, only_groups: set[tuple[int, int]] | None = None,
+    ) -> dict[tuple[int, int], int]:
         """Parse raw remainders once, promoting them to unfiltered blocks.
 
         ``only_epochs`` restricts promotion to remainders ingested under
-        those epochs (the scanner promotes exactly the epochs whose plan
-        pushes none of a query's clauses); ``None`` promotes everything.
+        those epochs; ``only_groups`` to ``(epoch, n_covered)`` coverage
+        groups (the scanner promotes exactly the groups whose coverage
+        pushes none of a query's clauses); ``None``/``None`` promotes
+        everything.  Returns rows promoted per ``(epoch, tier)``.
         """
+        promoted: dict[tuple[int, int], int] = {}
         if not self.raw:
-            return
+            return promoted
         t0 = time.perf_counter()
         keep: list[RawRemainder] = []
         for rr in self.raw:
             if only_epochs is not None and rr.epoch not in only_epochs:
                 keep.append(rr)
                 continue
+            if only_groups is not None and \
+                    (rr.epoch, rr.n_covered) not in only_groups:
+                keep.append(rr)
+                continue
             rows = [json.loads(rr.record(i)) for i in range(rr.n)]
             self.jit_blocks.append(
                 Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
-                      epoch=rr.epoch)
+                      epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier)
             )
             self.stats.n_jit_loaded += rr.n
+            key = (rr.epoch, rr.tier)
+            promoted[key] = promoted.get(key, 0) + rr.n
         self.raw = keep
         self.stats.jit_time_s += time.perf_counter() - t0
+        return promoted
 
     # -- persistence (ingest checkpointing) ----------------------------------
     def save(self, path: str) -> None:
@@ -408,13 +624,26 @@ class CiaoStore:
         """
         stats = self.stats
         meta = {
-            "format": 2,
+            "format": 3,
             "current_epoch": self.plan.epoch,
             "plans": [self.plans[e].to_obj() for e in sorted(self.plans)],
+            "families": {
+                str(e): f.to_obj() for e, f in self.families.items()
+            },
             "epoch_records": {str(e): n for e, n in self._epoch_records.items()},
             "epoch_counts": {
                 str(e): c.tolist() for e, c in self._epoch_counts.items()
             },
+            "epoch_clause_records": {
+                str(e): c.tolist()
+                for e, c in self._epoch_clause_records.items()
+            },
+            "group_records": [
+                [e, t, n] for (e, t), n in self.group_records.items()
+            ],
+            "group_loaded": [
+                [e, t, n] for (e, t), n in self.group_loaded.items()
+            ],
             "stats": {
                 "n_records": stats.n_records,
                 "n_loaded": stats.n_loaded,
@@ -434,10 +663,17 @@ class CiaoStore:
             "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
             "n_blocks": np.array(len(self.blocks)),
             "block_epochs": np.array([b.epoch for b in self.blocks], np.int64),
+            "block_ncov": np.array([b.n_covered for b in self.blocks], np.int64),
+            "block_tiers": np.array([b.tier for b in self.blocks], np.int64),
             "n_raw": np.array(len(self.raw)),
             "raw_epochs": np.array([r.epoch for r in self.raw], np.int64),
+            "raw_ncov": np.array([r.n_covered for r in self.raw], np.int64),
+            "raw_tiers": np.array([r.tier for r in self.raw], np.int64),
             "n_jit": np.array(len(self.jit_blocks)),
             "jit_epochs": np.array([b.epoch for b in self.jit_blocks], np.int64),
+            "jit_ncov": np.array(
+                [b.n_covered for b in self.jit_blocks], np.int64),
+            "jit_tiers": np.array([b.tier for b in self.jit_blocks], np.int64),
         }
         for bi, blk in enumerate(self.blocks):
             payload[f"bv_{bi}"] = blk.bitvectors
@@ -478,14 +714,42 @@ class CiaoStore:
                     "checkpoint was saved under a different plan "
                     f"(epoch {current.epoch}, {current.n} clauses)")
             current = plan if plan.epoch == current.epoch else current
-        store = cls(current)
+        families = {
+            int(e): PlanFamily.from_obj(by_epoch[int(e)], f)
+            for e, f in meta.get("families", {}).items()
+        }
+        store = cls(families.get(current.epoch, current))
+        store.plan = current
         store.plans = by_epoch | {current.epoch: current}
+        store.families = {
+            e: families.get(e, trivial_family(p))
+            for e, p in store.plans.items()
+        }
+        store.family = store.families[current.epoch]
         store._epoch_records = {
             int(e): int(n) for e, n in meta["epoch_records"].items()
         }
         store._epoch_counts = {
             int(e): np.asarray(c, dtype=np.int64)
             for e, c in meta["epoch_counts"].items()
+        }
+        if "epoch_clause_records" in meta:
+            store._epoch_clause_records = {
+                int(e): np.asarray(c, dtype=np.int64)
+                for e, c in meta["epoch_clause_records"].items()
+            }
+        else:  # format-2 checkpoint: every ingest was full-coverage
+            store._epoch_clause_records = {
+                e: np.full((store.plans[e].n,), n, np.int64)
+                for e, n in store._epoch_records.items()
+            }
+        store.group_records = {
+            (int(e), int(t)): int(n)
+            for e, t, n in meta.get("group_records", [])
+        }
+        store.group_loaded = {
+            (int(e), int(t)): int(n)
+            for e, t, n in meta.get("group_loaded", [])
         }
         store.query_log = [
             Query(tuple(clause_from_obj(c) for c in q["clauses"]),
@@ -500,40 +764,87 @@ class CiaoStore:
             parse_time_s=float(s["parse_time_s"]),
             jit_time_s=float(s["jit_time_s"]),
         )
+        files = set(getattr(z, "files", ()))
+
+        def _meta_col(name: str, epochs: np.ndarray) -> np.ndarray:
+            if name in files:
+                return z[name]
+            # format-2 checkpoint: full coverage of each item's own epoch
+            if name.endswith("ncov"):
+                return np.array([store.plans[int(e)].n for e in epochs],
+                                np.int64)
+            return np.zeros((len(epochs),), np.int64)
+
         block_epochs = z["block_epochs"]
+        block_ncov = _meta_col("block_ncov", block_epochs)
+        block_tiers = _meta_col("block_tiers", block_epochs)
         for bi in range(int(z["n_blocks"])):
             rows = json.loads(bytes(z[f"rows_{bi}"].tobytes()).decode())
             store.blocks.append(Block(rows=rows, bitvectors=z[f"bv_{bi}"],
-                                      epoch=int(block_epochs[bi])))
+                                      epoch=int(block_epochs[bi]),
+                                      n_covered=int(block_ncov[bi]),
+                                      tier=int(block_tiers[bi])))
         raw_epochs = z["raw_epochs"]
+        raw_ncov = _meta_col("raw_ncov", raw_epochs)
+        raw_tiers = _meta_col("raw_tiers", raw_epochs)
         for ri in range(int(z["n_raw"])):
             store.raw.append(
                 RawRemainder(data=z[f"raw_data_{ri}"],
                              lengths=z[f"raw_len_{ri}"],
-                             epoch=int(raw_epochs[ri]))
+                             epoch=int(raw_epochs[ri]),
+                             n_covered=int(raw_ncov[ri]),
+                             tier=int(raw_tiers[ri]))
             )
         jit_epochs = z["jit_epochs"]
+        jit_ncov = _meta_col("jit_ncov", jit_epochs)
+        jit_tiers = _meta_col("jit_tiers", jit_epochs)
         for ji in range(int(z["n_jit"])):
             rows = json.loads(bytes(z[f"jit_rows_{ji}"].tobytes()).decode())
             store.jit_blocks.append(
                 Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
-                      epoch=int(jit_epochs[ji]))
+                      epoch=int(jit_epochs[ji]),
+                      n_covered=int(jit_ncov[ji]),
+                      tier=int(jit_tiers[ji]))
             )
         return store
 
 
 class _EpochPushdown(dict):
-    """Lazy epoch -> pushed-local-rows map backed by the plan registry."""
+    """Lazy pushed-rows map backed by the plan registry.
+
+    ``m[epoch]`` -> the query's pushed local rows under that epoch's full
+    plan; ``m[(epoch, n_covered)]`` -> pushed ∩ covered, i.e. the subset
+    with local row < ``n_covered`` (``n_covered < 0`` means full
+    coverage).  Tiers are nested prefixes, so one inequality implements
+    the coverage intersection.
+    """
 
     def __init__(self, store: CiaoStore, q: Query):
         super().__init__()
         self._store = store
         self._q = q
 
-    def __missing__(self, epoch: int) -> list[int]:
-        pushed = self._store.plans[epoch].pushed_in(self._q)
-        self[epoch] = pushed
+    def __missing__(self, key) -> list[int]:
+        if isinstance(key, tuple):
+            epoch, n_cov = key
+            if n_cov < 0 or n_cov >= self._store.plans[epoch].n:
+                pushed = self[epoch]
+            else:
+                pushed = [i for i in self[epoch] if i < n_cov]
+        else:
+            pushed = self._store.plans[key].pushed_in(self._q)
+        self[key] = pushed
         return pushed
+
+
+@dataclass
+class TierScan:
+    """Per-(epoch, tier) slice of one scan (savings attribution)."""
+
+    rows_scanned: int = 0
+    rows_skipped: int = 0
+    raw_parsed: int = 0
+    count: int = 0
 
 
 @dataclass
@@ -544,6 +855,13 @@ class ScanResult:
     raw_parsed: int
     time_s: float
     used_skipping: bool
+    # (epoch, tier) -> breakdown: which coverage groups produced the
+    # skips/scans/JIT parses, so benchmarks and the replanner can
+    # attribute savings to tiers instead of a single aggregate
+    groups: dict[tuple[int, int], TierScan] = field(default_factory=dict)
+
+    def group(self, epoch: int, tier: int) -> TierScan:
+        return self.groups.setdefault((epoch, tier), TierScan())
 
 
 class DataSkippingScanner:
@@ -570,45 +888,48 @@ class DataSkippingScanner:
         if self.log_queries:
             store.log_query(q)
         pushed_by_epoch = store.pushed_by_epoch(q)
-        count = 0
-        scanned = skipped = raw_parsed = 0
+        result = ScanResult(count=0, rows_scanned=0, rows_skipped=0,
+                            raw_parsed=0, time_s=0.0, used_skipping=False)
 
         for blk in store.blocks:
-            pushed = pushed_by_epoch[blk.epoch]
+            g = result.group(blk.epoch, blk.tier)
+            pushed = pushed_by_epoch[(blk.epoch, blk.n_covered)]
             if pushed:
                 words = bitvector.bv_and_many(blk.bitvectors[pushed])
                 idx = bitvector.select_indices(words, blk.n_rows)
-                skipped += blk.n_rows - len(idx)
+                g.rows_skipped += blk.n_rows - len(idx)
                 for i in idx:
                     if q.matches_exact(blk.rows[i]):
-                        count += 1
-                scanned += len(idx)
+                        g.count += 1
+                g.rows_scanned += len(idx)
             else:
                 for row in blk.rows:
                     if q.matches_exact(row):
-                        count += 1
-                scanned += blk.n_rows
+                        g.count += 1
+                g.rows_scanned += blk.n_rows
 
-        # raw remainders not covered by their epoch's pushed clauses may
-        # contain matches: JIT-promote those epochs once, then scan every
-        # promoted block whose epoch doesn't cover the query
-        raw_parsed = store.promote_uncovered_raw(pushed_by_epoch)
+        # raw remainders whose coverage pushes none of the query may
+        # contain matches: JIT-promote those (epoch, coverage) groups once,
+        # then scan every promoted block whose coverage misses the query
+        for key, n in store.promote_uncovered_raw(pushed_by_epoch).items():
+            result.group(*key).raw_parsed += n
         for blk in store.jit_blocks:
-            if pushed_by_epoch[blk.epoch]:
-                skipped += blk.n_rows
+            g = result.group(blk.epoch, blk.tier)
+            if pushed_by_epoch[(blk.epoch, blk.n_covered)]:
+                g.rows_skipped += blk.n_rows
                 continue
             for row in blk.rows:
                 if q.matches_exact(row):
-                    count += 1
-            scanned += blk.n_rows
-        return ScanResult(
-            count=count,
-            rows_scanned=scanned,
-            rows_skipped=skipped,
-            raw_parsed=raw_parsed,
-            time_s=time.perf_counter() - t0,
-            used_skipping=any(pushed_by_epoch.values()),
-        )
+                    g.count += 1
+            g.rows_scanned += blk.n_rows
+        for g in result.groups.values():
+            result.count += g.count
+            result.rows_scanned += g.rows_scanned
+            result.rows_skipped += g.rows_skipped
+            result.raw_parsed += g.raw_parsed
+        result.time_s = time.perf_counter() - t0
+        result.used_skipping = any(pushed_by_epoch.values())
+        return result
 
 
 class FullScanBaseline:

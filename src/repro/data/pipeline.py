@@ -30,24 +30,33 @@ import numpy as np
 from repro.core import bitvector
 from repro.core.client import Chunk, encode_chunk
 from repro.core.predicates import Query
-from repro.core.server import CiaoStore, PushdownPlan, StaleEpochError
+from repro.core.selection import ClientProfile, TierAllocation, allocate_tiers
+from repro.core.server import (
+    CiaoStore, PlanFamily, PushdownPlan, StaleEpochError,
+)
 from repro.data.datasets import record_stream
 from repro.data.tokenizer import ByteTokenizer
 
 
 @dataclass
 class ClientShard:
-    """One data client with its own seed, engine, and speed class.
+    """One data client with its own seed, engine, speed class, and tier.
 
-    Plans are **hot-swappable** between chunks (:meth:`set_plan`): a replan
-    broadcast lands as a plain attribute swap, and the kernel engines only
-    retrace when the new compiled plan falls in a new ``(P, Mk, Mv)``
-    shape bucket (``kernels.plan`` pads pattern widths; ``kernels.ops``
-    pads record counts) — same-bucket epochs reuse the jit cache.
+    Plans are **hot-swappable** between chunks (:meth:`set_plan` /
+    :meth:`set_family`): a replan broadcast lands as a plain attribute
+    swap, and the kernel engines only retrace when the new compiled plan
+    falls in a new ``(P, Mk, Mv)`` shape bucket (``kernels.plan`` pads
+    pattern widths; ``kernels.ops`` pads record counts) — same-bucket
+    epochs reuse the jit cache, and ALL tiers of one family share one
+    trace (``kernels.plan.tier_view``).
 
     Each shard accumulates measured eval wall-clock
     (:meth:`observed_us_per_record`) — the cost-model recalibration
-    feedback the replanner consumes (paper §V-D).
+    feedback the replanner consumes (paper §V-D).  Measured eval time is
+    divided by ``speed``, so a simulated slow device reports
+    proportionally slower evaluation; :attr:`cost_scale` tracks an EWMA
+    of measured-vs-modeled µs (the allocator's per-client speed signal),
+    seeded with the ``1/speed`` prior until real timings arrive.
     """
 
     dataset: str
@@ -56,26 +65,88 @@ class ClientShard:
     plan: PushdownPlan
     chunk_records: int = 512
     speed: float = 1.0                  # relative records/sec (straggler sim)
+    family: PlanFamily | None = None    # tiered deployments only
+    tier: int = 0
+    cost_ewma_alpha: float = 0.3
 
     def __post_init__(self) -> None:
         self._stream = record_stream(self.dataset, seed=1000 + self.shard_id)
         self.eval_time_s = 0.0
         self.eval_records = 0
+        self.cost_scale = 1.0 / self.speed
+        if self.family is not None:
+            self.set_family(self.family, self.tier)
 
     def set_plan(self, plan: PushdownPlan) -> None:
         """Epoch bump: evaluate every subsequent chunk under ``plan``."""
         self.plan = plan
+        self.family = None
+        self.tier = 0
+
+    def set_family(self, family: PlanFamily, tier: int | None = None) -> None:
+        """Tiered epoch bump and/or re-tier: evaluate the tier's prefix."""
+        self.family = family
+        self.plan = family.plan
+        if tier is not None:
+            self.set_tier(tier)
+        elif self.tier >= family.n_tiers:
+            self.tier = family.top_tier
+
+    def set_tier(self, tier: int) -> None:
+        if self.family is None:
+            raise ValueError("set_tier needs a PlanFamily (set_family first)")
+        if not 0 <= tier < self.family.n_tiers:
+            raise ValueError(
+                f"tier {tier} out of range: family has "
+                f"{self.family.n_tiers} tiers")
+        self.tier = tier
+
+    @property
+    def tier_size(self) -> int:
+        if self.family is None:
+            return self.plan.n
+        return self.family.tier_sizes[self.tier]
+
+    def evaluate(self, chunk: Chunk) -> bitvector.ChunkBitvectors:
+        """Tier-aware fused evaluation of one chunk, timed and accounted.
+
+        The single eval dispatch for BOTH the normal produce path and the
+        coordinator's stale-epoch retry: every evaluation — retries
+        included — lands in ``eval_time_s`` / the cost-scale EWMA, so the
+        allocator's per-client speed signal sees all the work done.
+        """
+        t0 = time.perf_counter()
+        if self.family is not None:
+            prefix = getattr(self.engine, "eval_fused_prefix", None)
+            if prefix is not None:
+                bv = prefix(chunk, self.plan.clauses, self.tier_size)
+            else:
+                bv = self.engine.eval_fused(
+                    chunk, self.plan.clauses[: self.tier_size])
+        else:
+            bv = self.engine.eval_fused(chunk, self.plan.clauses)
+        dt = (time.perf_counter() - t0) / self.speed
+        self.eval_time_s += dt
+        self.eval_records += chunk.n_records
+        self._update_cost_scale(dt, chunk.n_records)
+        return bv
 
     def next_chunk(self) -> tuple[Chunk, bitvector.ChunkBitvectors]:
         recs = [next(self._stream) for _ in range(self.chunk_records)]
         chunk = encode_chunk(recs)
         # fused single-pass evaluation: the ingest load mask ships
         # precomputed alongside the bitvectors (one launch on kernel engines)
-        t0 = time.perf_counter()
-        bv = self.engine.eval_fused(chunk, self.plan.clauses)
-        self.eval_time_s += time.perf_counter() - t0
-        self.eval_records += chunk.n_records
-        return chunk, bv
+        return chunk, self.evaluate(chunk)
+
+    def _update_cost_scale(self, eval_s: float, n_records: int) -> None:
+        modeled = 0.0
+        if self.family is not None and self.family.tier_costs:
+            modeled = self.family.tier_costs[self.tier]
+        if modeled <= 0.0 or n_records <= 0:
+            return  # empty tier / no cost model: keep the current estimate
+        sample = (eval_s / n_records * 1e6) / modeled
+        a = self.cost_ewma_alpha
+        self.cost_scale = (1.0 - a) * self.cost_scale + a * sample
 
     def observed_us_per_record(self) -> float:
         if not self.eval_records:
@@ -88,6 +159,78 @@ class _Pending:
     ready_at: float
     seq: int
     client_idx: int = field(compare=False)
+
+
+class FleetTierAllocator:
+    """Splits a global client-cost budget across a heterogeneous fleet.
+
+    Wraps :func:`repro.core.selection.allocate_tiers` with the live
+    signals the pipeline produces: each shard's ``cost_scale`` (measured
+    µs per modeled µs, EWMA over its timing reports — the ``1/speed``
+    prior until data arrives) and its record rate as the weight.  The
+    budget is the fleet-record-weighted average client µs/record: with
+    weights normalized to sum 1, ``sum_j w_j * scale_j * tier_cost[t_j]``
+    must stay under ``budget_us``.
+
+    Re-tiering: every ``retier_every_records`` ingested records the
+    allocation is re-solved from the current cost scales; if any shard's
+    tier changes the new assignment is applied in place (a tier change
+    within one family needs no epoch bump — the store validates coverage
+    per chunk, and kernel engines keep one shared trace across tiers).
+    """
+
+    def __init__(self, family: PlanFamily, budget_us: float, *,
+                 retier_every_records: int = 4096):
+        if not family.tier_costs:
+            raise ValueError(
+                "allocator needs a family with tier_costs "
+                "(build it via planner.build_plan_family)")
+        self.family = family
+        self.budget_us = float(budget_us)
+        self.retier_every_records = retier_every_records
+        self.allocation: TierAllocation | None = None
+        self.retier_events = 0
+        self._records_since = 0
+
+    def profiles(self, clients: Sequence[ClientShard]) -> list[ClientProfile]:
+        rates = np.array(
+            [max(c.speed * c.chunk_records, 1e-12) for c in clients])
+        weights = rates / rates.sum()
+        return [
+            ClientProfile(cost_scale=c.cost_scale, weight=float(w))
+            for c, w in zip(clients, weights)
+        ]
+
+    def assign(self, clients: Sequence[ClientShard]) -> TierAllocation:
+        """Solve the allocation and apply it to every shard."""
+        alloc = allocate_tiers(
+            self.family.tier_costs, self.family.tier_values,
+            self.profiles(clients), self.budget_us,
+        )
+        for c, t in zip(clients, alloc.tiers):
+            c.set_family(self.family, t)
+        self.allocation = alloc
+        return alloc
+
+    def set_family(self, family: PlanFamily,
+                   clients: Sequence[ClientShard]) -> TierAllocation:
+        """Epoch bump: re-solve tiers for the new family and broadcast."""
+        self.family = family
+        self._records_since = 0
+        return self.assign(clients)
+
+    def on_records(self, n: int, clients: Sequence[ClientShard]) -> bool:
+        """Cost-drift re-tiering hook; returns True when tiers changed."""
+        self._records_since += n
+        if self._records_since < self.retier_every_records:
+            return False
+        self._records_since = 0
+        before = [c.tier for c in clients]
+        self.assign(clients)
+        if [c.tier for c in clients] != before:
+            self.retier_events += 1
+            return True
+        return False
 
 
 class IngestCoordinator:
@@ -104,20 +247,41 @@ class IngestCoordinator:
 
     def __init__(self, clients: Sequence[ClientShard], store: CiaoStore,
                  *, steal: bool = True, replanner=None,
+                 allocator: FleetTierAllocator | None = None,
+                 eval_cost_weight: float = 0.0,
                  on_chunk: Callable[[int], None] | None = None):
         self.clients = list(clients)
         self.store = store
         self.steal = steal
         self.replanner = replanner          # core.replan.Replanner protocol
+        self.allocator = allocator          # tiered fleets only
+        # virtual seconds added per measured eval second: with a non-zero
+        # weight, client-side plan evaluation slows chunk delivery in the
+        # virtual-time model (the paper's client-cost side of the
+        # trade-off); 0 preserves the pure production-rate simulation
+        self.eval_cost_weight = eval_cost_weight
         self.on_chunk = on_chunk            # called with #chunks ingested
         self.stolen = 0
         self.makespan = 0.0
         self.epoch_bumps = 0
+        if allocator is not None:
+            allocator.assign(self.clients)
 
     def _broadcast(self, plan) -> None:
-        """Epoch bump: every shard evaluates subsequent chunks under it."""
-        for c in self.clients:
-            c.set_plan(plan)
+        """Epoch bump: every shard evaluates subsequent chunks under it.
+
+        A :class:`PlanFamily` bump re-runs the tier allocator (tier
+        assignments are family-relative); a bare plan swaps untiered.
+        """
+        if isinstance(plan, PlanFamily):
+            if self.allocator is not None:
+                self.allocator.set_family(plan, self.clients)
+            else:
+                for c in self.clients:
+                    c.set_family(plan)
+        else:
+            for c in self.clients:
+                c.set_plan(plan)
         self.epoch_bumps += 1
 
     def run(self, chunks_per_client: int) -> None:
@@ -145,31 +309,49 @@ class IngestCoordinator:
                 backlog[i] -= 1
             client = self.clients[i]
             eval_before = client.eval_time_s
+            # tier coverage of THIS evaluation (the client may be
+            # re-tiered later in the loop): the replanner's cost
+            # recalibration must predict over the same clause prefix
+            n_eval = (client.tier_size if client.family is not None
+                      else None)
             chunk, bv = client.next_chunk()
             # plan-eval wall-clock only (the shard times eval_fused
             # itself) — record generation/encoding must not leak into the
             # replanner's cost-model recalibration
             eval_s = client.eval_time_s - eval_before
-            # chunks carry their evaluation epoch; the window between a
-            # broadcast and a client's next chunk is where staleness lives,
-            # so a StaleEpochError re-evaluates under the current plan
+            # chunks carry their evaluation (epoch, tier); the window
+            # between a broadcast and a client's next chunk is where
+            # staleness lives, so a StaleEpochError re-evaluates under the
+            # current plan/family (tier carries over, clamped)
+            tier = client.tier if client.family is not None else None
             try:
                 self.store.ingest_chunk(chunk, bv,
-                                        epoch=client.plan.epoch)
+                                        epoch=client.plan.epoch, tier=tier)
             except StaleEpochError:
-                client.set_plan(self.store.plan)
-                bv = client.engine.eval_fused(chunk, client.plan.clauses)
+                if client.family is not None:
+                    client.set_family(self.store.family)
+                    tier = client.tier
+                else:
+                    client.set_plan(self.store.plan)
+                    tier = None
+                bv = client.evaluate(chunk)
                 self.store.ingest_chunk(chunk, bv,
-                                        epoch=client.plan.epoch)
-            clock[i] += 1.0 / client.speed
+                                        epoch=client.plan.epoch, tier=tier)
+            # eval_s is already speed-scaled by the shard (slow devices
+            # evaluate slower), so it adds directly on top of the
+            # production slot
+            clock[i] += 1.0 / client.speed + self.eval_cost_weight * eval_s
             done += 1
             if self.on_chunk is not None:
                 self.on_chunk(done)
             if self.replanner is not None:
-                self.replanner.observe_timing(chunk.n_records, eval_s)
+                self.replanner.observe_timing(chunk.n_records, eval_s,
+                                              n_clauses=n_eval)
                 new_plan = self.replanner.step()
                 if new_plan is not None:
                     self._broadcast(new_plan)
+            if self.allocator is not None:
+                self.allocator.on_records(chunk.n_records, self.clients)
         self.makespan = max(clock)
 
 
@@ -184,14 +366,15 @@ class RecipeBatcher:
         self.batch_size = batch_size
 
     def matching_records(self, recipe: Query) -> Iterator[bytes]:
-        # epoch-aware skipping: each block's bitvector rows follow ITS
-        # ingest epoch's plan, and raw remainders are JIT-promoted only for
-        # epochs that push none of the recipe — the skippability invariant
-        # is single-sourced in the store's query-path helpers
+        # coverage-aware skipping: each block's bitvector rows follow ITS
+        # ingest epoch's plan AND its tier's coverage prefix; raw
+        # remainders are JIT-promoted only for (epoch, coverage) groups
+        # that push none of the recipe — the skippability invariant is
+        # single-sourced in the store's query-path helpers
         store = self.store
         pushed_by_epoch = store.pushed_by_epoch(recipe)
         for blk in store.blocks:
-            pushed = pushed_by_epoch[blk.epoch]
+            pushed = pushed_by_epoch[(blk.epoch, blk.n_covered)]
             if pushed:
                 words = bitvector.bv_and_many(blk.bitvectors[pushed])
                 idx = bitvector.select_indices(words, blk.n_rows)
@@ -203,7 +386,7 @@ class RecipeBatcher:
                     yield json.dumps(row, separators=(",", ":")).encode()
         store.promote_uncovered_raw(pushed_by_epoch)
         for blk in store.jit_blocks:
-            if pushed_by_epoch[blk.epoch]:
+            if pushed_by_epoch[(blk.epoch, blk.n_covered)]:
                 continue
             for row in blk.rows:
                 if recipe.matches_exact(row):
@@ -231,21 +414,45 @@ class RecipeBatcher:
 
 
 class Prefetcher:
-    """Double-buffered background prefetch (host CIAO work ∥ device step)."""
+    """Double-buffered background prefetch (host CIAO work ∥ device step).
+
+    Context-manager aware: an abandoned consumer must call :meth:`close`
+    (or use ``with``) so the worker thread — possibly blocked on a full
+    queue — is released instead of parking forever.  ``close`` also
+    re-raises any exception the worker hit, so failures in a pipeline
+    whose consumer stopped early still surface instead of being silently
+    dropped with the thread.
+    """
+
+    _POLL_S = 0.05
+    _JOIN_S = 5.0
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
         self._err: BaseException | None = None
+        self._stop = threading.Event()
+        self._err_raised = False
+
+        def _put(item) -> bool:
+            """Bounded put that gives up when the consumer closed us."""
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=self._POLL_S)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker() -> None:
             try:
                 for item in it:
-                    self._q.put(item)
+                    if not _put(item):
+                        return  # closed mid-stream: drop the rest
             except BaseException as e:  # propagate to consumer
                 self._err = e
             finally:
-                self._q.put(self._done)
+                _put(self._done)
 
         self._t = threading.Thread(target=worker, daemon=True)
         self._t.start()
@@ -254,9 +461,50 @@ class Prefetcher:
         return self
 
     def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration  # closed: the buffer was already dropped
         item = self._q.get()
         if item is self._done:
-            if self._err is not None:
+            if self._err is not None and not self._err_raised:
+                self._err_raised = True
                 raise self._err
             raise StopIteration
         return item
+
+    def close(self) -> None:
+        """Release the worker thread; re-raise its pending exception.
+
+        Idempotent.  Safe to call with items still buffered: the worker's
+        blocked ``put`` observes the stop flag within one poll interval
+        and exits, the buffer is drained and dropped.  A worker that is
+        stuck INSIDE the wrapped iterator (not in our queue handoff)
+        cannot be released from Python — that raises instead of returning
+        as if the thread were gone (its later exception would otherwise
+        vanish with the daemon thread).
+        """
+        self._stop.set()
+        while True:  # drain so a worker blocked pre-stop wakes immediately
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._t.join(timeout=self._JOIN_S)
+        if self._err is not None and not self._err_raised:
+            self._err_raised = True
+            raise self._err
+        if self._t.is_alive():
+            raise RuntimeError(
+                f"prefetch worker still running inside the wrapped iterator "
+                f"after {self._JOIN_S}s — it cannot be released and any "
+                "future failure in it will be lost")
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            # don't mask the consumer's exception with the worker's
+            self._stop.set()
+            self._t.join(timeout=5.0)
+            return
+        self.close()

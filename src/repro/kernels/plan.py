@@ -72,6 +72,67 @@ class CompiledPlan:
         return self.membership.shape[0]
 
 
+#: fill byte for neutralized (out-of-tier) predicate patterns.  Records are
+#: JSON text and padding is NUL, so 0xFF never occurs in a chunk: the
+#: kernel's first-char prefilter retires a neutralized predicate after one
+#: vectorized compare over the tile, and the xla oracle's window passes
+#: find nothing.  A neutralized pattern keeps FULL width (klen = Mk) so it
+#: can never hit the empty-pattern match-all path.
+NEUTRAL_BYTE = 0xFF
+
+
+def tier_view(full: CompiledPlan, n_clauses: int) -> CompiledPlan:
+    """Static clause-subset view: the first ``n_clauses`` clauses.
+
+    Tiers of a :class:`~repro.core.server.PlanFamily` are nested prefixes
+    of the top tier's clause order, and this view keeps EVERY array shape
+    (P, C, Mk, Mv, the unique tables) and the simple/key-value split
+    identical to the full compilation — so all tiers of a family share
+    ONE jit trace per chunk shape bucket instead of one per tier
+    (DESIGN.md §12).  Out-of-tier clauses get zero membership rows (their
+    bitvector/count rows emit as zeros and drop out of the load-mask OR);
+    predicates and unique key/value table rows no longer referenced by
+    any in-tier clause are neutralized to unmatchable ``0xFF`` patterns,
+    so the per-predicate grid steps they still occupy exit at the
+    first-char prefilter — tier compute scales with the subset while the
+    compiled artifact is shared.
+    """
+    C = full.n_clauses
+    if not 0 <= n_clauses <= C:
+        raise ValueError(f"tier size {n_clauses} out of range 0..{C}")
+    if n_clauses == C:
+        return full
+    membership = full.membership.copy()
+    membership[n_clauses:] = 0
+    used = membership.any(axis=0)                      # bool[P]
+    keys, klens = full.keys.copy(), full.klens.copy()
+    vals, vlens = full.vals.copy(), full.vlens.copy()
+    dead = ~used
+    keys[dead] = NEUTRAL_BYTE
+    klens[dead] = keys.shape[1]
+    vals[dead] = NEUTRAL_BYTE
+    vlens[dead] = np.where(full.kinds[dead] > 0, vals.shape[1], 0)
+    # unique tables (xla-oracle path): neutralize rows unreferenced by any
+    # live predicate — a unique key shared with an in-tier predicate stays
+    live_k = np.zeros((len(full.ukeys),), bool)
+    live_k[full.key_ids[used]] = True
+    ukeys, uklens = full.ukeys.copy(), full.uklens.copy()
+    ukeys[~live_k] = NEUTRAL_BYTE
+    uklens[~live_k] = ukeys.shape[1]
+    live_v = np.zeros((len(full.uvals),), bool)
+    kv_live = used & (full.kinds > 0)
+    live_v[full.val_ids[kv_live]] = True
+    uvals, uvlens = full.uvals.copy(), full.uvlens.copy()
+    uvals[~live_v] = NEUTRAL_BYTE
+    uvlens[~live_v] = uvals.shape[1]
+    return CompiledPlan(
+        keys=keys, klens=klens, vals=vals, vlens=vlens,
+        kinds=full.kinds, unbounded=full.unbounded, membership=membership,
+        ukeys=ukeys, uklens=uklens, uvals=uvals, uvlens=uvlens,
+        uunb=full.uunb, key_ids=full.key_ids, val_ids=full.val_ids,
+    )
+
+
 def compile_plan(clauses: Sequence[Clause]) -> CompiledPlan:
     terms, membership = dedup_terms(clauses)
     rows = []

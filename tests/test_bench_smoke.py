@@ -12,8 +12,9 @@ import pytest
 
 from benchmarks.bench_schema import (
     SchemaError, validate_file, validate_kernels, validate_replan,
+    validate_tiers,
 )
-from benchmarks.run import write_kernels_artifacts
+from benchmarks.run import write_kernels_artifacts, write_tiers_artifacts
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -82,6 +83,83 @@ def test_replan_schema_requires_epoch_advance():
     obj["adaptive"]["epoch"] = 0
     with pytest.raises(SchemaError):
         validate_replan(obj)
+
+
+def _tier_scenario(mode, eff, e2e, ok=True):
+    return {
+        "mode": mode, "tier_assignment": [2, 1, 0], "budget_spent_us": 10.0,
+        "budget_ok": ok, "n_records": 1000, "eff_loading_ratio": eff,
+        "loading_s": e2e / 2, "scan_s": e2e / 2, "end_to_end_s": e2e,
+        "retier_events": 1,
+    }
+
+
+_GOOD_TIERS = {
+    "global_budget_us": 10.0,
+    "fleet": [{"speed": 4.0, "count": 1}],
+    "tiers": {"sizes": [1, 3, 8], "budgets": [1.0, 3.0, 9.0]},
+    "tiered": _tier_scenario("tiered", 0.35, 0.5),
+    "uniform_min": _tier_scenario("uniform_min", 1.0, 1.2),
+    "uniform_max": _tier_scenario("uniform_max", 0.7, 2.0, ok=False),
+    "wins": {"eff_loading_ratio": True, "end_to_end_s": True},
+}
+
+
+def test_tiers_schema_accepts_tracked_artifact():
+    path = os.path.join(REPO_ROOT, "BENCH_tiers.json")
+    assert validate_file(path) == "BENCH_tiers.json"
+
+
+def test_tiers_schema_accepts_wellformed_synthetic():
+    validate_tiers(_GOOD_TIERS)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda o: o.pop("tiered"),
+    lambda o: o.pop("wins"),
+    lambda o: o["tiers"].__setitem__("sizes", [3, 1]),       # not nested
+    lambda o: o["tiers"].__setitem__("sizes", [4]),          # single tier
+    lambda o: o["tiered"].__setitem__("budget_ok", False),   # over budget
+    lambda o: o["uniform_max"].__setitem__("budget_ok", True),
+    lambda o: o["tiered"].__setitem__("eff_loading_ratio", 0.9),  # loses
+    lambda o: o["tiered"].__setitem__("end_to_end_s", 5.0),       # loses
+    lambda o: o["tiered"].pop("retier_events"),
+    lambda o: o["tiered"].__setitem__("retier_events", 0),  # no drift demo
+    lambda o: o.__setitem__("tiers", []),  # corrupted section shape
+])
+def test_tiers_schema_rejects_malformed_or_losing(mutate):
+    obj = json.loads(json.dumps(_GOOD_TIERS))
+    mutate(obj)
+    with pytest.raises(SchemaError):
+        validate_tiers(obj)
+
+
+def test_tiers_quick_run_never_touches_tracked_artifact(tmp_path):
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    tracked = tmp_path / "BENCH_tiers.json"
+    tracked.write_text("SENTINEL")
+    written = write_tiers_artifacts(
+        _GOOD_TIERS, quick=True,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert written == [str(artifacts / "bench_tiers.json")]
+    assert tracked.read_text() == "SENTINEL"
+    written = write_tiers_artifacts(
+        _GOOD_TIERS, quick=False,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert str(tracked) in written
+    assert json.loads(tracked.read_text()) == _GOOD_TIERS
+
+
+@pytest.mark.ci_smoke
+def test_quick_tiers_benchmark_beats_baselines():
+    """Reduced-size tiered-fleet benchmark -> schema-valid artifact, i.e.
+    the allocator beats uniform-min AND uniform-max within budget (the
+    in-suite twin of the CI smoke gate's ``benchmarks.run --quick``)."""
+    from benchmarks import bench_tiers
+
+    out = bench_tiers.run(n_records=4864, n_queries=200, n_exec_queries=80)
+    validate_tiers(out)
 
 
 def test_quick_run_never_touches_tracked_artifact(tmp_path):

@@ -107,6 +107,75 @@ def test_prefetcher_propagates_and_finishes():
             pass
 
 
+def test_prefetcher_close_releases_blocked_worker():
+    """An abandoned consumer must not leave the worker parked on a full
+    queue forever: close() unblocks and joins it."""
+    produced = []
+
+    def gen():
+        for i in range(1000):
+            produced.append(i)
+            yield i
+
+    it = Prefetcher(gen(), depth=2)
+    assert next(it) == 0  # worker is now blocked on the full queue
+    it.close()
+    assert not it._t.is_alive()
+    assert len(produced) < 1000  # the stream was genuinely abandoned early
+    # closed iterator terminates cleanly instead of hanging
+    assert list(it) == []
+    it.close()  # idempotent
+
+
+def test_prefetcher_close_surfaces_worker_exception():
+    def boom():
+        yield 1
+        raise RuntimeError("worker died")
+
+    it = Prefetcher(boom(), depth=4)
+    assert next(it) == 1
+    it._t.join(timeout=5)  # let the failure land before we abandon it
+    with pytest.raises(RuntimeError, match="worker died"):
+        it.close()
+    it.close()  # exception is raised once, close stays idempotent
+
+
+def test_prefetcher_close_reports_unreleasable_worker():
+    """A worker stuck INSIDE the wrapped iterator can't be released —
+    close() must say so instead of returning as if the thread exited."""
+    import threading
+
+    gate = threading.Event()
+
+    def stuck():
+        yield 0
+        gate.wait()   # stuck in the iterator, not in the queue handoff
+        yield 1
+
+    it = Prefetcher(stuck(), depth=1)
+    assert next(it) == 0
+    it._JOIN_S = 0.2
+    try:
+        with pytest.raises(RuntimeError, match="cannot be released"):
+            it.close()
+    finally:
+        gate.set()    # let the thread finish
+    it._t.join(timeout=5)
+    assert not it._t.is_alive()
+
+
+def test_prefetcher_context_manager():
+    with Prefetcher(iter(range(100)), depth=2) as it:
+        assert next(it) == 0
+    assert not it._t.is_alive()
+
+    # a consumer-side exception propagates (not masked by close)
+    with pytest.raises(ValueError, match="consumer"):
+        with Prefetcher(iter(range(100)), depth=2) as it:
+            raise ValueError("consumer bug")
+    assert not it._t.is_alive()
+
+
 def test_tokenizer_determinism_and_padding():
     tok = ByteTokenizer(vocab_size=65536)
     a = tok.encode(b'{"x": 1}')

@@ -1,0 +1,646 @@
+"""Multi-tenant tiered pushdown: nested tiers, coverage, allocation.
+
+Invariants under test (DESIGN.md §12):
+  * the multi-budget solver emits NESTED tiers (Ti ⊆ Ti+1) from one CELF
+    run, each within its budget, with the top tier identical to the
+    single-budget CELF solve;
+  * nesting is preserved across ``evolve_plan``/remap (coverage gid sets
+    stay nested per epoch; surviving clauses keep stable gids);
+  * the store validates a chunk's coverage claim before touching state,
+    and scans stay EXACT under mixed-tier, mixed-epoch ingest (counts
+    always equal the full-scan baseline — the differential sweep);
+  * every tier of a family shares ONE jit trace per shape bucket, and all
+    engines are bit-identical on every tier's clause subset;
+  * the fleet allocator maximizes expected savings under a global budget
+    and re-tiers when measured per-shard cost drifts.
+"""
+import numpy as np
+import pytest
+
+from repro.core.client import NumpyEngine, PythonEngine, encode_chunk
+from repro.core.planner import build_plan_family
+from repro.core.predicates import Query, clause, presence
+from repro.core.selection import (
+    ClientProfile,
+    SelectionProblem,
+    allocate_tiers,
+    celf_greedy,
+    objective,
+    tiered_celf,
+)
+from repro.core.server import (
+    CiaoStore,
+    DataSkippingScanner,
+    FullScanBaseline,
+    PlanFamily,
+    PushdownPlan,
+    evolve_family,
+    trivial_family,
+)
+from repro.core.workload import estimate_selectivities, generate_workload
+from repro.data.datasets import generate_records, predicate_pool
+from repro.data.pipeline import ClientShard, FleetTierAllocator, IngestCoordinator
+
+
+def _problem(seed: int, n_queries: int = 18) -> SelectionProblem:
+    pool = predicate_pool("ycsb")
+    rng = np.random.default_rng(seed)
+    wl = generate_workload(pool, n_queries=n_queries, distribution="zipf",
+                           zipf_a=1.5, rng=rng)
+    cands = wl.clause_pool()
+    sel = {c: float(rng.uniform(0.01, 0.6)) for c in cands}
+    cost = {c: float(rng.uniform(0.2, 2.0)) for c in cands}
+    return SelectionProblem(queries=tuple(wl.queries), sel=sel, cost=cost,
+                            budget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# the multi-budget solver
+# ---------------------------------------------------------------------------
+
+def test_tiered_celf_nested_budgeted_and_top_matches_celf():
+    """Property sweep: Ti ⊆ Ti+1, every tier within budget, objectives
+    non-decreasing, and the top tier IS the single-budget CELF solution."""
+    for seed in range(12):
+        prob = _problem(seed)
+        rng = np.random.default_rng(100 + seed)
+        budgets = np.sort(rng.uniform(0.3, 8.0, size=rng.integers(2, 5)))
+        ts = tiered_celf(prob, budgets.tolist())
+        assert ts.n_tiers == len(budgets)
+        for t in range(ts.n_tiers):
+            tier = ts.tier(t)
+            assert ts.tier_cost(t) <= ts.budgets[t] + 1e-9
+            assert abs(ts.objectives[t] - objective(prob, tier)) < 1e-9
+            if t:
+                assert set(ts.tier(t - 1)) <= set(tier)          # nesting
+                assert ts.objectives[t] >= ts.objectives[t - 1] - 1e-12
+        top = celf_greedy(
+            SelectionProblem(queries=prob.queries, sel=prob.sel,
+                             cost=prob.cost, budget=float(budgets[-1])),
+            ratio=True)
+        assert list(ts.order) == list(top.selected)
+
+
+def test_tiered_celf_rejects_bad_budgets():
+    prob = _problem(0)
+    with pytest.raises(ValueError):
+        tiered_celf(prob, [])
+    with pytest.raises(ValueError):
+        tiered_celf(prob, [2.0, 1.0])
+    with pytest.raises(ValueError):
+        tiered_celf(prob, [-1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# the fleet allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_prefers_cheap_fast_clients():
+    costs = [0.0, 1.0, 3.0]
+    values = [0.0, 5.0, 8.0]
+    clients = [ClientProfile(cost_scale=0.25, weight=0.5),   # fast
+               ClientProfile(cost_scale=4.0, weight=0.5)]    # slow phone
+    alloc = allocate_tiers(costs, values, clients, budget=1.0)
+    assert alloc.feasible and alloc.spent <= 1.0 + 1e-9
+    assert alloc.tiers[0] > alloc.tiers[1]  # fast client climbs first
+
+
+def test_allocator_budget_extremes():
+    costs = [0.0, 1.0, 3.0]
+    values = [0.0, 5.0, 8.0]
+    clients = [ClientProfile(cost_scale=1.0, weight=1 / 3)] * 3
+    rich = allocate_tiers(costs, values, clients, budget=1e9)
+    assert rich.tiers == [2, 2, 2]
+    poor = allocate_tiers(costs, values, clients, budget=0.0)
+    assert poor.tiers == [0, 0, 0] and poor.feasible
+    # savings monotone in budget
+    mid = allocate_tiers(costs, values, clients, budget=1.5)
+    assert poor.expected_savings <= mid.expected_savings \
+        <= rich.expected_savings
+
+
+def test_allocator_validates_shapes():
+    with pytest.raises(ValueError):
+        allocate_tiers([0.0, 1.0], [0.0], [ClientProfile()], budget=1.0)
+    with pytest.raises(ValueError):
+        allocate_tiers([2.0, 1.0], [0.0, 1.0], [ClientProfile()], budget=1.0)
+
+
+# ---------------------------------------------------------------------------
+# PlanFamily: nesting across construction and evolution
+# ---------------------------------------------------------------------------
+
+def test_family_validates_tier_sizes():
+    plan = PushdownPlan(clauses=[clause(presence("a")), clause(presence("b"))])
+    with pytest.raises(ValueError):
+        PlanFamily(plan=plan, tier_sizes=(2, 1))         # not ascending
+    with pytest.raises(ValueError):
+        PlanFamily(plan=plan, tier_sizes=(1,))           # top != plan.n
+    with pytest.raises(ValueError):
+        PlanFamily(plan=plan, tier_sizes=(1, 2), budgets=(1.0,))
+    fam = PlanFamily(plan=plan, tier_sizes=(0, 2))
+    assert fam.n_tiers == 2 and fam.tier_clauses(0) == []
+
+
+def test_nesting_preserved_across_evolve_and_remap():
+    """Coverage gid sets stay nested per epoch, survivors keep gids, and
+    every tier's covered rows remap exactly like the whole plan's."""
+    a, b, c, d, e = (clause(presence(x)) for x in "abcde")
+    fam0 = PlanFamily(plan=PushdownPlan(clauses=[a, b, c, d]),
+                      tier_sizes=(1, 2, 4))
+    fam1 = evolve_family(fam0, [c, e, a], (1, 2, 3))
+    for fam in (fam0, fam1):
+        covs = [fam.coverage_gids(s) for s in fam.tier_sizes]
+        for lo, hi in zip(covs, covs[1:]):
+            assert lo <= hi                               # nesting invariant
+    # survivors keep stable gids; the new clause drew a fresh one
+    assert fam1.plan.global_ids[a] == fam0.plan.global_ids[a]
+    assert fam1.plan.global_ids[c] == fam0.plan.global_ids[c]
+    assert fam1.plan.global_ids[e] == 4
+    # remap is consistent tier-by-tier: a tier-covered new row either maps
+    # to the old local row of the same gid or is -1 (newly pushed)
+    remap = fam1.plan.remap_from(fam0.plan)
+    for s in fam1.tier_sizes:
+        for new_local in range(s):
+            old_local = remap[new_local]
+            if old_local >= 0:
+                cl = fam1.plan.clauses[new_local]
+                assert fam0.plan.ids[cl] == old_local
+                assert fam0.plan.global_ids[cl] == fam1.plan.global_ids[cl]
+
+
+def test_trivial_family_roundtrip():
+    plan = PushdownPlan(clauses=[clause(presence("a"))])
+    fam = trivial_family(plan)
+    assert fam.tier_sizes == (1,) and fam.top_tier == 0
+    assert PlanFamily.from_obj(plan, fam.to_obj()).tier_sizes == (1,)
+
+
+# ---------------------------------------------------------------------------
+# coverage-aware store: validation, stats, breakdown
+# ---------------------------------------------------------------------------
+
+def _ycsb_family(n_tiers=(1, 2, 4)):
+    pool = predicate_pool("ycsb")
+    recs = generate_records("ycsb", 600, seed=2)
+    sel = estimate_selectivities(pool, recs[:300])
+    ranked = sorted(pool, key=lambda c: abs(sel[c] - 0.2))
+    plan = PushdownPlan(clauses=ranked[: n_tiers[-1]])
+    fam = PlanFamily(plan=plan, tier_sizes=tuple(n_tiers))
+    return fam, ranked, recs
+
+
+def test_ingest_validates_coverage_before_stats():
+    fam, ranked, recs = _ycsb_family()
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:100])
+    # tier 1 covers 2 clauses; shipping 4 rows is a coverage lie
+    bv_full = eng.eval_fused(chunk, fam.plan.clauses)
+    before = (store.stats.n_records, len(store.blocks), len(store.raw))
+    with pytest.raises(ValueError):
+        store.ingest_chunk(chunk, bv_full, tier=1)
+    with pytest.raises(ValueError):
+        store.ingest_chunk(chunk, bv_full, tier=7)   # no such tier
+    assert (store.stats.n_records, len(store.blocks), len(store.raw)) == before
+    # the honest tier-1 chunk is accepted and tagged
+    bv = eng.eval_fused_prefix(chunk, fam.plan.clauses, 2)
+    store.ingest_chunk(chunk, bv, tier=1)
+    assert store.blocks[-1].n_covered == 2 and store.blocks[-1].tier == 1
+    assert store.group_records[(0, 1)] == 100
+
+
+def test_empty_tier_keeps_everything_raw():
+    fam, ranked, recs = _ycsb_family(n_tiers=(0, 4))
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:120])
+    store.ingest_chunk(chunk, eng.eval_fused_prefix(chunk, fam.plan.clauses, 0),
+                       tier=0)
+    assert not store.blocks and len(store.raw) == 1
+    assert store.raw[0].n_covered == 0
+    # zero coverage is never skippable: the first scan JIT-promotes it
+    base = FullScanBaseline()
+    base.ingest_chunk(chunk)
+    q = Query((ranked[0],))
+    r = DataSkippingScanner(store).scan(q)
+    assert r.count == base.scan(q).count
+    assert r.raw_parsed == 120
+
+
+def test_observed_selectivities_use_per_clause_denominators():
+    fam, ranked, recs = _ycsb_family(n_tiers=(1, 2))
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    c_lo = encode_chunk(recs[:200])      # tier 0: covers clause 0 only
+    c_hi = encode_chunk(recs[200:300])   # tier 1: covers both
+    store.ingest_chunk(c_lo, eng.eval_fused_prefix(c_lo, fam.plan.clauses, 1),
+                       tier=0)
+    store.ingest_chunk(c_hi, eng.eval_fused_prefix(c_hi, fam.plan.clauses, 2),
+                       tier=1)
+    obs = store.observed_selectivities()
+    bits_all = eng.eval(encode_chunk(recs[:300]), fam.plan.clauses)
+    bits_hi = eng.eval(c_hi, fam.plan.clauses)
+    # clause 0 was evaluated on all 300 records, clause 1 only on the 100
+    assert obs[0] == pytest.approx(bits_all[0].mean())
+    assert obs[1] == pytest.approx(bits_hi[1].mean())
+
+
+def test_scan_result_group_breakdown_sums_to_aggregate():
+    fam, ranked, recs = _ycsb_family()
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    for lo, tier in ((0, 0), (100, 1), (200, 2)):
+        chunk = encode_chunk(recs[lo:lo + 100])
+        k = fam.tier_sizes[tier]
+        store.ingest_chunk(chunk,
+                           eng.eval_fused_prefix(chunk, fam.plan.clauses, k),
+                           tier=tier)
+    r = DataSkippingScanner(store).scan(Query((ranked[1],)))
+    assert set(r.groups) <= {(0, 0), (0, 1), (0, 2)}
+    assert sum(g.rows_scanned for g in r.groups.values()) == r.rows_scanned
+    assert sum(g.rows_skipped for g in r.groups.values()) == r.rows_skipped
+    assert sum(g.raw_parsed for g in r.groups.values()) == r.raw_parsed
+    assert sum(g.count for g in r.groups.values()) == r.count
+    # clause ranked[1] is covered by tiers 1/2 but NOT tier 0: only the
+    # tier-0 group can have JIT parses, the covered groups can skip
+    assert r.groups[(0, 0)].raw_parsed > 0
+    assert r.groups[(0, 1)].rows_skipped + r.groups[(0, 2)].rows_skipped > 0
+
+
+# ---------------------------------------------------------------------------
+# THE soundness gate: differential sweep under mixed tiers, mixed epochs
+# ---------------------------------------------------------------------------
+
+def test_differential_mixed_tier_mixed_epoch_scan_counts():
+    """Scanner counts equal FullScanBaseline counts for every probe under
+    interleaved tiers and a mid-stream epoch bump."""
+    pool = predicate_pool("ycsb")
+    recs = generate_records("ycsb", 1200, seed=5)
+    sel = estimate_selectivities(pool, recs[:300])
+    ranked = sorted(pool, key=lambda c: abs(sel[c] - 0.25))
+    fam0 = PlanFamily(plan=PushdownPlan(clauses=ranked[:4]),
+                      tier_sizes=(1, 2, 4))
+    store = CiaoStore(fam0)
+    base = FullScanBaseline()
+    eng = NumpyEngine()
+    rng = np.random.default_rng(11)
+    lo = 0
+    for i in range(6):                              # epoch 0, mixed tiers
+        chunk = encode_chunk(recs[lo:lo + 100]); lo += 100
+        tier = int(rng.integers(0, 3))
+        k = fam0.tier_sizes[tier]
+        store.ingest_chunk(chunk,
+                           eng.eval_fused_prefix(chunk, fam0.plan.clauses, k),
+                           epoch=0, tier=tier)
+        base.ingest_chunk(chunk)
+    fam1 = evolve_family(fam0, [ranked[2], ranked[4], ranked[5]], (1, 3))
+    store.advance_epoch(fam1)
+    for i in range(6):                              # epoch 1, mixed tiers
+        chunk = encode_chunk(recs[lo:lo + 100]); lo += 100
+        tier = int(rng.integers(0, 2))
+        k = fam1.tier_sizes[tier]
+        store.ingest_chunk(chunk,
+                           eng.eval_fused_prefix(chunk, fam1.plan.clauses, k),
+                           epoch=1, tier=tier)
+        base.ingest_chunk(chunk)
+    scanner = DataSkippingScanner(store)
+    probes = [Query((c,)) for c in ranked[:6]]      # covered + uncovered mix
+    probes += [Query((ranked[0], ranked[2])), Query((ranked[2], ranked[4])),
+               Query((ranked[1], ranked[5])), Query((ranked[7],))]
+    for q in probes:
+        got, want = scanner.scan(q).count, base.scan(q).count
+        assert got == want, (q.describe(), got, want)
+    # repeat post-JIT (promoted blocks must stay consistent)
+    for q in probes:
+        assert scanner.scan(q).count == base.scan(q).count
+
+
+def test_recipe_batcher_exact_under_mixed_tiers():
+    import json
+
+    from repro.data.pipeline import RecipeBatcher
+    from repro.data.tokenizer import ByteTokenizer
+
+    fam, ranked, recs = _ycsb_family()
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    for lo, tier in ((0, 0), (150, 2), (300, 1)):
+        chunk = encode_chunk(recs[lo:lo + 150])
+        k = fam.tier_sizes[tier]
+        store.ingest_chunk(chunk,
+                           eng.eval_fused_prefix(chunk, fam.plan.clauses, k),
+                           tier=tier)
+    recipe = Query((ranked[1],))
+    b = RecipeBatcher(store, ByteTokenizer(vocab_size=1024),
+                      seq_len=32, batch_size=2)
+    want = sum(1 for r in recs[:450] if recipe.matches_exact(json.loads(r)))
+    got = 0
+    for rec in b.matching_records(recipe):
+        assert recipe.matches_exact(json.loads(rec))
+        got += 1
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# kernel plane: shared traces + engine bit-identity per tier
+# ---------------------------------------------------------------------------
+
+def test_all_tiers_share_one_jit_trace(monkeypatch):
+    """Every tier of one family must reuse ONE pallas staging (the subset
+    views keep the full plan's shapes); re-evaluation adds zero."""
+    from repro.kernels import fused as fused_mod
+    from repro.kernels.engine import KernelEngine
+
+    counted = []
+    real = fused_mod.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        counted.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fused_mod.pl, "pallas_call", counting)
+    recs = generate_records("ycsb", 200, seed=3)
+    pool = tuple(predicate_pool("ycsb")[:5])
+    chunk = encode_chunk(recs)
+    eng = KernelEngine("pallas_interpret")
+    eng.eval_fused_prefix(chunk, pool, 5)
+    n_first = len(counted)
+    assert n_first <= 1          # one fresh specialization at most
+    for k in (3, 1, 4, 2, 5, 3):
+        eng.eval_fused_prefix(chunk, pool, k)
+    assert len(counted) == n_first, "a tier re-staged the fused kernel"
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_engines_bit_identical_on_every_tier(backend):
+    from repro.kernels.engine import KernelEngine
+
+    recs = generate_records("winlog", 300, seed=4)
+    pool = tuple(predicate_pool("winlog")[:5])
+    chunk = encode_chunk(recs)
+    kern = KernelEngine(backend)
+    hosts = [PythonEngine(), NumpyEngine()]
+    for k in range(len(pool) + 1):
+        want = hosts[0].eval_fused_prefix(chunk, pool, k)
+        for e in (*hosts[1:], kern):
+            got = e.eval_fused_prefix(chunk, pool, k)
+            assert got.words.shape[0] == k
+            assert np.array_equal(got.words, want.words), (e, k)
+            assert np.array_equal(got.or_words, want.or_words), (e, k)
+            assert np.array_equal(got.counts, want.counts), (e, k)
+        # the view must equal a direct subset compile bit-for-bit
+        direct = kern.eval_fused(chunk, pool[:k])
+        assert np.array_equal(direct.words, want.words)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: allocation, drift re-tiering, tiered replan broadcast
+# ---------------------------------------------------------------------------
+
+def _tiered_setup(budget_frac=0.6, speeds=(4.0, 1.0, 1.0, 0.25, 0.25)):
+    pool = predicate_pool("ycsb")
+    rng = np.random.default_rng(1)
+    wl = generate_workload(pool, n_queries=40, distribution="zipf",
+                           zipf_a=1.5, rng=rng)
+    sample = generate_records("ycsb", 300, seed=17)
+    from repro.core.cost_model import CostModel
+    cm = CostModel().scaled(20.0)
+    sel = estimate_selectivities(wl.clause_pool(), sample)
+    costs = sorted(cm.clause_cost(c, sel[c]) for c in wl.clause_pool())
+    med = costs[len(costs) // 2]
+    rep = build_plan_family(wl, sample, cost_model=cm,
+                            tier_budgets_us=[med, 3 * med, 8 * med])
+    budget = budget_frac * rep.family.tier_costs[-1]
+    eng = NumpyEngine()
+    shards = [ClientShard("ycsb", i, eng, rep.family.plan, chunk_records=64,
+                          speed=s) for i, s in enumerate(speeds)]
+    return rep, budget, shards, wl, sample, cm
+
+
+def test_allocator_assigns_fleet_and_coordinator_tags_tiers():
+    rep, budget, shards, wl, sample, cm = _tiered_setup()
+    store = CiaoStore(rep.family)
+    alloc = FleetTierAllocator(rep.family, budget, retier_every_records=10**9)
+    # steal=False: every shard must produce its own chunks so each tier's
+    # ingest tagging is observable
+    coord = IngestCoordinator(shards, store, allocator=alloc, steal=False)
+    tiers = [s.tier for s in shards]
+    # fast shard never runs a lower tier than a slow shard
+    assert tiers[0] == max(tiers)
+    assert tiers[3] == tiers[4] == min(tiers)
+    assert alloc.allocation.feasible
+    coord.run(chunks_per_client=2)
+    # chunks arrived tagged with the shard's (epoch, tier)
+    seen = set(store.group_records)
+    assert seen == {(0, t) for t in set(tiers)}
+    assert store.stats.n_records == sum(s.eval_records for s in shards)
+
+
+def test_retier_on_cost_drift():
+    rep, budget, shards, wl, sample, cm = _tiered_setup()
+    store = CiaoStore(rep.family)
+    alloc = FleetTierAllocator(rep.family, budget, retier_every_records=64)
+    coord = IngestCoordinator(shards, store, allocator=alloc)
+    t0 = shards[0].tier
+    assert t0 == max(s.tier for s in shards)
+    # the fast shard's device degrades 100x: its measured cost scale
+    # spikes, and the next re-tier check must demote it
+    shards[0].cost_scale = 100.0
+    coord.run(chunks_per_client=2)
+    assert alloc.retier_events >= 1
+    assert shards[0].tier < t0
+
+
+def test_tiered_replan_broadcasts_family_and_retiers():
+    from repro.core.replan import Replanner, ReplanPolicy
+    from repro.core.workload import DriftPhase, drifting_workloads
+
+    pool = predicate_pool("ycsb")
+    wl1, wl2 = drifting_workloads(
+        pool, [DriftPhase(60, "zipf", 1.5, seed=1),
+               DriftPhase(60, "zipf", 2.0, seed=7)])
+    sample = generate_records("ycsb", 300, seed=17)
+    from repro.core.cost_model import CostModel
+    cm = CostModel().scaled(20.0)
+    rep = build_plan_family(wl1, sample, cost_model=cm,
+                            tier_budgets_us=[15.0, 40.0, 90.0])
+    store = CiaoStore(rep.family)
+    scanner = DataSkippingScanner(store)
+    policy = ReplanPolicy(check_every_records=256, min_observe_records=128,
+                          workload_window=24, min_window_queries=8)
+    repl = Replanner(store, sample, tier_budgets_us=[15.0, 40.0, 90.0],
+                     base_workload=wl1, cost_model=cm, policy=policy,
+                     planned_sel=rep.sel)
+    eng = NumpyEngine()
+    shards = [ClientShard("ycsb", i, eng, rep.family.plan, chunk_records=128,
+                          speed=(4.0 if i == 0 else 1.0)) for i in range(3)]
+    alloc = FleetTierAllocator(
+        rep.family, budget_us=float(np.mean(rep.family.tier_costs)),
+        retier_every_records=10**9)
+    q1, q2 = iter(wl1.queries), iter(wl2.queries)
+
+    def on_chunk(done):
+        src = q1 if store.epoch == 0 and done <= 4 else q2
+        for _ in range(4):
+            q = next(src, None)
+            if q is not None:
+                scanner.scan(q)
+
+    coord = IngestCoordinator(shards, store, replanner=repl,
+                              allocator=alloc, on_chunk=on_chunk)
+    coord.run(chunks_per_client=6)
+    assert store.epoch >= 1 and coord.epoch_bumps >= 1
+    # the family broadcast reached every shard and re-ran the allocator
+    assert all(s.family is store.family for s in shards)
+    assert alloc.family is store.family
+    # nested invariant holds for every registered epoch
+    for fam in store.families.values():
+        for a, b in zip(fam.tier_sizes, fam.tier_sizes[1:]):
+            assert a <= b
+    # per-tier ingest kept flowing after the bump
+    assert any(e == store.epoch for e, _ in store.group_records)
+
+
+def test_observe_timing_predicts_over_the_evaluated_prefix():
+    """A tiered client reports timings for its PREFIX, not the whole
+    plan — the recalibration must compare like with like (regression:
+    floor-heavy fleets collapsed cost_scale toward the clamp)."""
+    from repro.core.replan import Replanner, ReplanPolicy
+
+    fam, ranked, recs = _ycsb_family(n_tiers=(1, 4))
+    store = CiaoStore(fam)
+    repl = Replanner(store, recs[:100], tier_budgets_us=[5.0, 50.0],
+                     policy=ReplanPolicy(max_cost_scale=50.0))
+    full = repl._predicted_plan_us()
+    prefix = repl._predicted_plan_us(1)
+    assert 0 < prefix < full
+    # a report timed against the floor tier, exactly 2x its predicted
+    # cost, must calibrate scale ~2 (not 2 * prefix/full)
+    repl.observe_timing(1000, prefix * 2 * 1000 / 1e6, n_clauses=1)
+    assert repl.cost_scale == pytest.approx(2.0, rel=1e-6)
+    # an empty tier carries no cost signal and must not move the scale
+    repl.observe_timing(1000, 1.0, n_clauses=0)
+    assert repl.cost_scale == pytest.approx(2.0, rel=1e-6)
+
+
+def test_tiered_replan_noop_on_within_tier_order_flip(monkeypatch):
+    """Same per-tier clause SETS (order flipped inside a tier) must not
+    bump the epoch — a bump would only reset stats and invalidate
+    in-flight chunks for a semantically identical family."""
+    from repro.core import replan as replan_mod
+    from repro.core.planner import FamilyReport
+    from repro.core.selection import TieredSelection
+    from repro.core.workload import Workload
+
+    fam, ranked, recs = _ycsb_family(n_tiers=(1, 3))
+    a, b, c = fam.plan.clauses
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    chunk = encode_chunk(recs[:600])
+    store.ingest_chunk(chunk, eng.eval_fused(chunk, fam.plan.clauses))
+
+    def fake_family(order, sizes):
+        plan = PushdownPlan(clauses=list(order))
+        famx = PlanFamily(plan=plan, tier_sizes=sizes)
+        tiered = TieredSelection(
+            budgets=(5.0, 50.0)[: len(sizes)], order=tuple(order),
+            cum_costs=tuple(float(i + 1) for i in range(len(order))),
+            tier_sizes=sizes, objectives=tuple(0.0 for _ in sizes))
+        return FamilyReport(family=famx, tiered=tiered,
+                            sel={cl: 0.1 for cl in order},
+                            cost={cl: 1.0 for cl in order})
+
+    base = Workload("base", [Query((x,)) for x in (a, b, c)])
+    repl = replan_mod.Replanner(
+        store, recs[:100], tier_budgets_us=[5.0, 50.0], base_workload=base)
+    # within-tier flip: [a | b, c] -> [a | c, b]: every cut set matches
+    monkeypatch.setattr(replan_mod, "build_plan_family",
+                        lambda *args, **kw: fake_family((a, c, b), (1, 3)))
+    assert repl.step(force=True) is None
+    assert store.epoch == 0 and not repl.history
+    # a moved cut point IS a semantic change: the epoch must advance
+    monkeypatch.setattr(replan_mod, "build_plan_family",
+                        lambda *args, **kw: fake_family((a, c, b), (2, 3)))
+    out = repl.step(force=True)
+    assert out is not None and store.epoch == 1
+
+
+def test_eval_fused_prefix_rejects_out_of_range_on_all_engines():
+    from repro.kernels.engine import KernelEngine
+
+    recs = generate_records("ycsb", 50, seed=1)
+    pool = tuple(predicate_pool("ycsb")[:3])
+    chunk = encode_chunk(recs)
+    for eng in (NumpyEngine(), PythonEngine(), KernelEngine("xla")):
+        for bad in (-1, 4):
+            with pytest.raises(ValueError):
+                eng.eval_fused_prefix(chunk, pool, bad)
+
+
+def test_drift_signal_ignores_tier_uncovered_clauses():
+    """A clause no produced tier covered has observed selectivity 0 by
+    construction — it must not fire a 'selectivity' replan nor clobber
+    its cached sample estimate (regression: coverage-blind drift)."""
+    from repro.core.replan import Replanner, ReplanPolicy
+
+    fam, ranked, recs = _ycsb_family(n_tiers=(1, 2))
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    # every chunk at tier 0: clause 1 never gets coverage
+    for lo in range(0, 600, 200):
+        chunk = encode_chunk(recs[lo:lo + 200])
+        store.ingest_chunk(
+            chunk, eng.eval_fused_prefix(chunk, fam.plan.clauses, 1), tier=0)
+    obs0 = float(store.observed_selectivities()[0])
+    assert store.clause_records()[1] == 0
+    planned = {fam.plan.clauses[0]: max(obs0, 1e-4),
+               fam.plan.clauses[1]: 0.3}
+    from repro.core.workload import Workload
+    base = Workload("base", [Query((c,)) for c in fam.plan.clauses])
+    repl = Replanner(store, recs[:200], tier_budgets_us=[5.0, 50.0],
+                     base_workload=base,
+                     policy=ReplanPolicy(min_observe_records=128),
+                     planned_sel=planned)
+    sig = repl.drift_signal()
+    # clause 1's fake obs of 0 vs planned 0.3 would be drift 1.0 — it
+    # must be excluded; clause 0 matches its planned value exactly
+    assert sig.sel_drift < 0.5
+    assert sig.triggers(repl.policy) != "selectivity"
+    # the re-solve path must not overwrite clause 1's estimate either
+    repl._replan("forced", sig)
+    assert repl._sel_cache[fam.plan.clauses[1]] == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrips_families_and_coverage(tmp_path):
+    fam, ranked, recs = _ycsb_family()
+    store = CiaoStore(fam)
+    eng = NumpyEngine()
+    for lo, tier in ((0, 0), (150, 2), (300, 1)):
+        chunk = encode_chunk(recs[lo:lo + 150])
+        k = fam.tier_sizes[tier]
+        store.ingest_chunk(chunk,
+                           eng.eval_fused_prefix(chunk, fam.plan.clauses, k),
+                           tier=tier)
+    DataSkippingScanner(store).scan(Query((ranked[7],)))  # force JIT blocks
+    path = str(tmp_path / "tiered.npz")
+    store.save(path)
+    loaded = CiaoStore.load(path)
+    assert loaded.family.tier_sizes == fam.tier_sizes
+    assert [b.n_covered for b in loaded.blocks] == \
+        [b.n_covered for b in store.blocks]
+    assert [b.tier for b in loaded.jit_blocks] == \
+        [b.tier for b in store.jit_blocks]
+    assert loaded.group_records == store.group_records
+    assert loaded.group_loaded == store.group_loaded
+    assert np.array_equal(loaded.observed_selectivities(),
+                          store.observed_selectivities())
+    for q in (Query((ranked[0],)), Query((ranked[1], ranked[2]))):
+        a = DataSkippingScanner(store, log_queries=False).scan(q)
+        b = DataSkippingScanner(loaded, log_queries=False).scan(q)
+        assert (a.count, a.rows_scanned, a.rows_skipped) == \
+            (b.count, b.rows_scanned, b.rows_skipped)
