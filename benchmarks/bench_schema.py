@@ -149,12 +149,52 @@ def validate_tiers(obj: dict) -> None:
         "end-to-end time")
 
 
+_SCAN_SIDE = {
+    "scan_s": numbers.Real,
+    "us_per_query": numbers.Real,
+}
+
+
+def validate_scan(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid scan artifact.
+
+    Beyond shape, this gates the columnar engine's CLAIM: counts must be
+    bit-identical to the exact-match oracle across the mixed-epoch /
+    mixed-tier workload, zone maps must demonstrably prune, and the
+    vectorized path must beat the row-at-a-time path >= 5x at full size
+    (>= 1.5x for reduced-size ``--quick``/CI smoke runs, which trade
+    segment sizes for wall-clock).
+    """
+    _require(isinstance(obj, dict), "scan", "top level must be an object")
+    for key in ("quick", "n_records", "n_segments", "n_queries",
+                "row_at_a_time", "columnar", "speedup", "cold_speedup",
+                "counts_match"):
+        _require(key in obj, "scan", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "scan", "'quick' must be bool")
+    _check_fields(obj["row_at_a_time"], _SCAN_SIDE, "row_at_a_time")
+    _check_fields(obj["columnar"], dict(
+        _SCAN_SIDE, cold_scan_s=numbers.Real,
+        segments_pruned=numbers.Integral), "columnar")
+    _require(obj["counts_match"] is True, "scan",
+             "columnar counts diverged from the exact-match oracle")
+    _require(obj["n_segments"] >= 2, "scan", "need >= 2 segments")
+    _require(obj["n_queries"] >= 10, "scan", "need >= 10 workload queries")
+    _require(obj["columnar"]["segments_pruned"] >= 1, "scan",
+             "zone maps never pruned a segment (the second skipping "
+             "level is not demonstrated)")
+    floor = 1.5 if obj["quick"] else 5.0
+    _require(obj["speedup"] >= floor, "scan",
+             f"columnar speedup {obj['speedup']} < required {floor}x")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
     "bench_replan.json": validate_replan,
     "bench_tiers.json": validate_tiers,
     "BENCH_tiers.json": validate_tiers,
+    "bench_scan.json": validate_scan,
+    "BENCH_scan.json": validate_scan,
 }
 
 

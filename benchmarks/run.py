@@ -64,13 +64,25 @@ def write_tiers_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_scan_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_scan.json",
+) -> list[str]:
+    """Write the columnar-scan benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_scan
+
+    return _write_gated_artifacts(
+        out, validator=validate_scan, detail_name="bench_scan.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "roofline")
+             "scan,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -181,6 +193,23 @@ def main() -> None:
             f"{out['uniform_min']['end_to_end_s']}/"
             f"{out['uniform_max']['end_to_end_s']};"
             f"retiers_{out['tiered']['retier_events']}",
+        ))
+
+    if only is None or "scan" in only:
+        from . import bench_scan
+
+        out = bench_scan.run(
+            n_records=6144 if args.quick else 24576,
+            repeats=2 if args.quick else 3,
+            quick=args.quick,
+        )
+        write_scan_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "scan_columnar", out["columnar"]["us_per_query"],
+            f"row_{out['row_at_a_time']['us_per_query']}us;"
+            f"x{out['speedup']};cold_x{out['cold_speedup']};"
+            f"pruned_{out['columnar']['segments_pruned']};"
+            f"counts_match_{out['counts_match']}",
         ))
 
     if only is None or "roofline" in only:

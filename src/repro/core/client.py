@@ -96,36 +96,57 @@ def encode_patterns(patterns: Sequence[bytes], *, max_len: int = 64
 # vectorized matching primitives (numpy; ref.py mirrors these in jnp)
 # ---------------------------------------------------------------------------
 
-def window_hits(data: np.ndarray, pattern: bytes) -> np.ndarray:
+def window_hits(data: np.ndarray, pattern: bytes, *,
+                counts: np.ndarray | None = None) -> np.ndarray:
     """bool[R, L-m+1]: window j matches pattern exactly.
 
     An empty pattern matches at every position (``b"" in x`` semantics) —
     the engine-equivalence contract: PythonEngine and the kernels treat a
     zero-length pattern as match-all.
+
+    Candidate-filtered: instead of ``m`` full (R, L) comparison passes,
+    ONE pass on the chunk's rarest pattern byte (``counts``: the chunk's
+    byte histogram, computed here when not supplied) yields a sparse
+    candidate set, and the remaining pattern bytes verify by gathers over
+    the shrinking survivors — ordered rarest-first so dead candidates die
+    early.  JSON chunks made the old dense path memory-bound: every
+    pattern starts with ``"`` (~10% of chunk bytes), but almost every
+    pattern also contains a byte with frequency well under 1%.
     """
     m = len(pattern)
-    L = data.shape[1]
+    R, L = data.shape
     if m == 0:
-        return np.ones((data.shape[0], L + 1), dtype=bool)
+        return np.ones((R, L + 1), dtype=bool)
+    W = L - m + 1
     if m > L:
-        return np.zeros((data.shape[0], max(L - m + 1, 0)), dtype=bool)
+        return np.zeros((R, max(W, 0)), dtype=bool)
     pat = np.frombuffer(pattern, dtype=np.uint8)
-    acc = data[:, 0 : L - m + 1] == pat[0]
-    for i in range(1, m):
-        # cheap early out: a chunk with zero candidate windows is common
-        if not acc.any():
-            return acc
-        acc &= data[:, i : L - m + 1 + i] == pat[i]
-    return acc
+    out = np.zeros((R, W), dtype=bool)
+    if R == 0:
+        return out
+    if counts is None:
+        counts = np.bincount(data.ravel(), minlength=256)
+    order = np.argsort(counts[pat], kind="stable")
+    a = int(order[0])
+    rs, ps = np.nonzero(data[:, a: a + W] == pat[a])
+    for i in order[1:]:
+        if not rs.size:
+            return out
+        keep = data[rs, ps + int(i)] == pat[int(i)]
+        rs, ps = rs[keep], ps[keep]
+    out[rs, ps] = True
+    return out
 
 
-def any_match(data: np.ndarray, pattern: bytes) -> np.ndarray:
+def any_match(data: np.ndarray, pattern: bytes, *,
+              counts: np.ndarray | None = None) -> np.ndarray:
     """bool[R]: pattern occurs anywhere in the record."""
-    hits = window_hits(data, pattern)
+    hits = window_hits(data, pattern, counts=counts)
     return hits.any(axis=1) if hits.size else np.zeros(data.shape[0], bool)
 
 
-def key_value_match(data: np.ndarray, key_pat: bytes, val_pat: bytes) -> np.ndarray:
+def key_value_match(data: np.ndarray, key_pat: bytes, val_pat: bytes, *,
+                    counts: np.ndarray | None = None) -> np.ndarray:
     """bool[R]: paper's key-value semantics on the dense chunk.
 
     Valid iff there is an occurrence of ``key_pat`` ending at position p such
@@ -133,65 +154,82 @@ def key_value_match(data: np.ndarray, key_pat: bytes, val_pat: bytes) -> np.ndar
     delimiters are ',' and '}'.  If the value pattern itself contains a
     delimiter we degrade to an unbounded search after the key (false-positive
     safe; see predicates.SimplePredicate.matches_raw).
+
+    The delimiter-confinement machinery (cumsum + segmented max) is the
+    expensive part; it runs only over *active* rows — rows with at least
+    one key hit AND one value hit — which selective predicates make a
+    small minority of the chunk.
     """
     R, L = data.shape
     mk, mv = len(key_pat), len(val_pat)
-    key_hit = window_hits(data, key_pat)          # (R, L-mk+1)
+    key_hit = window_hits(data, key_pat, counts=counts)   # (R, L-mk+1)
     if not key_hit.any():
         return np.zeros(R, dtype=bool)
-    val_hit = window_hits(data, val_pat)          # (R, L-mv+1)
+    val_hit = window_hits(data, val_pat, counts=counts)   # (R, L-mv+1)
     if not val_hit.any():
         return np.zeros(R, dtype=bool)
+
+    out = np.zeros(R, dtype=bool)
+    active = key_hit.any(axis=1) & val_hit.any(axis=1)
+    if not active.any():
+        return out
+    act = np.nonzero(active)[0]
+    data = data[act]
+    key_hit = key_hit[act]
+    val_hit = val_hit[act]
+    Ra = len(act)
 
     unbounded = (b"," in val_pat) or (b"}" in val_pat)
     # any_val_from[r, p] = exists v >= p with (clean) val hit at v, p in [0, L]
     if unbounded:
         ok = val_hit
     else:
-        delim = (data == ord(",")) | (data == ord("}"))    # (R, L)
+        delim = (data == ord(",")) | (data == ord("}"))    # (Ra, L)
         # exclusive prefix count of delimiters: C[r, p] = # delims in [0, p)
-        C = np.zeros((R, L + 1), dtype=np.int32)
+        C = np.zeros((Ra, L + 1), dtype=np.int32)
         np.cumsum(delim, axis=1, out=C[:, 1:])
         # clean val hit: no delimiter inside [v, v+mv)
         ok = val_hit & ((C[:, mv : mv + val_hit.shape[1]] - C[:, : val_hit.shape[1]]) == 0)
         if not ok.any():
-            return np.zeros(R, dtype=bool)
+            return out
 
     # suffix "exists a usable value at v >= p (same segment unless unbounded)"
     pos = np.where(ok, np.arange(ok.shape[1])[None, :], -1)
     if unbounded:
         # reverse running max of hit positions
         last_from = np.flip(np.maximum.accumulate(np.flip(pos, axis=1), axis=1), axis=1)
-        any_from = np.full((R, L + 1), False)
+        any_from = np.full((Ra, L + 1), False)
         any_from[:, : pos.shape[1]] = last_from >= np.arange(pos.shape[1])[None, :]
         # positions beyond the last window start cannot begin a match
     else:
         # segmented: max usable-value position per (record, segment)
         seg_of_pos = C[:, :L]                                  # segment id of p
         nseg = L + 1
-        flat = seg_of_pos[:, : pos.shape[1]] + nseg * np.arange(R)[:, None]
-        seg_max = np.full(R * nseg, -1, dtype=np.int64)
+        flat = seg_of_pos[:, : pos.shape[1]] + nseg * np.arange(Ra)[:, None]
+        seg_max = np.full(Ra * nseg, -1, dtype=np.int64)
         np.maximum.at(seg_max, flat.ravel(), pos.ravel())
-        seg_max = seg_max.reshape(R, nseg)
-        any_from = np.full((R, L + 1), False)
+        seg_max = seg_max.reshape(Ra, nseg)
+        any_from = np.full((Ra, L + 1), False)
         p_idx = np.arange(L)
         any_from[:, :L] = np.take_along_axis(seg_max, seg_of_pos, axis=1) >= p_idx[None, :]
 
     # key hit at window j -> value region starts at p = j + mk
     jmax = key_hit.shape[1]
     region = any_from[:, mk : mk + jmax]
-    return (key_hit & region).any(axis=1)
+    out[act] = (key_hit & region).any(axis=1)
+    return out
 
 
-def eval_simple(data: np.ndarray, pred: SimplePredicate) -> np.ndarray:
+def eval_simple(data: np.ndarray, pred: SimplePredicate, *,
+                counts: np.ndarray | None = None) -> np.ndarray:
     pats = pred.patterns()
     if pred.kind is Kind.KEY_VALUE:
         if len(pats[1]) == 0:
             # empty value pattern degrades to key presence — mirrors
             # kernels.plan.compile_plan and matches_raw (find(b"") != -1)
-            return any_match(data, pats[0])
-        return key_value_match(data, pats[0], pats[1])
-    return any_match(data, pats[0])
+            return any_match(data, pats[0], counts=counts)
+        return key_value_match(data, pats[0], pats[1], counts=counts)
+    return any_match(data, pats[0], counts=counts)
 
 
 def eval_clause(data: np.ndarray, cl: Clause) -> np.ndarray:
@@ -291,9 +329,12 @@ class NumpyEngine(_HostEngine):
         R = chunk.n_records
         if not terms or R == 0:
             return np.zeros((len(clauses), R), dtype=bool)
+        # one byte histogram per chunk: window_hits anchors every pattern
+        # on its rarest byte, amortized across all the plan's terms
+        counts = np.bincount(chunk.data.ravel(), minlength=256)
         hits = np.zeros((len(terms), R), dtype=bool)
         for ti, t in enumerate(terms):
-            hits[ti] = eval_simple(chunk.data, t)
+            hits[ti] = eval_simple(chunk.data, t, counts=counts)
         return membership @ hits  # bool matmul == OR over member predicates
 
 

@@ -128,6 +128,36 @@ def _json_scalar(v: Any) -> str:
     return str(v)
 
 
+# public alias: the columnar scan engine dictionary-encodes json_scalar(v)
+# per key (the "repr column"), which is what keeps KEY_VALUE's
+# cross-representation equality exact without per-row parsing
+json_scalar = _json_scalar
+
+
+def lowerable(p: SimplePredicate) -> bool:
+    """True iff ``p`` can be lowered to vectorized columnar evaluation.
+
+    The lowering (``repro.core.columnar.eval_lowered``) reproduces
+    ``matches_exact`` bit for bit over struct-of-arrays columns, but only
+    for the value shapes it models: scalar JSON values.  Anything else
+    (non-string EXACT operands, exotic KEY_VALUE value objects) falls
+    back to the per-row exact oracle — never evaluated wrong, just not
+    vectorized.
+    """
+    if p.kind in (Kind.KEY_PRESENCE, Kind.SUBSTRING):
+        return True
+    if p.kind is Kind.EXACT:
+        return isinstance(p.value, str)
+    if p.kind is Kind.KEY_VALUE:
+        return p.value is None or isinstance(p.value, (str, int, float, bool))
+    return False
+
+
+def clause_lowerable(c: Clause) -> bool:
+    """True iff every disjunct of ``c`` lowers to columnar evaluation."""
+    return all(lowerable(t) for t in c.terms)
+
+
 @dataclass(frozen=True)
 class Clause:
     """A disjunction of simple predicates — the atomic pushdown unit."""

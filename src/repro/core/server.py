@@ -1,36 +1,44 @@
 """Server side: partial data loading and data skipping (paper §VI).
 
-For each incoming chunk the server loads a record into the parsed store iff
-it is valid for >= 1 pushed-down clause (bitwise OR over the chunk's
-bit-vectors).  Loaded blocks carry the per-clause bit-vectors as block
-metadata; the remaining records stay raw (dense uint8 sub-chunk, zero-copy
-row selection) for just-in-time loading.
+For each incoming chunk the server loads a record into the columnar store
+iff it is valid for >= 1 pushed-down clause (bitwise OR over the chunk's
+bit-vectors).  Loaded rows are decomposed into struct-of-arrays *segments*
+(``core.columnar``): per-key numeric/dictionary columns with zone maps,
+the client clause bit-vectors as per-segment metadata, and the raw JSON
+bytes for streaming.  The remaining records stay raw (dense uint8
+sub-chunk, zero-copy row selection) for just-in-time loading.
 
-Query path (:class:`DataSkippingScanner`):
-  * if the query contains >= 1 pushed clause, only loaded blocks are scanned
-    (sound: clients never produce false negatives => every true result row
-    was loaded), and the pushed clauses' bit-vectors are ANDed to skip rows;
-  * surviving rows are *re-verified* with exact semantics (clients may have
-    produced false positives);
-  * otherwise loaded blocks AND the raw remainder are scanned.  The first
-    such query triggers *just-in-time loading* (paper §I): raw records are
-    parsed once, promoted to unfiltered blocks, and never re-parsed.
-
-Blocks store parsed row dicts + packed bit-vectors (the Parquet-block
-analog: per-block metadata enables skipping; the row-vs-column layout is
-orthogonal to the technique at in-memory scale — DESIGN.md §8).
+Query path (:class:`DataSkippingScanner`, DESIGN.md §13):
+  * segments whose zone map refutes ANY query clause are pruned whole
+    (second-level skipping for clauses the client never evaluated);
+  * if the query contains >= 1 pushed clause, only loaded segments are
+    scanned (sound: clients never produce false negatives => every true
+    result row was loaded), and the pushed clauses' bit-vectors are ANDed
+    into a candidate mask;
+  * surviving rows are re-verified with exact semantics — vectorized over
+    whole columns (``columnar.query_mask``; ``matches_exact`` remains
+    only as the differential oracle / non-lowerable-term fallback) — then
+    popcounted;
+  * otherwise loaded segments AND the raw remainder are scanned.  The
+    first such query triggers *just-in-time loading* (paper §I): raw
+    records are parsed once, promoted to unfiltered segments, and never
+    re-parsed.
 """
 from __future__ import annotations
 
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
 from . import bitvector
 from .client import Chunk
+from .columnar import (
+    ColumnarSegment, SegmentBuilder, build_segments, decode_rows,
+    query_mask, segment_from_packed,
+)
 from .predicates import Clause, Query, clause_from_obj, clause_to_obj
 
 
@@ -232,31 +240,6 @@ def evolve_family(
 
 
 @dataclass
-class Block:
-    """One loaded block: parsed rows + bitvector metadata (uint32[P, W]).
-
-    ``epoch`` names the plan the bitvector rows were evaluated under —
-    row order follows that epoch's local clause ids, NOT the store's
-    current plan.  ``n_covered`` is the block's coverage mask: the client
-    evaluated exactly the first ``n_covered`` local clause rows of that
-    epoch's plan (tiers are nested prefixes, so one length fully encodes
-    which global clause ids the block indexes — ``PlanFamily.
-    coverage_gids``).  ``-1`` means full coverage of its epoch's plan.
-    ``tier`` labels which family tier produced it (savings attribution).
-    """
-
-    rows: list[dict]
-    bitvectors: np.ndarray
-    epoch: int = 0
-    n_covered: int = -1
-    tier: int = 0
-
-    @property
-    def n_rows(self) -> int:
-        return len(self.rows)
-
-
-@dataclass
 class RawRemainder:
     """Unloaded rows of one chunk, kept as a dense uint8 sub-chunk.
 
@@ -299,15 +282,21 @@ class LoadStats:
 
 
 class CiaoStore:
-    """Parsed blocks + raw remainder + per-block bitvector metadata.
+    """Columnar segments + raw remainder + per-segment bitvector metadata.
 
     The store is *epoch-versioned* (DESIGN.md §11): it keeps a registry of
     every plan epoch it has ingested under, per-epoch clause statistics,
-    and tags blocks/remainders with their ingest epoch so data loaded under
-    epoch *k* stays queryable (and skippable) after a replan to *k+1*.
+    and tags segments/remainders with their ingest epoch so data loaded
+    under epoch *k* stays queryable (and skippable) after a replan to
+    *k+1*.  Loaded rows live in struct-of-arrays
+    :class:`~repro.core.columnar.ColumnarSegment` groups: one open
+    :class:`SegmentBuilder` per ``(epoch, n_covered, tier)`` coverage
+    group compacts small per-chunk row sets into segments of
+    ``segment_capacity`` rows (DESIGN.md §13).
     """
 
-    def __init__(self, plan: "PushdownPlan | PlanFamily"):
+    def __init__(self, plan: "PushdownPlan | PlanFamily", *,
+                 segment_capacity: int = 8192):
         if isinstance(plan, PlanFamily):
             family = plan
             plan = family.plan
@@ -317,9 +306,12 @@ class CiaoStore:
         self.family = family                   # current epoch's tier family
         self.plans: dict[int, PushdownPlan] = {plan.epoch: plan}
         self.families: dict[int, PlanFamily] = {plan.epoch: family}
-        self.blocks: list[Block] = []
+        self.segment_capacity = int(segment_capacity)
+        self.segments: list[ColumnarSegment] = []      # sealed, seal order
+        self._builders: dict[tuple[int, int, int], SegmentBuilder] = {}
+        self._touch = 0                                # builder LRU order
         self.raw: list[RawRemainder] = []
-        self.jit_blocks: list[Block] = []   # promoted raw rows (no bitvectors)
+        self.jit_segments: list[ColumnarSegment] = []  # promoted raw rows
         self.stats = LoadStats()
         # per-clause match totals (client popcounts) PER EPOCH:
         # observed-selectivity feedback for the replanner (paper §V)
@@ -340,6 +332,36 @@ class CiaoStore:
         # bounded: consumers only ever read a recent window
         self.query_log: list[Query] = []
         self.query_log_cap = 4096
+
+    # -- segment surface -----------------------------------------------------
+    def _builder(self, epoch: int, n_covered: int, tier: int
+                 ) -> SegmentBuilder:
+        key = (epoch, n_covered, tier)
+        b = self._builders.get(key)
+        if b is None:
+            b = self._builders[key] = SegmentBuilder(
+                epoch=epoch, n_covered=n_covered, tier=tier,
+                capacity=self.segment_capacity)
+        self._touch += 1
+        b.touch_seq = self._touch
+        return b
+
+    @property
+    def blocks(self) -> list[ColumnarSegment]:
+        """Queryable loaded segments: sealed first, then the open builder
+        tails in last-touched order (so ``blocks[-1]`` is the most recent
+        ingest's coverage group).  Builder views are cached until their
+        next append — repeated scans between ingests pay the column build
+        once."""
+        open_tails = sorted(
+            (b for b in self._builders.values() if b.n_rows),
+            key=lambda b: b.touch_seq)
+        return self.segments + [b.view() for b in open_tails]
+
+    @property
+    def jit_blocks(self) -> list[ColumnarSegment]:
+        """Promoted raw remainders (no bitvectors), promotion order."""
+        return self.jit_segments
 
     @property
     def epoch(self) -> int:
@@ -536,14 +558,14 @@ class CiaoStore:
             # no plan at all: the store degenerates to full upfront loading
             load_idx = np.arange(n)
             keep_idx = np.array([], dtype=np.int64)
-            block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
+            bits = np.zeros((0, n), bool)
         elif n_cov == 0:
             # an EMPTY tier of a non-empty plan pushes nothing: every row
             # stays raw (zero coverage — never skippable, JIT-loaded on
             # the first query that needs it)
             load_idx = np.array([], dtype=np.int64)
             keep_idx = np.arange(n)
-            block_bv = np.zeros((0, bitvector.num_words(n)), np.uint32)
+            bits = np.zeros((0, 0), bool)
         else:
             if any_words is None:
                 any_words = bitvector.bv_or_many(bitvecs)
@@ -551,15 +573,16 @@ class CiaoStore:
             load_idx = np.nonzero(load_mask)[0]
             keep_idx = np.nonzero(~load_mask)[0]
             bits = bitvector.unpack(bitvecs, n)[:, load_idx]
-            block_bv = bitvector.pack(bits)
 
-        tp0 = time.perf_counter()
-        rows = [json.loads(chunk.record(i)) for i in load_idx]
-        self.stats.parse_time_s += time.perf_counter() - tp0
-        if rows:
-            self.blocks.append(
-                Block(rows=rows, bitvectors=block_bv, epoch=e,
-                      n_covered=n_cov, tier=tier_idx))
+        if len(load_idx):
+            # batched parse: ONE fancy-indexed sub-array copy, record bytes
+            # as buffer slices, parsed objects straight into the columnar
+            # builder (no per-row chunk.record() round-trips)
+            tp0 = time.perf_counter()
+            recs, objs = decode_rows(chunk.data, chunk.lengths, load_idx)
+            self.segments.extend(
+                self._builder(e, n_cov, tier_idx).add(recs, objs, bits))
+            self.stats.parse_time_s += time.perf_counter() - tp0
         if len(keep_idx):
             self.raw.append(
                 RawRemainder(
@@ -579,7 +602,7 @@ class CiaoStore:
         self, only_epochs: set[int] | None = None,
         *, only_groups: set[tuple[int, int]] | None = None,
     ) -> dict[tuple[int, int], int]:
-        """Parse raw remainders once, promoting them to unfiltered blocks.
+        """Parse raw remainders once, promoting them to unfiltered segments.
 
         ``only_epochs`` restricts promotion to remainders ingested under
         those epochs; ``only_groups`` to ``(epoch, n_covered)`` coverage
@@ -600,11 +623,11 @@ class CiaoStore:
                     (rr.epoch, rr.n_covered) not in only_groups:
                 keep.append(rr)
                 continue
-            rows = [json.loads(rr.record(i)) for i in range(rr.n)]
-            self.jit_blocks.append(
-                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
-                      epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier)
-            )
+            recs, objs = decode_rows(rr.data, rr.lengths)
+            self.jit_segments.extend(build_segments(
+                recs, np.zeros((0, rr.n), bool), objs=objs,
+                epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier,
+                capacity=self.segment_capacity))
             self.stats.n_jit_loaded += rr.n
             key = (rr.epoch, rr.tier)
             promoted[key] = promoted.get(key, 0) + rr.n
@@ -624,7 +647,8 @@ class CiaoStore:
         """
         stats = self.stats
         meta = {
-            "format": 3,
+            "format": 4,
+            "segment_capacity": self.segment_capacity,
             "current_epoch": self.plan.epoch,
             "plans": [self.plans[e].to_obj() for e in sorted(self.plans)],
             "families": {
@@ -659,34 +683,37 @@ class CiaoStore:
                 for q in self.query_log[-self.query_log_cap:]
             ],
         }
+        blocks = self.blocks          # sealed + open tails, query order
+        jit = self.jit_segments
         payload: dict[str, Any] = {
             "meta": np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
-            "n_blocks": np.array(len(self.blocks)),
-            "block_epochs": np.array([b.epoch for b in self.blocks], np.int64),
-            "block_ncov": np.array([b.n_covered for b in self.blocks], np.int64),
-            "block_tiers": np.array([b.tier for b in self.blocks], np.int64),
+            "n_blocks": np.array(len(blocks)),
+            "block_epochs": np.array([b.epoch for b in blocks], np.int64),
+            "block_ncov": np.array([b.n_covered for b in blocks], np.int64),
+            "block_tiers": np.array([b.tier for b in blocks], np.int64),
             "n_raw": np.array(len(self.raw)),
             "raw_epochs": np.array([r.epoch for r in self.raw], np.int64),
             "raw_ncov": np.array([r.n_covered for r in self.raw], np.int64),
             "raw_tiers": np.array([r.tier for r in self.raw], np.int64),
-            "n_jit": np.array(len(self.jit_blocks)),
-            "jit_epochs": np.array([b.epoch for b in self.jit_blocks], np.int64),
-            "jit_ncov": np.array(
-                [b.n_covered for b in self.jit_blocks], np.int64),
-            "jit_tiers": np.array([b.tier for b in self.jit_blocks], np.int64),
+            "n_jit": np.array(len(jit)),
+            "jit_epochs": np.array([b.epoch for b in jit], np.int64),
+            "jit_ncov": np.array([b.n_covered for b in jit], np.int64),
+            "jit_tiers": np.array([b.tier for b in jit], np.int64),
         }
-        for bi, blk in enumerate(self.blocks):
-            payload[f"bv_{bi}"] = blk.bitvectors
-            payload[f"rows_{bi}"] = np.frombuffer(
-                json.dumps(blk.rows).encode(), dtype=np.uint8
-            )
+        # format 4: segments persist their raw JSON bytes (blob + offsets)
+        # and packed bitvector words; columns are rebuilt at load time from
+        # the bytes (one deterministic parse — cheaper than persisting
+        # every dictionary/mask array, and immune to column layout drift)
+        for bi, seg in enumerate(blocks):
+            payload[f"bv_{bi}"] = seg.bitvectors
+            payload[f"seg_blob_{bi}"] = seg.raw_blob
+            payload[f"seg_off_{bi}"] = seg.raw_offsets
         for ri, rr in enumerate(self.raw):
             payload[f"raw_data_{ri}"] = rr.data
             payload[f"raw_len_{ri}"] = rr.lengths
-        for ji, blk in enumerate(self.jit_blocks):
-            payload[f"jit_rows_{ji}"] = np.frombuffer(
-                json.dumps(blk.rows).encode(), dtype=np.uint8
-            )
+        for ji, seg in enumerate(jit):
+            payload[f"jit_blob_{ji}"] = seg.raw_blob
+            payload[f"jit_off_{ji}"] = seg.raw_offsets
         np.savez_compressed(path, **payload)
 
     @classmethod
@@ -704,6 +731,20 @@ class CiaoStore:
                 f"{path}: unsupported checkpoint format (pre-epoch format 1 "
                 "has no plan registry / feedback state); re-ingest and save "
                 "with this version")
+
+        def _blob_records(blob: np.ndarray, off: np.ndarray) -> list[bytes]:
+            b = blob.tobytes()
+            return [b[off[i]: off[i + 1]] for i in range(len(off) - 1)]
+
+        def _legacy_records(rows_json: np.ndarray
+                            ) -> tuple[list[bytes], list[dict]]:
+            # format-2/3 migration: blocks persisted parsed row dicts; the
+            # canonical writer encoding reconstructs the raw bytes segments
+            # keep (datasets emit exactly this form)
+            rows = json.loads(bytes(rows_json.tobytes()).decode())
+            recs = [json.dumps(r, separators=(",", ":")).encode()
+                    for r in rows]
+            return recs, rows
         meta = json.loads(bytes(z["meta"].tobytes()).decode())
         plans = [PushdownPlan.from_obj(p) for p in meta["plans"]]
         by_epoch = {p.epoch: p for p in plans}
@@ -718,7 +759,8 @@ class CiaoStore:
             int(e): PlanFamily.from_obj(by_epoch[int(e)], f)
             for e, f in meta.get("families", {}).items()
         }
-        store = cls(families.get(current.epoch, current))
+        store = cls(families.get(current.epoch, current),
+                    segment_capacity=int(meta.get("segment_capacity", 8192)))
         store.plan = current
         store.plans = by_epoch | {current.epoch: current}
         store.families = {
@@ -779,11 +821,16 @@ class CiaoStore:
         block_ncov = _meta_col("block_ncov", block_epochs)
         block_tiers = _meta_col("block_tiers", block_epochs)
         for bi in range(int(z["n_blocks"])):
-            rows = json.loads(bytes(z[f"rows_{bi}"].tobytes()).decode())
-            store.blocks.append(Block(rows=rows, bitvectors=z[f"bv_{bi}"],
-                                      epoch=int(block_epochs[bi]),
-                                      n_covered=int(block_ncov[bi]),
-                                      tier=int(block_tiers[bi])))
+            if f"seg_blob_{bi}" in files:      # format 4
+                recs = _blob_records(z[f"seg_blob_{bi}"], z[f"seg_off_{bi}"])
+                objs = None
+            else:                              # format 2/3 migration
+                recs, objs = _legacy_records(z[f"rows_{bi}"])
+            store.segments.append(segment_from_packed(
+                recs, z[f"bv_{bi}"], objs=objs,
+                epoch=int(block_epochs[bi]),
+                n_covered=int(block_ncov[bi]),
+                tier=int(block_tiers[bi])))
         raw_epochs = z["raw_epochs"]
         raw_ncov = _meta_col("raw_ncov", raw_epochs)
         raw_tiers = _meta_col("raw_tiers", raw_epochs)
@@ -799,13 +846,16 @@ class CiaoStore:
         jit_ncov = _meta_col("jit_ncov", jit_epochs)
         jit_tiers = _meta_col("jit_tiers", jit_epochs)
         for ji in range(int(z["n_jit"])):
-            rows = json.loads(bytes(z[f"jit_rows_{ji}"].tobytes()).decode())
-            store.jit_blocks.append(
-                Block(rows=rows, bitvectors=np.zeros((0, 0), np.uint32),
-                      epoch=int(jit_epochs[ji]),
-                      n_covered=int(jit_ncov[ji]),
-                      tier=int(jit_tiers[ji]))
-            )
+            if f"jit_blob_{ji}" in files:      # format 4
+                recs = _blob_records(z[f"jit_blob_{ji}"], z[f"jit_off_{ji}"])
+                objs = None
+            else:                              # format 2/3 migration
+                recs, objs = _legacy_records(z[f"jit_rows_{ji}"])
+            store.jit_segments.append(segment_from_packed(
+                recs, np.zeros((0, 0), np.uint32), objs=objs,
+                epoch=int(jit_epochs[ji]),
+                n_covered=int(jit_ncov[ji]),
+                tier=int(jit_tiers[ji])))
         return store
 
 
@@ -845,6 +895,7 @@ class TierScan:
     rows_skipped: int = 0
     raw_parsed: int = 0
     count: int = 0
+    segments_pruned: int = 0
 
 
 @dataclass
@@ -859,28 +910,60 @@ class ScanResult:
     # skips/scans/JIT parses, so benchmarks and the replanner can
     # attribute savings to tiers instead of a single aggregate
     groups: dict[tuple[int, int], TierScan] = field(default_factory=dict)
+    # segments skipped whole by their zone maps (second-level skipping —
+    # independent of the pushed-bitvector path, so NOT part of
+    # used_skipping, which keeps its pushed-clause meaning)
+    segments_pruned: int = 0
 
     def group(self, epoch: int, tier: int) -> TierScan:
         return self.groups.setdefault((epoch, tier), TierScan())
 
 
 class DataSkippingScanner:
-    """COUNT(*) scan with bitvector data skipping + exact re-verification.
+    """COUNT(*) scan: zone-map prune -> bitvector AND -> vectorized verify.
 
-    Epoch-aware: each block's bitvector rows are indexed by the plan it was
-    ingested under, so skipping resolves the query's pushed clauses
-    *per block epoch* through the store's plan registry.  A raw remainder
-    from epoch *e* is skippable iff >= 1 query clause was pushed in epoch
-    *e* (its rows matched none of that plan's clauses); remainders whose
-    epoch covers none of the query are JIT-promoted, exactly once.
+    Epoch-aware: each segment's bitvector rows are indexed by the plan it
+    was ingested under, so skipping resolves the query's pushed clauses
+    *per segment epoch* through the store's plan registry.  A raw
+    remainder from epoch *e* is skippable iff >= 1 query clause was pushed
+    within its coverage (its rows matched none of those clauses);
+    remainders whose coverage misses the query are JIT-promoted, exactly
+    once.  Per segment (``columnar.query_mask``): the zone map may refute
+    a clause outright, pushed clause bitvectors AND into a candidate mask,
+    and every clause is re-verified EXACTLY — vectorized over whole
+    columns, with ``matches_exact`` surviving only as the per-row fallback
+    for non-lowerable terms (and as the differential oracle in tests).
+
+    ``and_reduce`` optionally routes the packed bitvector AND through a
+    device kernel (``repro.kernels.residual.bv_and_many_xla``); the
+    default is the host numpy reduction.
 
     Every scan is appended to ``store.query_log`` — the replan control
     plane's workload-drift signal (paper §V workload estimation).
     """
 
-    def __init__(self, store: CiaoStore, *, log_queries: bool = True):
+    def __init__(self, store: CiaoStore, *, log_queries: bool = True,
+                 and_reduce: Callable | None = None):
         self.store = store
         self.log_queries = log_queries
+        self.and_reduce = and_reduce
+
+    def _scan_segment(self, seg: ColumnarSegment, q: Query,
+                      pushed: Sequence[int], g: TierScan,
+                      result: ScanResult) -> None:
+        mask = query_mask(seg, q, pushed, self.and_reduce)
+        if mask is None:                      # zone map refuted a clause
+            g.rows_skipped += seg.n_rows
+            g.segments_pruned += 1
+            result.segments_pruned += 1
+            return
+        if pushed:
+            cand = int(seg.pushed_mask(pushed, self.and_reduce).sum())
+        else:
+            cand = seg.n_rows
+        g.rows_scanned += cand
+        g.rows_skipped += seg.n_rows - cand
+        g.count += int(mask.sum())
 
     def scan(self, q: Query) -> ScanResult:
         t0 = time.perf_counter()
@@ -891,37 +974,23 @@ class DataSkippingScanner:
         result = ScanResult(count=0, rows_scanned=0, rows_skipped=0,
                             raw_parsed=0, time_s=0.0, used_skipping=False)
 
-        for blk in store.blocks:
-            g = result.group(blk.epoch, blk.tier)
-            pushed = pushed_by_epoch[(blk.epoch, blk.n_covered)]
-            if pushed:
-                words = bitvector.bv_and_many(blk.bitvectors[pushed])
-                idx = bitvector.select_indices(words, blk.n_rows)
-                g.rows_skipped += blk.n_rows - len(idx)
-                for i in idx:
-                    if q.matches_exact(blk.rows[i]):
-                        g.count += 1
-                g.rows_scanned += len(idx)
-            else:
-                for row in blk.rows:
-                    if q.matches_exact(row):
-                        g.count += 1
-                g.rows_scanned += blk.n_rows
+        for seg in store.blocks:
+            g = result.group(seg.epoch, seg.tier)
+            pushed = pushed_by_epoch[(seg.epoch, seg.n_covered)]
+            self._scan_segment(seg, q, pushed, g, result)
 
         # raw remainders whose coverage pushes none of the query may
-        # contain matches: JIT-promote those (epoch, coverage) groups once,
-        # then scan every promoted block whose coverage misses the query
+        # contain matches: JIT-promote those (epoch, coverage) groups
+        # once, then scan every promoted segment whose coverage misses
+        # the query (covered ones hold no possible match: skip whole)
         for key, n in store.promote_uncovered_raw(pushed_by_epoch).items():
             result.group(*key).raw_parsed += n
-        for blk in store.jit_blocks:
-            g = result.group(blk.epoch, blk.tier)
-            if pushed_by_epoch[(blk.epoch, blk.n_covered)]:
-                g.rows_skipped += blk.n_rows
+        for seg in store.jit_blocks:
+            g = result.group(seg.epoch, seg.tier)
+            if pushed_by_epoch[(seg.epoch, seg.n_covered)]:
+                g.rows_skipped += seg.n_rows
                 continue
-            for row in blk.rows:
-                if q.matches_exact(row):
-                    g.count += 1
-            g.rows_scanned += blk.n_rows
+            self._scan_segment(seg, q, (), g, result)
         for g in result.groups.values():
             result.count += g.count
             result.rows_scanned += g.rows_scanned

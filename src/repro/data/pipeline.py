@@ -18,7 +18,6 @@ Pieces:
 """
 from __future__ import annotations
 
-import json
 import queue
 import threading
 import time
@@ -29,6 +28,7 @@ import numpy as np
 
 from repro.core import bitvector
 from repro.core.client import Chunk, encode_chunk
+from repro.core.columnar import query_mask
 from repro.core.predicates import Query
 from repro.core.selection import ClientProfile, TierAllocation, allocate_tiers
 from repro.core.server import (
@@ -366,31 +366,32 @@ class RecipeBatcher:
         self.batch_size = batch_size
 
     def matching_records(self, recipe: Query) -> Iterator[bytes]:
-        # coverage-aware skipping: each block's bitvector rows follow ITS
-        # ingest epoch's plan AND its tier's coverage prefix; raw
+        # coverage-aware skipping: each segment's bitvector rows follow
+        # ITS ingest epoch's plan AND its tier's coverage prefix; raw
         # remainders are JIT-promoted only for (epoch, coverage) groups
         # that push none of the recipe — the skippability invariant is
-        # single-sourced in the store's query-path helpers
+        # single-sourced in the store's query-path helpers.  Matching is
+        # the columnar engine's vectorized exact mask (zone-map prune +
+        # bitvector AND + column evaluation), and hits stream the
+        # segment's RAW source bytes — no json.dumps round-trip per row.
         store = self.store
         pushed_by_epoch = store.pushed_by_epoch(recipe)
-        for blk in store.blocks:
-            pushed = pushed_by_epoch[(blk.epoch, blk.n_covered)]
-            if pushed:
-                words = bitvector.bv_and_many(blk.bitvectors[pushed])
-                idx = bitvector.select_indices(words, blk.n_rows)
-            else:
-                idx = range(blk.n_rows)
-            for i in idx:
-                row = blk.rows[i]
-                if recipe.matches_exact(row):
-                    yield json.dumps(row, separators=(",", ":")).encode()
-        store.promote_uncovered_raw(pushed_by_epoch)
-        for blk in store.jit_blocks:
-            if pushed_by_epoch[(blk.epoch, blk.n_covered)]:
+        for seg in store.blocks:
+            pushed = pushed_by_epoch[(seg.epoch, seg.n_covered)]
+            mask = query_mask(seg, recipe, pushed)
+            if mask is None:                  # zone-map pruned whole
                 continue
-            for row in blk.rows:
-                if recipe.matches_exact(row):
-                    yield json.dumps(row, separators=(",", ":")).encode()
+            for i in np.nonzero(mask)[0]:
+                yield seg.record(i)
+        store.promote_uncovered_raw(pushed_by_epoch)
+        for seg in store.jit_blocks:
+            if pushed_by_epoch[(seg.epoch, seg.n_covered)]:
+                continue
+            mask = query_mask(seg, recipe)
+            if mask is None:
+                continue
+            for i in np.nonzero(mask)[0]:
+                yield seg.record(i)
 
     def batches(self, recipe: Query, *, repeat: bool = True
                 ) -> Iterator[tuple[np.ndarray, np.ndarray]]:

@@ -1,0 +1,50 @@
+"""Device offload hooks for the columnar scanner's residual phase.
+
+The columnar scan (DESIGN.md §13) is host-side numpy by default: packed
+bitvector AND, candidate unpack, vectorized column predicates.  The AND
+reduction over pushed clause rows is the one piece with a natural device
+form — it is exactly the ``reduce_bitvectors`` shape the fused ingest
+kernel already exploits — so this module exposes it as an optional
+``and_reduce`` for :class:`repro.core.server.DataSkippingScanner`:
+
+    scanner = DataSkippingScanner(store, and_reduce=bv_and_many_xla)
+
+Shapes vary per segment (W = ceil(n_rows/32)); the jitted reduction
+retraces per (P, W) bucket, which segment compaction keeps small (one
+dominant W per store).  Kept deliberately tiny: column-predicate
+evaluation stays on the host, where the dictionary/zone-map structures
+live.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def _and_reduce(words: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce(
+        words.astype(jnp.uint32), jnp.uint32(0xFFFFFFFF),
+        lambda a, b: jnp.bitwise_and(a, b), (0,),
+    )
+
+
+def bv_and_many_xla(words: np.ndarray) -> np.ndarray:
+    """AND-reduce packed rows (P, W) -> (W,) on the XLA backend.
+
+    Drop-in for :func:`repro.core.bitvector.bv_and_many` (bit-identical;
+    the equivalence is pinned by ``tests/test_columnar.py``).
+    """
+    return np.asarray(_and_reduce(jnp.asarray(words, jnp.uint32)))
+
+
+@jax.jit
+def _popcount(words: jnp.ndarray) -> jnp.ndarray:
+    return lax.population_count(words.astype(jnp.uint32)).sum()
+
+
+def popcount_xla(words: np.ndarray) -> int:
+    """Total set bits of a packed array (device population_count)."""
+    return int(_popcount(jnp.asarray(words, jnp.uint32)))

@@ -12,9 +12,11 @@ import pytest
 
 from benchmarks.bench_schema import (
     SchemaError, validate_file, validate_kernels, validate_replan,
-    validate_tiers,
+    validate_scan, validate_tiers,
 )
-from benchmarks.run import write_kernels_artifacts, write_tiers_artifacts
+from benchmarks.run import (
+    write_kernels_artifacts, write_scan_artifacts, write_tiers_artifacts,
+)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -160,6 +162,79 @@ def test_quick_tiers_benchmark_beats_baselines():
 
     out = bench_tiers.run(n_records=4864, n_queries=200, n_exec_queries=80)
     validate_tiers(out)
+
+
+_GOOD_SCAN = {
+    "quick": False,
+    "n_records": 24576, "n_loaded": 15000, "n_segments": 12,
+    "n_queries": 20, "n_epochs": 2, "n_tiers": 3,
+    "row_at_a_time": {"scan_s": 1.2, "us_per_query": 60000.0},
+    "columnar": {"scan_s": 0.01, "cold_scan_s": 0.05,
+                 "us_per_query": 500.0, "segments_pruned": 40},
+    "speedup": 120.0, "cold_speedup": 24.0,
+    "counts_match": True,
+}
+
+
+def test_scan_schema_accepts_tracked_artifact():
+    path = os.path.join(REPO_ROOT, "BENCH_scan.json")
+    assert validate_file(path) == "BENCH_scan.json"
+
+
+def test_scan_schema_accepts_wellformed_synthetic():
+    validate_scan(_GOOD_SCAN)
+    quick = json.loads(json.dumps(_GOOD_SCAN))
+    quick["quick"] = True
+    quick["speedup"] = 2.0  # the reduced-size floor is 1.5x, not 5x
+    validate_scan(quick)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda o: o.pop("columnar"),
+    lambda o: o.pop("counts_match"),
+    lambda o: o.__setitem__("counts_match", False),   # THE claim gate
+    lambda o: o.__setitem__("speedup", 4.9),          # below full-size floor
+    lambda o: o["columnar"].__setitem__("segments_pruned", 0),
+    lambda o: o["columnar"].pop("cold_scan_s"),
+    lambda o: o["row_at_a_time"].__setitem__("scan_s", "slow"),
+    lambda o: o.__setitem__("n_queries", 3),
+    lambda o: o.__setitem__("quick", "no"),
+])
+def test_scan_schema_rejects_malformed_or_losing(mutate):
+    obj = json.loads(json.dumps(_GOOD_SCAN))
+    mutate(obj)
+    with pytest.raises(SchemaError):
+        validate_scan(obj)
+
+
+def test_scan_quick_run_never_touches_tracked_artifact(tmp_path):
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    tracked = tmp_path / "BENCH_scan.json"
+    tracked.write_text("SENTINEL")
+    written = write_scan_artifacts(
+        _GOOD_SCAN, quick=True,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert written == [str(artifacts / "bench_scan.json")]
+    assert tracked.read_text() == "SENTINEL"
+    written = write_scan_artifacts(
+        _GOOD_SCAN, quick=False,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert str(tracked) in written
+    assert json.loads(tracked.read_text()) == _GOOD_SCAN
+
+
+@pytest.mark.ci_smoke
+def test_quick_scan_benchmark_beats_row_path():
+    """Reduced-size columnar-scan benchmark -> schema-valid artifact:
+    counts bit-identical to the exact-match oracle, zone maps pruning,
+    columnar beating the row-at-a-time path (the in-suite twin of the CI
+    smoke gate's ``benchmarks.run --quick`` scan section)."""
+    from benchmarks import bench_scan
+
+    out = bench_scan.run(n_records=4096, chunk_records=512, repeats=1,
+                         quick=True)
+    validate_scan(out)
 
 
 def test_quick_run_never_touches_tracked_artifact(tmp_path):

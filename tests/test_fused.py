@@ -234,9 +234,9 @@ def test_numpy_engine_dedups_evaluation(monkeypatch):
     calls = []
     real = client_mod.eval_simple
 
-    def counting(data, pred):
+    def counting(data, pred, **kw):
         calls.append(pred)
-        return real(data, pred)
+        return real(data, pred, **kw)
 
     monkeypatch.setattr(client_mod, "eval_simple", counting)
     shared = substring("note", "tok")
