@@ -187,6 +187,66 @@ def validate_scan(obj: dict) -> None:
              f"columnar speedup {obj['speedup']} < required {floor}x")
 
 
+_SHARD_RUN_ROW = {
+    "n_shards": numbers.Integral,
+    "scan_s": numbers.Real,
+    "us_per_query": numbers.Real,
+    "counts_match": bool,
+    "selective_pruned_fraction": numbers.Real,
+    "max_shard_rows": numbers.Integral,
+    "min_shard_rows": numbers.Integral,
+}
+
+
+def validate_shard(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid shard artifact.
+
+    Beyond shape, this gates the shard plane's CLAIM (DESIGN.md §14):
+    counts bit-identical to the 1-shard oracle at every shard count,
+    >= 30% of per-query shard visits partition-pruned on the selective
+    subset at 8 shards, and >= 2x scan speedup at 8 shards.  Reduced-size
+    ``--quick`` runs only gate against collapse (>= 0.8x): their tiny
+    per-shard segments leave little vectorized work for pruning to skip,
+    so the measured ratio sits in wall-clock noise on loaded 2-core CI
+    runners — the 2x claim is full-size-only, like the scan gate's 5x.
+    """
+    _require(isinstance(obj, dict), "shard", "top level must be an object")
+    for key in ("quick", "n_records", "routing_card", "n_queries",
+                "n_selective", "routing_key", "mode", "runs",
+                "counts_match", "speedup_4", "speedup_8",
+                "selective_pruned_fraction"):
+        _require(key in obj, "shard", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "shard", "'quick' must be bool")
+    _require(isinstance(obj["routing_key"], str) and obj["routing_key"],
+             "shard", "routing_key must be a non-empty string")
+    runs = obj["runs"]
+    _require(isinstance(runs, list) and len(runs) >= 3, "runs",
+             "need >= 3 shard-count rows")
+    for i, row in enumerate(runs):
+        _check_fields(row, _SHARD_RUN_ROW, f"runs[{i}]")
+        _require(row["scan_s"] > 0, f"runs[{i}]", "scan_s must be positive")
+        _require(row["counts_match"] is True, f"runs[{i}]",
+                 "counts diverged from the 1-shard oracle")
+        _require(row["min_shard_rows"] >= 0
+                 and row["max_shard_rows"] >= row["min_shard_rows"],
+                 f"runs[{i}]", "shard row bounds inconsistent")
+    shard_counts = [row["n_shards"] for row in runs]
+    for need in (1, 4, 8):
+        _require(need in shard_counts, "runs",
+                 f"missing the {need}-shard row")
+    _require(obj["counts_match"] is True, "shard",
+             "sharded counts diverged from the unsharded oracle")
+    _require(0.0 <= obj["selective_pruned_fraction"] <= 1.0, "shard",
+             "selective_pruned_fraction out of [0, 1]")
+    _require(obj["selective_pruned_fraction"] >= 0.3, "shard",
+             "partition metadata pruned < 30% of shard visits on the "
+             "selective workload (the third skipping level is not "
+             "demonstrated)")
+    floor = 0.8 if obj["quick"] else 2.0
+    _require(obj["speedup_8"] >= floor, "shard",
+             f"8-shard speedup {obj['speedup_8']} < required {floor}x")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -195,6 +255,8 @@ _VALIDATORS = {
     "BENCH_tiers.json": validate_tiers,
     "bench_scan.json": validate_scan,
     "BENCH_scan.json": validate_scan,
+    "bench_shard.json": validate_shard,
+    "BENCH_shard.json": validate_shard,
 }
 
 

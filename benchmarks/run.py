@@ -76,13 +76,25 @@ def write_scan_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_shard_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_shard.json",
+) -> list[str]:
+    """Write the sharded-store benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_shard
+
+    return _write_gated_artifacts(
+        out, validator=validate_shard, detail_name="bench_shard.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,roofline")
+             "scan,shard,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -209,6 +221,23 @@ def main() -> None:
             f"row_{out['row_at_a_time']['us_per_query']}us;"
             f"x{out['speedup']};cold_x{out['cold_speedup']};"
             f"pruned_{out['columnar']['segments_pruned']};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "shard" in only:
+        from . import bench_shard
+
+        out = bench_shard.run(
+            n_records=16384 if args.quick else 65536,
+            repeats=2 if args.quick else 3,
+            quick=args.quick,
+        )
+        write_shard_artifacts(out, quick=args.quick)
+        at8 = next(r for r in out["runs"] if r["n_shards"] == 8)
+        csv_rows.append((
+            "shard_store", at8["us_per_query"],
+            f"x{out['speedup_4']}@4;x{out['speedup_8']}@8;"
+            f"pruned_{out['selective_pruned_fraction']:.0%};"
             f"counts_match_{out['counts_match']}",
         ))
 

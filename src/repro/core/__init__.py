@@ -46,6 +46,15 @@ from .server import (  # noqa: F401
     StaleEpochError,
     evolve_plan,
 )
+from .shard import (  # noqa: F401
+    ShardedCiaoStore,
+    ShardedScanner,
+    ShardRouter,
+    ShardSummary,
+    choose_routing_key,
+    merge_scan_results,
+    reshard,
+)
 from .workload import (  # noqa: F401
     DriftPhase,
     Workload,

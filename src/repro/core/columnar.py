@@ -81,13 +81,21 @@ class KeyColumn:
     num_min: float = np.inf   # zone map over num_valid rows
     num_max: float = -np.inf
     any_notnull: bool = False
+    # False when a NaN was observed among the key's float values at build
+    # time: NaN never enters ``num`` (``_f64_exact`` rejects it, NaN != NaN)
+    # so min/max stay finite, but the flag marks the numeric zone map
+    # non-prunable — every min/max refutation must gate on it, because a
+    # comparison against a poisoned bound would be silently False and skip
+    # a segment that still holds matches
+    num_prunable: bool = True
 
 
 class _KeyAcc:
     """Accumulates one key's values; :meth:`finish` emits a KeyColumn."""
 
     __slots__ = ("present", "notnull", "is_bool", "num_valid", "num",
-                 "str_codes", "str_index", "repr_codes", "repr_index")
+                 "str_codes", "str_index", "repr_codes", "repr_index",
+                 "has_nan")
 
     def __init__(self, n: int):
         self.present = np.zeros(n, bool)
@@ -99,6 +107,7 @@ class _KeyAcc:
         self.str_index: dict[str, int] = {}
         self.repr_codes = np.full(n, -1, np.int32)
         self.repr_index: dict[str, int] = {}
+        self.has_nan = False
 
     def add(self, i: int, v) -> None:
         self.present[i] = True
@@ -106,6 +115,11 @@ class _KeyAcc:
             self.notnull[i] = True
         if isinstance(v, bool):
             self.is_bool[i] = True
+        elif isinstance(v, float) and v != v:
+            # NaN: excluded from the numeric column (NaN == NaN is False so
+            # _f64_exact rejects it) — detect it EXPLICITLY and poison-mark
+            # the zone map instead of relying on that rejection staying true
+            self.has_nan = True
         elif isinstance(v, (int, float)) and _f64_exact(v):
             self.num_valid[i] = True
             self.num[i] = float(v)
@@ -127,6 +141,7 @@ class _KeyAcc:
             num_min=float(nums.min()) if nums.size else np.inf,
             num_max=float(nums.max()) if nums.size else -np.inf,
             any_notnull=bool(self.notnull.any()),
+            num_prunable=not self.has_nan,
         )
 
 
@@ -190,7 +205,11 @@ def eval_lowered(col: KeyColumn, pred: SimplePredicate) -> np.ndarray:
     return m & compat
 
 
-def _num_reprs(fv: float) -> set[str]:
+_NUM_REPRS_CACHE: dict[float, frozenset] = {}
+_NUM_REPRS_CACHE_CAP = 4096
+
+
+def _num_reprs(fv: float) -> frozenset[str]:
     """Every ``json_scalar`` a num_valid row numerically equal to ``fv``
     can carry.
 
@@ -198,53 +217,95 @@ def _num_reprs(fv: float) -> set[str]:
     the ``num_valid`` admission rule), so ``v == int(fv)`` and its repr
     is ``str(int(fv))``; a float row equal to ``fv`` is the same float64
     and shares ``json.dumps(fv)`` — except the signed zeros, which are
-    float-equal with distinct dumps.
+    float-equal with distinct dumps (0.0 and -0.0 hash alike and share
+    one cache slot, whose set contains both dumps).  Memoized: zone-map
+    checks call this once per (segment, clause) and the json round-trips
+    dominate the probe cost on fresh point lookups.
     """
+    hit = _NUM_REPRS_CACHE.get(fv)
+    if hit is not None:
+        return hit
     cands = {json.dumps(fv)}
     if fv == 0.0:
-        return cands | {"0", "0.0", "-0.0"}
-    if float(fv).is_integer():
+        cands |= {"0", "0.0", "-0.0"}
+    elif float(fv).is_integer():
         cands.add(str(int(fv)))
-    return cands
+    out = frozenset(cands)
+    if len(_NUM_REPRS_CACHE) >= _NUM_REPRS_CACHE_CAP:
+        _NUM_REPRS_CACHE.clear()
+    _NUM_REPRS_CACHE[fv] = out
+    return out
 
 
-def _term_possible(col: KeyColumn | None, pred: SimplePredicate) -> bool:
-    """Zone-map check: can ``pred`` match ANY row of this segment?
+def term_possible_over(
+    pred: SimplePredicate, *, any_notnull: bool,
+    num_min: float, num_max: float, num_prunable: bool,
+    strs, reprs,
+) -> bool:
+    """Can ``pred`` match ANY row summarized by this key metadata?
 
-    Must be conservative (False only when provably no match).  All four
-    predicate kinds require the key to be present, so a missing column
-    refutes every kind — including non-lowerable values.
+    THE single refutation rule shared by both pruning levels — segment
+    zone maps (:func:`_term_possible`) and shard partition summaries
+    (``repro.core.shard.ShardSummary``) — so their semantics can never
+    drift.  Must be conservative: False only when provably no match.
+    ``strs``/``reprs`` are value-membership containers (dict or set), or
+    ``None`` when the caller's value set SATURATED — membership
+    refutation is then unavailable and only min/max may refute.  The
+    caller handles the missing-key case (which refutes every kind).
     """
-    if col is None:
-        return False
     if pred.kind is Kind.KEY_PRESENCE:
-        return col.any_notnull
+        return any_notnull
     v = pred.value
     if pred.kind is Kind.EXACT:
         if not isinstance(v, str):
             return True  # non-lowerable value: never prune
-        return v in col.str_index
+        return True if strs is None else v in strs
     if pred.kind is Kind.SUBSTRING:
         if isinstance(v, bool):
             return False
+        if strs is None:
+            return True
         sub = str(v)
-        return any(sub in s for s in col.str_dict)
+        return any(sub in s for s in strs)
     # KEY_VALUE
     if not (v is None or isinstance(v, (str, int, float, bool))):
         return True
-    if json_scalar(v) in col.repr_index:
+    if reprs is not None and json_scalar(v) in reprs:
         return True
     if isinstance(v, (int, float)) and not isinstance(v, bool) \
             and _f64_exact(v):
         fv = float(v)
         # min/max gate first (cheapest), then the exact numeric-equality
-        # membership test: the repr dictionary doubles as the segment's
-        # value set, so a point lookup on a high-cardinality column
-        # prunes every segment that lacks the value
-        if not col.num_min <= fv <= col.num_max:
+        # membership test: the repr dictionary doubles as the value set,
+        # so a point lookup on a high-cardinality column prunes every
+        # segment/shard that lacks the value.  A NaN observed at build
+        # time marks the bounds non-prunable (num_prunable False):
+        # min/max comparisons would be silently False, so skip straight
+        # to the exact repr membership test
+        if num_prunable and not num_min <= fv <= num_max:
             return False
-        return any(r in col.repr_index for r in _num_reprs(fv))
-    return False
+        if reprs is None:
+            return True
+        return any(r in reprs for r in _num_reprs(fv))
+    return reprs is None
+
+
+def _term_possible(col: KeyColumn | None, pred: SimplePredicate) -> bool:
+    """Zone-map check: can ``pred`` match ANY row of this segment?
+
+    All four predicate kinds require the key to be present, so a missing
+    column refutes every kind — including non-lowerable values.  Segment
+    dictionaries are exact (never saturated), so membership refutation is
+    always available here.
+    """
+    if col is None:
+        return False
+    return term_possible_over(
+        pred, any_notnull=col.any_notnull,
+        num_min=col.num_min, num_max=col.num_max,
+        num_prunable=col.num_prunable,
+        strs=col.str_index, reprs=col.repr_index,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -376,27 +437,32 @@ def query_mask(seg: ColumnarSegment, q: Query,
          clients never produce false negatives);
       3. vectorized exact evaluation of every clause over whole columns,
          with a per-row raw-bytes fallback for non-lowerable terms.
+
+    The returned mask may alias a memoized per-clause mask (the common
+    single-residual-clause case skips a whole-segment ones-AND round
+    trip); callers must treat it as read-only.
     """
     for c in q.clauses:
         if not seg.clause_possible(c):
             return None
-    if pushed:
-        m = seg.pushed_mask(pushed, and_reduce)
-    else:
-        m = np.ones(seg.n_rows, bool)
+    # candidate mask, built lazily: None means "every row" so the common
+    # single-clause unpushed probe never allocates or ANDs a ones-mask
+    m = seg.pushed_mask(pushed, and_reduce) if pushed else None
     for c in q.clauses:
         cm, leftover = seg.clause_mask(c)
         if leftover:
-            need = m & ~cm
+            need = ~cm if m is None else m & ~cm
             if need.any():
                 cm = cm.copy()
                 for i in np.nonzero(need)[0]:
                     obj = json.loads(seg.record(i))
                     if any(t.matches_exact(obj) for t in leftover):
                         cm[i] = True
-        m = m & cm
+        m = cm if m is None else m & cm
         if not m.any():
             break
+    if m is None:  # zero-clause query: every row matches
+        m = np.ones(seg.n_rows, bool)
     return m
 
 
@@ -510,20 +576,28 @@ def segment_from_packed(records: Sequence[bytes], words: np.ndarray, *,
 
 
 def decode_rows(data: np.ndarray, lengths: np.ndarray,
-                idx: np.ndarray | None = None
+                idx: np.ndarray | None = None,
+                objs: Sequence[dict] | None = None
                 ) -> tuple[list[bytes], list[dict]]:
     """Batch-decode dense chunk rows: ONE fancy-indexed copy, then slices.
 
     Replaces the per-row ``chunk.record(i)`` bytes copies on the ingest
     parse path: the selected sub-array is materialized once
     (``tobytes``), record bytes are cheap slices of that buffer, and the
-    parsed objects feed the columnar builder directly.
+    parsed objects feed the columnar builder directly.  ``objs`` supplies
+    already-parsed row objects aligned to the FULL ``data`` (the sharded
+    ingest path parses every row once for routing) so the selected rows
+    skip the second ``json.loads``.
     """
     if idx is not None:
         data = data[idx]
         lengths = lengths[idx]
+        if objs is not None:
+            objs = [objs[int(i)] for i in idx]
     n, stride = data.shape
     buf = np.ascontiguousarray(data).tobytes()
     records = [buf[k * stride: k * stride + int(lengths[k])]
                for k in range(n)]
-    return records, [json.loads(r) for r in records]
+    if objs is None:
+        objs = [json.loads(r) for r in records]
+    return records, list(objs)

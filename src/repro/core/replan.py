@@ -23,11 +23,14 @@ to every client shard mid-stream.  Invariants are in DESIGN.md §11.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Mapping, Sequence
+from typing import TYPE_CHECKING, Mapping, Sequence
 
 import numpy as np
 
 from .cost_model import CostModel
+
+if TYPE_CHECKING:  # sharded deployments pass a ShardedCiaoStore
+    from .shard import ShardedCiaoStore
 from .planner import PlanReport, build_plan, build_plan_family
 from .predicates import Clause, Query
 from .server import (
@@ -105,7 +108,12 @@ class Replanner:
     """Closed-loop planner: observe → detect drift → re-solve → bump epoch.
 
     Wraps one :class:`CiaoStore` (single client class; per-class budgets
-    get one replanner per class store, mirroring ``plan_for_clients``).
+    get one replanner per class store, mirroring ``plan_for_clients``) —
+    or one :class:`~repro.core.shard.ShardedCiaoStore`, whose feedback
+    surface is identical: per-shard observed selectivities, per-clause
+    coverage denominators, and record totals are aggregated into exact
+    fleet sums BEFORE every drift check and re-solve, and an epoch bump
+    fans out to every shard atomically from the replanner's viewpoint.
     Call :meth:`observe_timing` as client timing reports arrive and
     :meth:`step` after every ingest; ``step`` returns the new
     :class:`PushdownPlan` when it advanced the epoch, else ``None``.
@@ -113,7 +121,7 @@ class Replanner:
 
     def __init__(
         self,
-        store: CiaoStore,
+        store: CiaoStore | ShardedCiaoStore,
         sample_records: Sequence[bytes],
         *,
         budget_us: float | None = None,

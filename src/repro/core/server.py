@@ -215,6 +215,55 @@ def trivial_family(plan: PushdownPlan) -> PlanFamily:
     return PlanFamily(plan=plan, tier_sizes=(plan.n,))
 
 
+def resolve_ingest_coverage(
+    plan: PushdownPlan, family: PlanFamily, *, n_records: int,
+    bitvecs: "np.ndarray | bitvector.ChunkBitvectors",
+    epoch: int | None, tier: int | None,
+) -> tuple[int, int]:
+    """Validate one chunk's ingest claim; returns ``(tier_idx, n_cov)``.
+
+    The shared pre-state gate for every store front-end (the monolithic
+    :class:`CiaoStore` and the sharded plane's ``ShardedCiaoStore``): a
+    stale epoch, an out-of-range tier, or bitvector dimensions that
+    contradict the claimed coverage must all raise BEFORE any store state
+    is touched, so a rejected ingest can never corrupt record totals or
+    observed selectivities.
+    """
+    if epoch is not None and epoch != plan.epoch:
+        raise StaleEpochError(
+            f"chunk evaluated under epoch {epoch}, store is at epoch "
+            f"{plan.epoch} (re-evaluate under the current plan)")
+    if tier is None:
+        tier_idx = family.top_tier
+        n_cov = plan.n
+    else:
+        if not 0 <= tier < family.n_tiers:
+            raise ValueError(
+                f"tier {tier} out of range: family has "
+                f"{family.n_tiers} tiers")
+        tier_idx = int(tier)
+        n_cov = family.tier_sizes[tier_idx]
+    if isinstance(bitvecs, bitvector.ChunkBitvectors):
+        if bitvecs.n_records != n_records:
+            raise ValueError(
+                f"bitvectors cover {bitvecs.n_records} records, "
+                f"chunk has {n_records}")
+        n_cl = bitvecs.words.shape[0]
+    else:
+        raw = np.asarray(bitvecs)
+        n_cl = raw.shape[0]
+        if n_cl and raw.shape[-1] != bitvector.num_words(n_records):
+            raise ValueError(
+                f"bitvector words cover {raw.shape[-1] * 32} records, "
+                f"chunk has {n_records}")
+    if n_cl != n_cov:
+        raise ValueError(
+            f"bitvectors cover {n_cl} clauses, tier {tier_idx} of the "
+            f"epoch-{plan.epoch} plan covers {n_cov} (stale client "
+            f"plan/tier?)")
+    return tier_idx, n_cov
+
+
 def evolve_family(
     prev: "PlanFamily | PushdownPlan",
     order: Sequence[Clause],
@@ -280,9 +329,27 @@ class LoadStats:
     def loading_ratio(self) -> float:
         return self.n_loaded / self.n_records if self.n_records else 0.0
 
+    def add(self, other: "LoadStats") -> "LoadStats":
+        """Accumulate ``other`` field-wise (fleet aggregation); returns
+        self.  The single summing rule for every multi-store aggregator —
+        a new counter added here propagates everywhere."""
+        self.n_records += other.n_records
+        self.n_loaded += other.n_loaded
+        self.n_jit_loaded += other.n_jit_loaded
+        self.load_time_s += other.load_time_s
+        self.parse_time_s += other.parse_time_s
+        self.jit_time_s += other.jit_time_s
+        return self
+
 
 class CiaoStore:
     """Columnar segments + raw remainder + per-segment bitvector metadata.
+
+    In the sharded store plane (DESIGN.md §14) this class is the
+    PER-SHARD segment store: ``repro.core.shard.ShardedCiaoStore`` routes
+    ingest across N of these and aggregates their statistics; a plain
+    ``CiaoStore`` remains the N=1 degenerate case and the differential
+    oracle every sharded scan is count-checked against.
 
     The store is *epoch-versioned* (DESIGN.md §11): it keeps a registry of
     every plan epoch it has ingested under, per-epoch clause statistics,
@@ -484,6 +551,7 @@ class CiaoStore:
         self, chunk: Chunk,
         bitvecs: np.ndarray | bitvector.ChunkBitvectors,
         *, epoch: int | None = None, tier: int | None = None,
+        objs: Sequence[dict] | None = None,
     ) -> LoadStats:
         """Partial loading of one chunk.
 
@@ -503,6 +571,10 @@ class CiaoStore:
         dimension must equal ``family.tier_sizes[tier]`` exactly — a
         mismatched coverage claim is rejected before any state is touched.
         ``None`` means full coverage (the top tier).
+
+        ``objs`` optionally supplies already-parsed row objects aligned to
+        the chunk's rows (the shard router parses once for routing +
+        partition metadata); loaded rows then skip the ingest re-parse.
         """
         t0 = time.perf_counter()
         n = chunk.n_records
@@ -510,38 +582,9 @@ class CiaoStore:
         # validate epoch, tier coverage AND both dimensions BEFORE touching
         # stats: a rejected ingest must not corrupt n_records / observed
         # selectivities
-        if epoch is not None and epoch != e:
-            raise StaleEpochError(
-                f"chunk evaluated under epoch {epoch}, store is at epoch "
-                f"{e} (re-evaluate under the current plan)")
-        family = self.family
-        if tier is None:
-            tier_idx = family.top_tier
-            n_cov = self.plan.n
-        else:
-            if not 0 <= tier < family.n_tiers:
-                raise ValueError(
-                    f"tier {tier} out of range: family has "
-                    f"{family.n_tiers} tiers")
-            tier_idx = int(tier)
-            n_cov = family.tier_sizes[tier_idx]
-        if isinstance(bitvecs, bitvector.ChunkBitvectors):
-            if bitvecs.n_records != n:
-                raise ValueError(
-                    f"bitvectors cover {bitvecs.n_records} records, "
-                    f"chunk has {n}")
-            n_cl = bitvecs.words.shape[0]
-        else:
-            raw = np.asarray(bitvecs)
-            n_cl = raw.shape[0]
-            if n_cl and raw.shape[-1] != bitvector.num_words(n):
-                raise ValueError(
-                    f"bitvector words cover {raw.shape[-1] * 32} records, "
-                    f"chunk has {n}")
-        if n_cl != n_cov:
-            raise ValueError(
-                f"bitvectors cover {n_cl} clauses, tier {tier_idx} of the "
-                f"epoch-{e} plan covers {n_cov} (stale client plan/tier?)")
+        tier_idx, n_cov = resolve_ingest_coverage(
+            self.plan, self.family, n_records=n, bitvecs=bitvecs,
+            epoch=epoch, tier=tier)
         self.stats.n_records += n
         self._epoch_records[e] += n
         self._epoch_clause_records[e][:n_cov] += n
@@ -579,9 +622,10 @@ class CiaoStore:
             # as buffer slices, parsed objects straight into the columnar
             # builder (no per-row chunk.record() round-trips)
             tp0 = time.perf_counter()
-            recs, objs = decode_rows(chunk.data, chunk.lengths, load_idx)
+            recs, sel_objs = decode_rows(chunk.data, chunk.lengths, load_idx,
+                                         objs=objs)
             self.segments.extend(
-                self._builder(e, n_cov, tier_idx).add(recs, objs, bits))
+                self._builder(e, n_cov, tier_idx).add(recs, sel_objs, bits))
             self.stats.parse_time_s += time.perf_counter() - tp0
         if len(keep_idx):
             self.raw.append(
@@ -615,6 +659,11 @@ class CiaoStore:
             return promoted
         t0 = time.perf_counter()
         keep: list[RawRemainder] = []
+        # compact BEFORE building: remainders arrive one per chunk, and a
+        # segment per chunk-remainder would fragment the query path into
+        # hundreds of tiny segments — group rows by full coverage key and
+        # build capacity-bounded segments over the concatenation
+        grouped: dict[tuple[int, int, int], tuple[list, list]] = {}
         for rr in self.raw:
             if only_epochs is not None and rr.epoch not in only_epochs:
                 keep.append(rr)
@@ -624,13 +673,18 @@ class CiaoStore:
                 keep.append(rr)
                 continue
             recs, objs = decode_rows(rr.data, rr.lengths)
-            self.jit_segments.extend(build_segments(
-                recs, np.zeros((0, rr.n), bool), objs=objs,
-                epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier,
-                capacity=self.segment_capacity))
+            g = grouped.setdefault((rr.epoch, rr.n_covered, rr.tier),
+                                   ([], []))
+            g[0].extend(recs)
+            g[1].extend(objs)
             self.stats.n_jit_loaded += rr.n
             key = (rr.epoch, rr.tier)
             promoted[key] = promoted.get(key, 0) + rr.n
+        for (epoch, n_cov, tier), (recs, objs) in grouped.items():
+            self.jit_segments.extend(build_segments(
+                recs, np.zeros((0, len(recs)), bool), objs=objs,
+                epoch=epoch, n_covered=n_cov, tier=tier,
+                capacity=self.segment_capacity))
         self.raw = keep
         self.stats.jit_time_s += time.perf_counter() - t0
         return promoted
@@ -908,15 +962,28 @@ class ScanResult:
     used_skipping: bool
     # (epoch, tier) -> breakdown: which coverage groups produced the
     # skips/scans/JIT parses, so benchmarks and the replanner can
-    # attribute savings to tiers instead of a single aggregate
+    # attribute savings to tiers instead of a single aggregate.
+    # ORDERING CONTRACT: every finished result iterates ``groups`` in
+    # ascending (epoch, tier) key order, independent of segment layout or
+    # shard completion order — scanners and the scatter-gather merge
+    # normalize with :meth:`sort_groups` before returning, so consumers
+    # may rely on a stable, comparable iteration order.
     groups: dict[tuple[int, int], TierScan] = field(default_factory=dict)
     # segments skipped whole by their zone maps (second-level skipping —
     # independent of the pushed-bitvector path, so NOT part of
     # used_skipping, which keeps its pushed-clause meaning)
     segments_pruned: int = 0
+    # sharded scatter-gather only (DESIGN.md §14): shards whose partition
+    # metadata refuted the query (first-level skipping) vs shards scanned
+    shards_scanned: int = 0
+    shards_pruned: int = 0
 
     def group(self, epoch: int, tier: int) -> TierScan:
         return self.groups.setdefault((epoch, tier), TierScan())
+
+    def sort_groups(self) -> None:
+        """Normalize ``groups`` to ascending (epoch, tier) key order."""
+        self.groups = {k: self.groups[k] for k in sorted(self.groups)}
 
 
 class DataSkippingScanner:
@@ -991,6 +1058,7 @@ class DataSkippingScanner:
                 g.rows_skipped += seg.n_rows
                 continue
             self._scan_segment(seg, q, (), g, result)
+        result.sort_groups()
         for g in result.groups.values():
             result.count += g.count
             result.rows_scanned += g.rows_scanned

@@ -1,0 +1,931 @@
+"""Sharded store plane: partition-aware CiaoStore (DESIGN.md §14).
+
+The monolithic :class:`~repro.core.server.CiaoStore` stays the per-shard
+segment store (and the N=1 degenerate case / differential oracle); this
+module scales it out into N shards:
+
+  * :class:`ShardRouter` — deterministic record -> shard assignment: hash
+    or workload-derived range partitioning on a *routing key*, by default
+    the plan's hottest clause key (:func:`choose_routing_key`).  Routing
+    never affects correctness, only locality — partition metadata keeps
+    skipping sound whatever the placement.
+  * :class:`ShardedCiaoStore` — routes ingest to N per-shard stores and
+    maintains per-shard *partition metadata* (:class:`ShardSummary`:
+    per-key numeric min/max + bounded value-set summaries over ALL rows
+    resident in the shard, raw remainders included).  That metadata is a
+    third skipping level above zone maps; the full cascade is
+    partition-prune -> zone-prune -> pushed-bitvector AND -> vectorized
+    residual.
+  * :class:`ShardedScanner` — scatter-gather scan executor: partition
+    pruning first, then per-shard :class:`DataSkippingScanner` scans on a
+    thread pool (shard-level work queue), merged deterministically —
+    stable shard order, binary tree via
+    :func:`repro.dist.collectives.tree_reduce`, sorted per-(epoch, tier)
+    groups (:func:`merge_scan_results`).
+  * format-5 checkpoints — one manifest + per-shard files
+    (:meth:`ShardedCiaoStore.save`).  Formats 2-4 load into a 1-shard
+    store (:meth:`ShardedCiaoStore.load`) and :func:`reshard`
+    re-partitions a store offline onto a new router.
+
+Every query over a sharded store returns counts bit-identical to the
+unsharded oracle across engines, epochs, and tiers — pinned by the
+differential sweep in ``tests/test_shard.py`` and the ``bench_shard``
+schema gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.dist import collectives
+
+from . import bitvector
+from .client import Chunk
+from .columnar import (
+    ColumnarSegment, _f64_exact, build_segments, decode_rows,
+    term_possible_over,
+)
+from .predicates import (
+    Clause, Query, SimplePredicate, clause_from_obj, clause_to_obj,
+    json_scalar,
+)
+from .server import (
+    CiaoStore, DataSkippingScanner, LoadStats, PlanFamily, PushdownPlan,
+    RawRemainder, ScanResult, TierScan, _EpochPushdown,
+    resolve_ingest_coverage,
+)
+
+# distinct values tracked per key per shard before the value-set summary
+# saturates (min/max survives saturation; set-based refutation does not)
+SUMMARY_VALUE_CAP = 4096
+_CLAUSE_CACHE_CAP = 256
+
+
+def _crc(token: bytes) -> int:
+    return zlib.crc32(token) & 0xFFFFFFFF
+
+
+def choose_routing_key(plan: "PushdownPlan | PlanFamily",
+                       workload=None) -> str | None:
+    """The plan's hottest clause key — the default routing key.
+
+    Tallies the JSON keys referenced by the plan's clause terms, weighted
+    by workload query frequency when a workload is given (a clause's
+    weight is the summed ``freq`` of the queries containing it), else one
+    per clause.  Ties break toward the earliest (highest-ranked) clause.
+    Returns ``None`` for an empty plan (the router falls back to
+    raw-bytes hashing).
+    """
+    if isinstance(plan, PlanFamily):
+        plan = plan.plan
+    weight: dict[Clause, float] = {c: 1.0 for c in plan.clauses}
+    if workload is not None:
+        for q in workload.queries:
+            for c in q.clauses:
+                if c in weight:
+                    weight[c] += float(q.freq)
+    score: dict[str, float] = {}
+    first_rank: dict[str, int] = {}
+    for rank, c in enumerate(plan.clauses):
+        for t in c.terms:
+            score[t.key] = score.get(t.key, 0.0) + weight[c]
+            first_rank.setdefault(t.key, rank)
+    if not score:
+        return None
+    return min(score, key=lambda k: (-score[k], first_rank[k]))
+
+
+@dataclass(frozen=True)
+class ShardRouter:
+    """Deterministic record -> shard assignment.
+
+    ``mode="hash"``: crc32 of ``json_scalar(value-at-key)`` (or of the
+    raw record bytes when ``key`` is None / absent) modulo ``n_shards``.
+    ``mode="range"``: workload-derived range partitioning — ``boundaries``
+    are ascending numeric cut points (``n_shards - 1`` of them, typically
+    sample quantiles via :meth:`from_samples`); a numeric value lands in
+    ``searchsorted(boundaries, v, side="right")``, everything non-numeric
+    falls back to the hash rule.  Range mode is what clusters routing-key
+    values so partition min/max metadata can refute queries a monolithic
+    store's ingest-ordered segments never could.
+    """
+
+    n_shards: int
+    key: str | None = None
+    mode: str = "hash"
+    boundaries: tuple[float, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {self.n_shards}")
+        if self.mode not in ("hash", "range"):
+            raise ValueError(f"unknown routing mode {self.mode!r}")
+        if self.mode == "range":
+            if self.key is None:
+                raise ValueError("range routing needs a routing key")
+            b = tuple(float(x) for x in self.boundaries)
+            if len(b) != self.n_shards - 1 or list(b) != sorted(b):
+                raise ValueError(
+                    f"range routing over {self.n_shards} shards needs "
+                    f"{self.n_shards - 1} ascending boundaries, got {b}")
+            object.__setattr__(self, "boundaries", b)
+
+    @classmethod
+    def from_samples(cls, n_shards: int, key: str,
+                     sample_objs: Sequence[dict], *,
+                     mode: str = "range") -> "ShardRouter":
+        """Router with boundaries at sample quantiles of ``key``.
+
+        Quantile cut points balance ROW counts per shard even when the
+        key's value distribution is skewed — the workload-derived flavor
+        of range partitioning.
+        """
+        if mode == "hash":
+            return cls(n_shards=n_shards, key=key, mode="hash")
+        vals = sorted(
+            float(v) for o in sample_objs
+            for v in [o.get(key)]
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and v == v and _f64_exact(v))
+        if not vals:
+            raise ValueError(
+                f"no numeric sample values for routing key {key!r}")
+        bnd = tuple(
+            vals[min(len(vals) - 1, (i * len(vals)) // n_shards)]
+            for i in range(1, n_shards))
+        return cls(n_shards=n_shards, key=key, mode="range", boundaries=bnd)
+
+    def shard_of(self, obj: dict | None, rec: bytes) -> int:
+        if self.key is None or obj is None or self.key not in obj:
+            return _crc(rec) % self.n_shards
+        v = obj[self.key]
+        if self.mode == "range" and isinstance(v, (int, float)) \
+                and not isinstance(v, bool) and v == v:
+            return int(np.searchsorted(
+                np.asarray(self.boundaries), float(v), side="right"))
+        return _crc(json_scalar(v).encode()) % self.n_shards
+
+    def route(self, objs: Sequence[dict], recs: Sequence[bytes]
+              ) -> np.ndarray:
+        """int32[n]: shard id per record."""
+        return np.fromiter(
+            (self.shard_of(o, r) for o, r in zip(objs, recs)),
+            np.int32, count=len(recs))
+
+    def to_obj(self) -> dict:
+        return {"n_shards": self.n_shards, "key": self.key,
+                "mode": self.mode, "boundaries": list(self.boundaries)}
+
+    @classmethod
+    def from_obj(cls, d: dict) -> "ShardRouter":
+        return cls(n_shards=int(d["n_shards"]), key=d.get("key"),
+                   mode=d.get("mode", "hash"),
+                   boundaries=tuple(d.get("boundaries", ())))
+
+
+class _KeySummary:
+    """One routing partition's metadata for one JSON key.
+
+    The shard-level analogue of a zone map: numeric min/max over the
+    f64-exact values, plus bounded ``json_scalar`` / string value sets
+    (``None`` = saturated past :data:`SUMMARY_VALUE_CAP` — membership
+    refutation unavailable, min/max still live).  ``num_prunable`` goes
+    False when a NaN is observed (same poisoning rule as the segment zone
+    maps: a min/max comparison against NaN-tainted data is silently
+    False, so it must never refute).
+    """
+
+    __slots__ = ("num_min", "num_max", "num_prunable", "any_notnull",
+                 "reprs", "strs")
+
+    def __init__(self) -> None:
+        self.num_min = np.inf
+        self.num_max = -np.inf
+        self.num_prunable = True
+        self.any_notnull = False
+        self.reprs: set[str] | None = set()
+        self.strs: set[str] | None = set()
+
+    def add(self, v, cap: int) -> None:
+        if v is not None:
+            self.any_notnull = True
+        if isinstance(v, bool):
+            pass
+        elif isinstance(v, float) and v != v:
+            self.num_prunable = False
+        elif isinstance(v, (int, float)) and _f64_exact(v):
+            fv = float(v)
+            if fv < self.num_min:
+                self.num_min = fv
+            if fv > self.num_max:
+                self.num_max = fv
+        elif isinstance(v, str) and self.strs is not None:
+            self.strs.add(v)
+            if len(self.strs) > cap:
+                self.strs = None
+        if self.reprs is not None:
+            self.reprs.add(json_scalar(v))
+            if len(self.reprs) > cap:
+                self.reprs = None
+
+    def to_obj(self) -> dict:
+        return {
+            "min": self.num_min, "max": self.num_max,
+            "num_prunable": self.num_prunable,
+            "any_notnull": self.any_notnull,
+            "reprs": None if self.reprs is None else sorted(self.reprs),
+            "strs": None if self.strs is None else sorted(self.strs),
+        }
+
+    @classmethod
+    def from_obj(cls, d: dict) -> "_KeySummary":
+        ks = cls()
+        ks.num_min = float(d["min"])
+        ks.num_max = float(d["max"])
+        ks.num_prunable = bool(d["num_prunable"])
+        ks.any_notnull = bool(d["any_notnull"])
+        ks.reprs = None if d["reprs"] is None else set(d["reprs"])
+        ks.strs = None if d["strs"] is None else set(d["strs"])
+        return ks
+
+
+class ShardSummary:
+    """Partition-level skipping metadata for ONE shard.
+
+    Covers EVERY row routed to the shard — loaded segments, JIT-promoted
+    segments AND raw remainders (the router parses each record once, so
+    the summary sees rows the zone maps never will until promotion).
+    That total coverage is what makes partition pruning sound for raw
+    rows: a refuted shard cannot hold a match anywhere, so the scan skips
+    it without JIT-promoting.
+
+    ``exhaustive=False`` (a store migrated from a pre-shard checkpoint,
+    or the N=1 degenerate case where routing is skipped) disables pruning
+    entirely — the summary answers "possible" for every clause until
+    :func:`reshard` rebuilds it from the full row population.
+    """
+
+    def __init__(self, *, exhaustive: bool = True,
+                 value_cap: int = SUMMARY_VALUE_CAP):
+        self.exhaustive = exhaustive
+        self.value_cap = int(value_cap)
+        self.n_rows = 0
+        self._keys: dict[str, _KeySummary] = {}
+        self._possible: dict[Clause, bool] = {}
+
+    def update(self, objs: Sequence[dict]) -> None:
+        if not self.exhaustive or not objs:
+            return
+        self._possible.clear()
+        cap = self.value_cap
+        keys = self._keys
+        for obj in objs:
+            for k, v in obj.items():
+                ks = keys.get(k)
+                if ks is None:
+                    ks = keys[k] = _KeySummary()
+                ks.add(v, cap)
+        self.n_rows += len(objs)
+
+    # -- pruning -------------------------------------------------------------
+    def term_possible(self, t: SimplePredicate) -> bool:
+        """Conservative: False only when provably no shard row matches.
+
+        THE refutation rule is shared with the segment zone maps
+        (:func:`repro.core.columnar.term_possible_over`) — every kind
+        needs the key present, set membership refutes exactly, and a
+        saturated value set degrades to min/max-only refutation.
+        """
+        ks = self._keys.get(t.key)
+        if ks is None:
+            return False
+        return term_possible_over(
+            t, any_notnull=ks.any_notnull,
+            num_min=ks.num_min, num_max=ks.num_max,
+            num_prunable=ks.num_prunable,
+            strs=ks.strs, reprs=ks.reprs,
+        )
+
+    def clause_possible(self, c: Clause) -> bool:
+        if not self.exhaustive:
+            return True
+        p = self._possible.get(c)
+        if p is None:
+            p = any(self.term_possible(t) for t in c.terms)
+            if len(self._possible) >= _CLAUSE_CACHE_CAP:
+                self._possible.clear()
+            self._possible[c] = p
+        return p
+
+    def query_possible(self, q: Query) -> bool:
+        """False iff some query clause provably matches no shard row."""
+        return all(self.clause_possible(c) for c in q.clauses)
+
+    # -- persistence ---------------------------------------------------------
+    def to_obj(self) -> dict:
+        return {
+            "exhaustive": self.exhaustive,
+            "value_cap": self.value_cap,
+            "n_rows": self.n_rows,
+            "keys": {k: ks.to_obj() for k, ks in sorted(self._keys.items())},
+        }
+
+    @classmethod
+    def from_obj(cls, d: dict) -> "ShardSummary":
+        s = cls(exhaustive=bool(d["exhaustive"]),
+                value_cap=int(d.get("value_cap", SUMMARY_VALUE_CAP)))
+        s.n_rows = int(d.get("n_rows", 0))
+        s._keys = {k: _KeySummary.from_obj(v) for k, v in d["keys"].items()}
+        return s
+
+
+class ShardedCiaoStore:
+    """N per-shard :class:`CiaoStore`\\ s behind one store surface.
+
+    Presents the same protocol the scanner, recipe batcher, replanner and
+    ingest coordinator already consume — ``ingest_chunk`` /
+    ``advance_epoch`` / ``blocks`` / ``jit_blocks`` / ``pushed_by_epoch``
+    / ``observed_selectivities`` / ``stats`` — so every control-plane
+    component runs unmodified over a sharded substrate.  Plan state is
+    shared: all shards hold the same plan/family objects and advance
+    epochs together; statistics are kept per shard and aggregated on read
+    (the replanner re-solves from per-shard observed selectivities summed
+    into exact fleet totals).
+
+    ``n_shards == 1`` is the degenerate case: ingest delegates straight
+    to the single inner store (no routing parse, no partition metadata),
+    making it bit-identical — in counts AND in cost shape — to a plain
+    :class:`CiaoStore`.
+    """
+
+    def __init__(self, plan: "PushdownPlan | PlanFamily", *,
+                 router: ShardRouter | None = None,
+                 n_shards: int | None = None,
+                 segment_capacity: int = 8192,
+                 summary_value_cap: int = SUMMARY_VALUE_CAP):
+        if router is None:
+            router = ShardRouter(n_shards=n_shards or 1)
+        elif n_shards is not None and n_shards != router.n_shards:
+            raise ValueError(
+                f"n_shards {n_shards} contradicts router over "
+                f"{router.n_shards} shards")
+        self.router = router
+        self.segment_capacity = int(segment_capacity)
+        self.shards = [
+            CiaoStore(plan, segment_capacity=segment_capacity)
+            for _ in range(router.n_shards)
+        ]
+        # a 1-shard store skips routing, so its summary never becomes
+        # exhaustive — pruning the only shard is pointless anyway
+        self.summaries = [
+            ShardSummary(exhaustive=router.n_shards > 1,
+                         value_cap=summary_value_cap)
+            for _ in range(router.n_shards)
+        ]
+        self.route_time_s = 0.0
+        self.query_log: list[Query] = []
+        self.query_log_cap = 4096
+
+    # -- shared plan state ---------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def plan(self) -> PushdownPlan:
+        return self.shards[0].plan
+
+    @property
+    def family(self) -> PlanFamily:
+        return self.shards[0].family
+
+    @property
+    def plans(self) -> dict[int, PushdownPlan]:
+        return self.shards[0].plans
+
+    @property
+    def families(self) -> dict[int, PlanFamily]:
+        return self.shards[0].families
+
+    @property
+    def epoch(self) -> int:
+        return self.plan.epoch
+
+    def advance_epoch(self, new_plan: "PushdownPlan | PlanFamily"
+                      ) -> np.ndarray:
+        """Install the next plan epoch on every shard; returns the remap."""
+        remaps = [s.advance_epoch(new_plan) for s in self.shards]
+        return remaps[0]
+
+    # -- aggregated statistics ----------------------------------------------
+    @property
+    def stats(self) -> LoadStats:
+        """Fleet :class:`LoadStats`: exact sums over the shards, plus the
+        router's parse/route wall-clock folded into load/parse time."""
+        agg = LoadStats()
+        for s in self.shards:
+            agg.add(s.stats)
+        agg.load_time_s += self.route_time_s
+        agg.parse_time_s += self.route_time_s
+        return agg
+
+    def _sum_epoch(self, attr: str, epoch: int) -> np.ndarray:
+        out = None
+        for s in self.shards:
+            v = getattr(s, attr).get(epoch)
+            if v is None:
+                continue
+            out = np.asarray(v, np.int64) if out is None else out + v
+        if out is None:
+            out = np.zeros((self.plans[epoch].n,), np.int64)
+        return out
+
+    @property
+    def clause_counts(self) -> np.ndarray:
+        """int64[P]: current epoch's per-clause totals over all shards."""
+        return self._sum_epoch("_epoch_counts", self.epoch)
+
+    def epoch_records(self, epoch: int | None = None) -> int:
+        e = self.epoch if epoch is None else epoch
+        return sum(s._epoch_records.get(e, 0) for s in self.shards)
+
+    def clause_records(self, epoch: int | None = None) -> np.ndarray:
+        e = self.epoch if epoch is None else epoch
+        return self._sum_epoch("_epoch_clause_records", e)
+
+    def observed_selectivities(self, epoch: int | None = None) -> np.ndarray:
+        """float64[P]: per-shard observed selectivities aggregated into
+        fleet totals (summed counts over summed per-clause denominators)
+        — what the replanner re-solves from."""
+        e = self.epoch if epoch is None else epoch
+        counts = self._sum_epoch("_epoch_counts", e)
+        denom = np.maximum(self._sum_epoch("_epoch_clause_records", e), 1)
+        return counts / denom
+
+    @property
+    def group_records(self) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.group_records.items():
+                out[k] = out.get(k, 0) + n
+        return out
+
+    @property
+    def group_loaded(self) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.group_loaded.items():
+                out[k] = out.get(k, 0) + n
+        return out
+
+    # -- query-path surface (same contract as CiaoStore) ---------------------
+    @property
+    def blocks(self) -> list[ColumnarSegment]:
+        """All shards' loaded segments, stable shard order."""
+        return [seg for s in self.shards for seg in s.blocks]
+
+    @property
+    def jit_blocks(self) -> list[ColumnarSegment]:
+        return [seg for s in self.shards for seg in s.jit_blocks]
+
+    @property
+    def raw(self) -> list[RawRemainder]:
+        return [rr for s in self.shards for rr in s.raw]
+
+    def log_query(self, q: Query) -> None:
+        self.query_log.append(q)
+        if len(self.query_log) > 2 * self.query_log_cap:
+            del self.query_log[:-self.query_log_cap]
+
+    def pushed_by_epoch(self, q: Query) -> _EpochPushdown:
+        m = _EpochPushdown(self, q)
+        m[self.plan.epoch]
+        return m
+
+    def promote_uncovered_raw(
+        self, pushed: _EpochPushdown,
+    ) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.promote_uncovered_raw(pushed).items():
+                out[k] = out.get(k, 0) + n
+        return out
+
+    def jit_load_raw(
+        self, only_epochs: set[int] | None = None,
+        *, only_groups: set[tuple[int, int]] | None = None,
+    ) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.jit_load_raw(only_epochs,
+                                       only_groups=only_groups).items():
+                out[k] = out.get(k, 0) + n
+        return out
+
+    # -- ingest --------------------------------------------------------------
+    def ingest_chunk(
+        self, chunk: Chunk,
+        bitvecs: "np.ndarray | bitvector.ChunkBitvectors",
+        *, epoch: int | None = None, tier: int | None = None,
+    ) -> LoadStats:
+        """Route one chunk's records to their shards and ingest each slice.
+
+        Validation (epoch, tier, bitvector dimensions) runs ONCE up front
+        via :func:`repro.core.server.resolve_ingest_coverage` — a rejected
+        chunk touches no shard.  Rows are parsed once for routing; the
+        parsed objects feed both the partition summaries and the per-shard
+        ingest (loaded rows are not re-parsed).  Per-shard bitvector
+        slices are repacked from the chunk's bit matrix, so per-clause
+        popcounts land on the owning shard and the aggregated observed
+        selectivities stay exact.
+        """
+        resolve_ingest_coverage(
+            self.plan, self.family, n_records=chunk.n_records,
+            bitvecs=bitvecs, epoch=epoch, tier=tier)
+        if self.n_shards == 1:  # degenerate case: no routing parse
+            self.shards[0].ingest_chunk(chunk, bitvecs,
+                                        epoch=epoch, tier=tier)
+            return self.stats
+        n = chunk.n_records
+        t0 = time.perf_counter()
+        recs, objs = decode_rows(chunk.data, chunk.lengths)
+        sid = self.router.route(objs, recs)
+        words = (bitvecs.words
+                 if isinstance(bitvecs, bitvector.ChunkBitvectors)
+                 else np.asarray(bitvecs, np.uint32))
+        bits = bitvector.unpack(words, n)
+        self.route_time_s += time.perf_counter() - t0
+        for s in range(self.n_shards):
+            idx = np.nonzero(sid == s)[0]
+            if not idx.size:
+                continue
+            sub_objs = [objs[i] for i in idx]
+            self.summaries[s].update(sub_objs)
+            self.shards[s].ingest_chunk(
+                Chunk(data=chunk.data[idx], lengths=chunk.lengths[idx]),
+                bitvector.ChunkBitvectors.from_bits(bits[:, idx]),
+                epoch=epoch, tier=tier, objs=sub_objs)
+        return self.stats
+
+    # -- persistence (format 5: manifest + per-shard files) ------------------
+    def save(self, path: str) -> None:
+        """Checkpoint as a DIRECTORY: ``manifest.json`` + one format-4
+        ``shard_<i>.npz`` per shard.
+
+        The manifest carries the shard plane's own state — router config,
+        partition summaries (which cover raw remainder rows no segment
+        restore could rebuild), and the top-level query log; each shard
+        file is a complete, independently loadable per-shard store.
+        """
+        os.makedirs(path, exist_ok=True)
+        shard_files = []
+        for i, s in enumerate(self.shards):
+            name = f"shard_{i:05d}.npz"
+            s.save(os.path.join(path, name))
+            shard_files.append(name)
+        manifest = {
+            "format": 5,
+            "segment_capacity": self.segment_capacity,
+            "router": self.router.to_obj(),
+            "shard_files": shard_files,
+            "summaries": [s.to_obj() for s in self.summaries],
+            "route_time_s": self.route_time_s,
+            "query_log": [
+                {"freq": q.freq,
+                 "clauses": [clause_to_obj(c) for c in q.clauses]}
+                for q in self.query_log[-self.query_log_cap:]
+            ],
+        }
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+    @classmethod
+    def load(cls, path: str,
+             plan: PushdownPlan | None = None) -> "ShardedCiaoStore":
+        """Restore a checkpoint — format 5 (directory) or formats 2-4.
+
+        A pre-shard ``.npz`` checkpoint (format 2/3/4) loads into a
+        1-shard store whose summary is non-exhaustive (pruning disabled
+        until :func:`reshard` re-partitions it offline); counts and
+        coverage claims survive unchanged because the inner store IS the
+        migrated :class:`CiaoStore`.
+        """
+        manifest_path = os.path.join(path, "manifest.json")
+        if not os.path.isdir(path):
+            inner = CiaoStore.load(path, plan)
+            store = cls.__new__(cls)
+            store.router = ShardRouter(n_shards=1)
+            store.segment_capacity = inner.segment_capacity
+            store.shards = [inner]
+            store.summaries = [ShardSummary(exhaustive=False)]
+            store.route_time_s = 0.0
+            store.query_log = list(inner.query_log)
+            store.query_log_cap = inner.query_log_cap
+            return store
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != 5:
+            raise ValueError(
+                f"{path}: unsupported sharded checkpoint format "
+                f"{manifest.get('format')!r}")
+        store = cls.__new__(cls)
+        store.router = ShardRouter.from_obj(manifest["router"])
+        store.segment_capacity = int(manifest["segment_capacity"])
+        store.shards = [
+            CiaoStore.load(os.path.join(path, name), plan)
+            for name in manifest["shard_files"]
+        ]
+        store.summaries = [
+            ShardSummary.from_obj(d) for d in manifest["summaries"]
+        ]
+        store.route_time_s = float(manifest.get("route_time_s", 0.0))
+        store.query_log = [
+            Query(tuple(clause_from_obj(c) for c in q["clauses"]),
+                  freq=float(q["freq"]))
+            for q in manifest.get("query_log", [])
+        ]
+        store.query_log_cap = 4096
+        return store
+
+
+def reshard(store: "ShardedCiaoStore | CiaoStore",
+            router: ShardRouter, *,
+            segment_capacity: int | None = None) -> ShardedCiaoStore:
+    """Offline re-partition of a store onto ``router`` (DESIGN.md §14).
+
+    Every resident row — loaded segments, JIT-promoted segments, raw
+    remainders — is routed to its new shard with its coverage metadata
+    ``(epoch, n_covered, tier)`` and bitvector rows intact, so scan
+    counts and coverage claims are preserved bit for bit (pinned by the
+    migration tests).  Partition summaries are rebuilt exhaustively from
+    the full row population, re-enabling pruning for stores migrated from
+    pre-shard checkpoints.
+
+    Statistics split by who reads them: the PER-SHARD counters the scan
+    executor consults (``group_records``/``group_loaded`` for
+    pruned-shard attribution, ``_epoch_records`` and the ``LoadStats``
+    row counts for the empty-shard check and the parallel-dispatch
+    heuristic) are re-derived from actual row placement, so they are
+    exact for every target shard; the client-feedback arrays
+    (``_epoch_counts``/``_epoch_clause_records`` — per-clause popcounts
+    that cannot be attributed to rows after the fact) and the load-path
+    timings are carried onto shard 0, where only their fleet SUM is ever
+    read.
+    """
+    src_shards = (store.shards if isinstance(store, ShardedCiaoStore)
+                  else [store])
+    src0 = src_shards[0]
+    cap = segment_capacity or src0.segment_capacity
+    current_family = src0.families[src0.plan.epoch]
+    out = ShardedCiaoStore(current_family, router=router,
+                           segment_capacity=cap)
+    # graft the full epoch registry (shared plan objects) onto every shard
+    epochs = sorted(src0.plans)
+    for sh in out.shards:
+        sh.plans = dict(src0.plans)
+        sh.families = dict(src0.families)
+        sh.plan = src0.plan
+        sh.family = current_family
+        sh._epoch_records = {e: 0 for e in epochs}
+        sh._epoch_counts = {
+            e: np.zeros((src0.plans[e].n,), np.int64) for e in epochs}
+        sh._epoch_clause_records = {
+            e: np.zeros((src0.plans[e].n,), np.int64) for e in epochs}
+    # shard 0 carries the fleet-sum-only feedback state
+    agg0 = out.shards[0]
+    for src in src_shards:
+        for e in epochs:
+            for attr in ("_epoch_counts", "_epoch_clause_records"):
+                v = getattr(src, attr).get(e)
+                if v is not None:
+                    getattr(agg0, attr)[e] += np.asarray(v, np.int64)
+        st = src.stats
+        agg0.stats.load_time_s += st.load_time_s
+        agg0.stats.parse_time_s += st.parse_time_s
+        agg0.stats.jit_time_s += st.jit_time_s
+    out.query_log = list(
+        store.query_log if isinstance(store, ShardedCiaoStore)
+        else src0.query_log)
+
+    def _account(s: int, epoch: int, tier: int, k: int, *,
+                 loaded: bool = False, jit: bool = False) -> None:
+        """Placement-derived per-shard counters (exact per target)."""
+        sh = out.shards[s]
+        sh._epoch_records[epoch] += k
+        gkey = (epoch, tier)
+        sh.group_records[gkey] = sh.group_records.get(gkey, 0) + k
+        sh.stats.n_records += k
+        if loaded:
+            sh.group_loaded[gkey] = sh.group_loaded.get(gkey, 0) + k
+            sh.stats.n_loaded += k
+        if jit:
+            sh.stats.n_jit_loaded += k
+
+    def _place(recs: list[bytes], objs: list[dict], sid: np.ndarray,
+               place: Callable[[int, np.ndarray, list, list], None]) -> None:
+        for s in range(router.n_shards):
+            idx = np.nonzero(sid == s)[0]
+            if not idx.size:
+                continue
+            sub_recs = [recs[i] for i in idx]
+            sub_objs = [objs[i] for i in idx]
+            out.summaries[s].update(sub_objs)
+            place(s, idx, sub_recs, sub_objs)
+
+    for src in src_shards:
+        for seg in src.blocks:
+            recs, objs = seg.records(), seg.rows
+            bits = bitvector.unpack(seg.bitvectors, seg.n_rows)
+            sid = router.route(objs, recs)
+
+            def _loaded(s, idx, sub_recs, sub_objs, seg=seg, bits=bits):
+                tgt = out.shards[s]
+                tgt.segments.extend(
+                    tgt._builder(seg.epoch, seg.n_covered, seg.tier)
+                    .add(sub_recs, sub_objs, bits[:, idx]))
+                _account(s, seg.epoch, seg.tier, len(idx), loaded=True)
+
+            _place(recs, objs, sid, _loaded)
+        for seg in src.jit_blocks:
+            recs, objs = seg.records(), seg.rows
+            sid = router.route(objs, recs)
+
+            def _jit(s, idx, sub_recs, sub_objs, seg=seg):
+                out.shards[s].jit_segments.extend(build_segments(
+                    sub_recs, np.zeros((0, len(sub_recs)), bool),
+                    objs=sub_objs, epoch=seg.epoch,
+                    n_covered=seg.n_covered, tier=seg.tier, capacity=cap))
+                _account(s, seg.epoch, seg.tier, len(idx), jit=True)
+
+            _place(recs, objs, sid, _jit)
+        for rr in src.raw:
+            recs, objs = decode_rows(rr.data, rr.lengths)
+            sid = router.route(objs, recs)
+
+            def _raw(s, idx, sub_recs, sub_objs, rr=rr):
+                out.shards[s].raw.append(RawRemainder(
+                    data=rr.data[idx], lengths=rr.lengths[idx],
+                    epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier))
+                _account(s, rr.epoch, rr.tier, len(idx))
+
+            _place(recs, objs, sid, _raw)
+    return out
+
+
+def merge_scan_results(results: Sequence[ScanResult]) -> ScanResult:
+    """Deterministic scatter-gather merge of per-shard scan results.
+
+    Routed through :func:`repro.dist.collectives.tree_reduce` — the
+    association order is fixed by shard position, never by completion
+    order — and normalized to the :class:`ScanResult` groups ordering
+    contract (ascending (epoch, tier) keys).  Counters sum; per-group
+    :class:`TierScan` breakdowns sum field-wise; ``used_skipping`` ORs.
+    ``time_s`` is the summed per-shard scan time (the executor overwrites
+    it with scatter-gather wall clock).
+    """
+
+    def _merge2(a: ScanResult, b: ScanResult) -> ScanResult:
+        groups: dict[tuple[int, int], TierScan] = {}
+        for src in (a.groups, b.groups):
+            for k, g in src.items():
+                t = groups.setdefault(k, TierScan())
+                t.rows_scanned += g.rows_scanned
+                t.rows_skipped += g.rows_skipped
+                t.raw_parsed += g.raw_parsed
+                t.count += g.count
+                t.segments_pruned += g.segments_pruned
+        return ScanResult(
+            count=a.count + b.count,
+            rows_scanned=a.rows_scanned + b.rows_scanned,
+            rows_skipped=a.rows_skipped + b.rows_skipped,
+            raw_parsed=a.raw_parsed + b.raw_parsed,
+            time_s=a.time_s + b.time_s,
+            used_skipping=a.used_skipping or b.used_skipping,
+            groups=groups,
+            segments_pruned=a.segments_pruned + b.segments_pruned,
+            shards_scanned=a.shards_scanned + b.shards_scanned,
+            shards_pruned=a.shards_pruned + b.shards_pruned,
+        )
+
+    # seed with a neutral element: the reduction then always allocates a
+    # fresh result, so callers may mutate the merge output even when a
+    # single (possibly cached/shared) input was passed
+    zero = ScanResult(count=0, rows_scanned=0, rows_skipped=0, raw_parsed=0,
+                      time_s=0.0, used_skipping=False)
+    merged = collectives.tree_reduce([zero, *results], _merge2)
+    merged.sort_groups()
+    return merged
+
+
+class ShardedScanner:
+    """Scatter-gather COUNT(*) over a :class:`ShardedCiaoStore`.
+
+    The three-level skipping cascade in execution order:
+
+      1. **partition prune** — shards whose :class:`ShardSummary` refutes
+         any query clause are skipped whole (their resident rows land in
+         the merged result as ``rows_skipped``, attributed per (epoch,
+         tier) group; no JIT promotion happens in a refuted shard);
+      2. **per-shard scan** — surviving shards run the monolithic
+         :class:`DataSkippingScanner` (zone-prune -> pushed-bitvector AND
+         -> vectorized residual) concurrently on a thread pool;
+      3. **deterministic merge** — results gather in stable shard order
+         and reduce through :func:`merge_scan_results`.
+
+    Counts are bit-identical to the unsharded oracle by construction
+    (rows partition the shards; every level of skipping is sound).
+    """
+
+    def __init__(self, store: ShardedCiaoStore, *, log_queries: bool = True,
+                 and_reduce: Callable | None = None,
+                 max_workers: int | None = None,
+                 parallel_threshold_rows: int = 1 << 20):
+        self.store = store
+        self.log_queries = log_queries
+        self._scanners = [
+            DataSkippingScanner(s, log_queries=False, and_reduce=and_reduce)
+            for s in store.shards
+        ]
+        self._max_workers = max_workers or min(
+            store.n_shards, os.cpu_count() or 1)
+        # thread dispatch + future gather costs O(100µs)+ per query while
+        # the workers contend for the GIL on small per-shard scans: fan
+        # out only when the surviving shards hold enough rows (>= 1M by
+        # default) for the numpy-released sections to amortize it, else
+        # run the shard loop inline (same results, no pool round-trip)
+        self.parallel_threshold_rows = parallel_threshold_rows
+        self._pool: ThreadPoolExecutor | None = None
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._max_workers,
+                thread_name_prefix="ciao-shard-scan")
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "ShardedScanner":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def scan(self, q: Query) -> ScanResult:
+        t0 = time.perf_counter()
+        store = self.store
+        if self.log_queries:
+            store.log_query(q)
+        run: list[int] = []
+        pruned: list[int] = []
+        run_rows = 0
+        for s in range(store.n_shards):
+            shard = store.shards[s]
+            if not (shard.stats.n_records or shard.blocks
+                    or shard.jit_blocks or shard.raw):
+                continue  # empty shard: contributes nothing
+            if store.n_shards > 1 and not store.summaries[s].query_possible(q):
+                pruned.append(s)
+                continue
+            run.append(s)
+            run_rows += shard.stats.n_records
+        use_pool = (len(run) > 1 and self._max_workers > 1
+                    and run_rows >= self.parallel_threshold_rows)
+        if use_pool:
+            pool = self._ensure_pool()
+            futures = [pool.submit(self._scanners[s].scan, q) for s in run]
+            results = [f.result() for f in futures]  # stable shard order
+        else:
+            results = [self._scanners[s].scan(q) for s in run]
+        for r in results:
+            r.shards_scanned = 1
+        if results:
+            merged = merge_scan_results(results)
+        else:
+            merged = ScanResult(count=0, rows_scanned=0, rows_skipped=0,
+                                raw_parsed=0, time_s=0.0,
+                                used_skipping=False)
+        # refuted shards contribute their resident rows as skipped — a
+        # plain accumulation into the merged groups (no per-query merge
+        # of per-shard result objects for data nobody scanned)
+        for s in pruned:
+            merged.shards_pruned += 1
+            for (e, t), n in store.shards[s].group_records.items():
+                merged.group(e, t).rows_skipped += n
+                merged.rows_skipped += n
+        if pruned:
+            merged.sort_groups()
+        pushed = store.pushed_by_epoch(q)
+        merged.used_skipping = any(pushed.values())
+        merged.time_s = time.perf_counter() - t0
+        return merged

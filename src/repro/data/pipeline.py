@@ -34,8 +34,16 @@ from repro.core.selection import ClientProfile, TierAllocation, allocate_tiers
 from repro.core.server import (
     CiaoStore, PlanFamily, PushdownPlan, StaleEpochError,
 )
+from repro.core.shard import ShardedCiaoStore
 from repro.data.datasets import record_stream
 from repro.data.tokenizer import ByteTokenizer
+
+# every store front-end the pipeline drives: the coordinator and batcher
+# only touch the shared protocol (ingest_chunk / plan / family / blocks /
+# pushed_by_epoch), so a sharded store slots in without pipeline changes —
+# the ShardRouter inside ShardedCiaoStore.ingest_chunk fans each chunk out
+# to its per-shard segment stores
+AnyStore = CiaoStore | ShardedCiaoStore
 
 
 @dataclass
@@ -243,9 +251,15 @@ class IngestCoordinator:
     this simulation, so stealing = re-assigning the production slot).  This
     bounds makespan by the fastest clients instead of the slowest — the
     framework's straggler-mitigation story, testable without wall-clock.
+
+    ``store`` may be a :class:`ShardedCiaoStore` (DESIGN.md §14): ingest
+    then routes each chunk's records through the store's ``ShardRouter``
+    to N per-shard segment stores, and the replanner keeps consuming the
+    same feedback surface (per-shard observed selectivities are
+    aggregated into exact fleet totals on read).
     """
 
-    def __init__(self, clients: Sequence[ClientShard], store: CiaoStore,
+    def __init__(self, clients: Sequence[ClientShard], store: AnyStore,
                  *, steal: bool = True, replanner=None,
                  allocator: FleetTierAllocator | None = None,
                  eval_cost_weight: float = 0.0,
@@ -358,7 +372,7 @@ class IngestCoordinator:
 class RecipeBatcher:
     """Turns recipe-matching store rows into fixed-shape token batches."""
 
-    def __init__(self, store: CiaoStore, tokenizer: ByteTokenizer,
+    def __init__(self, store: AnyStore, tokenizer: ByteTokenizer,
                  *, seq_len: int, batch_size: int):
         self.store = store
         self.tok = tokenizer

@@ -1,11 +1,13 @@
 """Distributed-execution support: logical-axis sharding rules + collectives.
 
-Restored as a minimal-but-functional package (DESIGN.md §6): ``sharding``
-resolves the logical axis names recorded by ``models.layers.mk`` into mesh
-``PartitionSpec``s and provides the activation-constraint helpers the model
-code calls on every block boundary.  ``collectives`` holds the multi-chip
-primitives; in this build they are documented stubs (``IS_STUB``) — the
-single-device paths never reach them, and the multi-device subprocess tests
-are skip-marked until the full implementations are restored.
+Restored in stages (DESIGN.md §6, §14): ``sharding`` resolves the logical
+axis names recorded by ``models.layers.mk`` into mesh ``PartitionSpec``s
+and provides the activation-constraint helpers the model code calls on
+every block boundary.  ``collectives`` holds the reduction primitives —
+``tree_reduce`` (the shard scan merge's deterministic host-local tree)
+and ``compressed_allreduce`` (int8 psum over a mesh axis) are REAL and
+tested; only the shard_map flash-decoding attention path remains a
+documented stub (``IS_STUB``), its subprocess tests skip-marked until it
+is restored.
 """
 from . import collectives, sharding  # noqa: F401

@@ -12,10 +12,11 @@ import pytest
 
 from benchmarks.bench_schema import (
     SchemaError, validate_file, validate_kernels, validate_replan,
-    validate_scan, validate_tiers,
+    validate_scan, validate_shard, validate_tiers,
 )
 from benchmarks.run import (
-    write_kernels_artifacts, write_scan_artifacts, write_tiers_artifacts,
+    write_kernels_artifacts, write_scan_artifacts, write_shard_artifacts,
+    write_tiers_artifacts,
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -235,6 +236,93 @@ def test_quick_scan_benchmark_beats_row_path():
     out = bench_scan.run(n_records=4096, chunk_records=512, repeats=1,
                          quick=True)
     validate_scan(out)
+
+
+def _shard_run(n, scan_s, pruned=0.85):
+    return {"n_shards": n, "scan_s": scan_s,
+            "us_per_query": scan_s / 100 * 1e6, "counts_match": True,
+            "selective_pruned_fraction": pruned if n > 1 else 0.0,
+            "max_shard_rows": 70000 // n, "min_shard_rows": 50000 // n}
+
+
+_GOOD_SHARD = {
+    "quick": False,
+    "n_records": 65536, "routing_card": 2048,
+    "n_queries": 119, "n_selective": 108,
+    "routing_key": "visits", "mode": "range",
+    "runs": [_shard_run(1, 0.14), _shard_run(4, 0.068),
+             _shard_run(8, 0.056)],
+    "counts_match": True,
+    "speedup_4": 2.06, "speedup_8": 2.47,
+    "selective_pruned_fraction": 0.89,
+}
+
+
+def test_shard_schema_accepts_tracked_artifact():
+    path = os.path.join(REPO_ROOT, "BENCH_shard.json")
+    assert validate_file(path) == "BENCH_shard.json"
+
+
+def test_shard_schema_accepts_wellformed_synthetic():
+    validate_shard(_GOOD_SHARD)
+    quick = json.loads(json.dumps(_GOOD_SHARD))
+    quick["quick"] = True
+    quick["speedup_8"] = 0.9   # reduced-size floor (0.8x) gates collapse only
+    validate_shard(quick)
+    quick["speedup_8"] = 0.7
+    with pytest.raises(SchemaError):
+        validate_shard(quick)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda o: o.pop("runs"),
+    lambda o: o.pop("counts_match"),
+    lambda o: o.__setitem__("counts_match", False),       # THE claim gate
+    lambda o: o["runs"][0].__setitem__("counts_match", False),
+    lambda o: o.__setitem__("speedup_8", 1.9),            # below full floor
+    lambda o: o.__setitem__("selective_pruned_fraction", 0.29),
+    lambda o: o.__setitem__("selective_pruned_fraction", 1.5),
+    lambda o: o["runs"].pop(),                            # missing 8-shard row
+    lambda o: o["runs"][1].pop("scan_s"),
+    lambda o: o["runs"][1].__setitem__("scan_s", 0.0),
+    lambda o: o.__setitem__("routing_key", ""),
+    lambda o: o.__setitem__("quick", "no"),
+])
+def test_shard_schema_rejects_malformed_or_losing(mutate):
+    obj = json.loads(json.dumps(_GOOD_SHARD))
+    mutate(obj)
+    with pytest.raises(SchemaError):
+        validate_shard(obj)
+
+
+def test_shard_quick_run_never_touches_tracked_artifact(tmp_path):
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    tracked = tmp_path / "BENCH_shard.json"
+    tracked.write_text("SENTINEL")
+    written = write_shard_artifacts(
+        _GOOD_SHARD, quick=True,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert written == [str(artifacts / "bench_shard.json")]
+    assert tracked.read_text() == "SENTINEL"
+    written = write_shard_artifacts(
+        _GOOD_SHARD, quick=False,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert str(tracked) in written
+    assert json.loads(tracked.read_text()) == _GOOD_SHARD
+
+
+@pytest.mark.ci_smoke
+def test_quick_shard_benchmark_beats_monolith():
+    """Reduced-size shard benchmark -> schema-valid artifact: counts
+    bit-identical to the 1-shard oracle, partition metadata pruning the
+    selective workload, and the 8-shard scan beating the monolith (the
+    in-suite twin of the CI smoke gate's ``benchmarks.run --quick --only
+    shard``)."""
+    from benchmarks import bench_shard
+
+    out = bench_shard.run(n_records=16384, repeats=2, quick=True)
+    validate_shard(out)
 
 
 def test_quick_run_never_touches_tracked_artifact(tmp_path):

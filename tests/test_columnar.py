@@ -169,6 +169,33 @@ def test_zone_map_refutations_are_sound():
         assert seg.clause_possible(c), c.describe()
 
 
+def test_zone_map_nan_marks_column_nonprunable():
+    """NaN poisoning regression (DESIGN.md §14): a NaN among a key's
+    numeric values marks the zone map non-prunable, and no segment is
+    ever wrongly skipped — every numeric lookup's count stays exact."""
+    objs = [{"n": 10.0, "s": "a"}, {"n": float("nan"), "s": "b"},
+            {"n": 90.0, "s": "c"}, {"n": float("nan"), "s": "d"}] * 8
+    seg = _segment(objs)
+    assert not seg.key_cols["n"].num_prunable   # detected at build time
+    assert seg.key_cols["s"].num_prunable       # only the NaN column
+    # min/max over the non-NaN values stays clean (NaN never enters num)
+    assert (seg.key_cols["n"].num_min, seg.key_cols["n"].num_max) == \
+        (10.0, 90.0)
+    # no wrongful skip: every lookup with >= 1 exact match stays possible,
+    # and query_mask reproduces matches_exact bit for bit — NaN included
+    for v in (10, 10.0, 90, float("nan")):
+        c = clause(key_value("n", v))
+        assert seg.clause_possible(c)
+        mask = query_mask(seg, Query((c,)))
+        want = np.array([Query((c,)).matches_exact(o) for o in objs])
+        assert np.array_equal(mask, want), v
+    # values absent in EVERY representation may still be refuted by the
+    # exact repr set (sound: a NaN row equals nothing but NaN)
+    assert not seg.clause_possible(clause(key_value("n", 55)))
+    assert sum(1 for o in objs
+               if Query((clause(key_value("n", 55)),)).matches_exact(o)) == 0
+
+
 def test_scan_counts_exact_with_pruned_and_all_pruned_segments():
     recs = generate_records("ycsb", 900, seed=21)
     pool = predicate_pool("ycsb")

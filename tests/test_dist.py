@@ -15,12 +15,17 @@ import pytest
 
 from repro.dist import collectives as _coll
 
-# The restored repro.dist is a minimal shim: sharding rules are functional,
-# but the multi-device collectives / shard_map paths the subprocess tests
-# exercise are stubs.  Mark those until the full implementations return.
+# The dist plane is restored in stages.  The REDUCE path (tree_reduce +
+# compressed_allreduce) is real and its tests run; the shard_map
+# flash-decoding attention path is still a stub, so the model-parallel
+# subprocess tests that end in it stay skip-marked.
 needs_full_dist = pytest.mark.skipif(
     getattr(_coll, "IS_STUB", False),
-    reason="repro.dist.collectives is a shim; multi-device paths not restored",
+    reason="repro.dist.collectives attention path not restored",
+)
+needs_reduce = pytest.mark.skipif(
+    getattr(_coll, "REDUCE_IS_STUB", True),
+    reason="repro.dist.collectives reduce path not restored",
 )
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -136,15 +141,44 @@ def test_resharding_checkpoint_restore():
     assert out["ok_shard"]
 
 
-@needs_full_dist
-def test_compressed_allreduce_and_sharded_decode_attention():
+def test_tree_reduce_deterministic_association():
+    """The merge tree is fixed by POSITION: ((x0·x1)·(x2·x3)) with an odd
+    tail carried up — pinned exactly so the shard scan merge can rely on
+    a reproducible association order."""
+    from repro.dist.collectives import tree_reduce
+
+    paren = lambda a, b: f"({a}{b})"
+    assert tree_reduce(["a"], paren) == "a"
+    assert tree_reduce(list("ab"), paren) == "(ab)"
+    assert tree_reduce(list("abcd"), paren) == "((ab)(cd))"
+    assert tree_reduce(list("abcde"), paren) == "(((ab)(cd))e)"
+    assert tree_reduce(list("abcdefg"), paren) == "(((ab)(cd))((ef)g))"
+    assert tree_reduce(list(range(100)), lambda a, b: a + b) == 4950
+    with pytest.raises(ValueError):
+        tree_reduce([], paren)
+
+
+def test_tree_reduce_float_sums_reproducible():
+    """A fixed tree makes float accumulation identical run to run and
+    independent of completion order (the caller supplies stable shard
+    order; the tree does the rest)."""
+    import numpy as np
+
+    from repro.dist.collectives import tree_reduce
+
+    rng = np.random.default_rng(3)
+    xs = list(rng.normal(size=33) * 10.0 ** rng.integers(-8, 8, size=33))
+    add = lambda a, b: a + b
+    assert tree_reduce(xs, add) == tree_reduce(list(xs), add)
+
+
+@needs_reduce
+def test_compressed_allreduce():
     code = textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
-        from repro.dist.collectives import (
-            compressed_allreduce, sharded_decode_attention_gqa)
+        from repro.dist.collectives import compressed_allreduce
         from repro.launch.mesh import make_test_mesh
-        from repro.models import attention as attn
 
         mesh = make_test_mesh((2, 4), ("data", "model"))
 
@@ -154,8 +188,25 @@ def test_compressed_allreduce_and_sharded_decode_attention():
         err_a = float(jnp.abs(out["a"] - 1.0).max())   # 2 devices * 0.5
         rel_b = float(jnp.abs(out["b"] - 2 * x["b"]).max() /
                       jnp.maximum(jnp.abs(2 * x["b"]).max(), 1))
+        # int8 wire payload must bound the error: scale = max|x| / 127
+        bound_b = 2 * float(jnp.abs(x["b"]).max()) / 127
+        print(json.dumps({"err_a": err_a, "rel_b": rel_b, "bound_b": bound_b}))
+    """)
+    out = run_sub(code)
+    assert out["err_a"] < 0.01
+    assert out["rel_b"] < 0.01
 
-        # sharded decode attention vs local reference
+
+@needs_full_dist
+def test_sharded_decode_attention():
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.collectives import sharded_decode_attention_gqa
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import attention as attn
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
         B, H, Hkv, hd, S = 4, 8, 2, 16, 64
         rng = np.random.default_rng(0)
         q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
@@ -167,11 +218,9 @@ def test_compressed_allreduce_and_sharded_decode_attention():
         out_sh = sharded_decode_attention_gqa(
             q, k, v, pos, mesh, batch_axes=("data",), seq_axis="model")
         err_attn = float(jnp.abs(ref - out_sh.astype(jnp.float32)).max())
-        print(json.dumps({"err_a": err_a, "rel_b": rel_b, "err_attn": err_attn}))
+        print(json.dumps({"err_attn": err_attn}))
     """)
     out = run_sub(code)
-    assert out["err_a"] < 0.01
-    assert out["rel_b"] < 0.01
     assert out["err_attn"] < 1e-4, out
 
 
