@@ -283,7 +283,20 @@ def term_possible_over(
         # min/max comparisons would be silently False, so skip straight
         # to the exact repr membership test
         if num_prunable and not num_min <= fv <= num_max:
-            return False
+            # out-of-range refutes only the NUMERIC rows: min/max never
+            # saw string values, yet a string row can cross-repr match
+            # the probe (row {"score": "10"} vs score == 10, §IV-B).
+            # With an exact repr set that string side is already refuted
+            # (a cross-matching string row's repr is json_scalar(v),
+            # probed above); saturated, fall back to the string value
+            # set — a string row s matches iff json_scalar(s) == s ==
+            # json_scalar(v), so ONE probe suffices — and if that
+            # saturated too, nothing may refute
+            if reprs is not None:
+                return False
+            if strs is None:
+                return True
+            return json_scalar(v) in strs
         if reprs is None:
             return True
         return any(r in reprs for r in _num_reprs(fv))

@@ -33,13 +33,31 @@ def _enc(s: str) -> bytes:
     return s.encode("utf-8")
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class SimplePredicate:
     """One string-matchable predicate over a JSON record."""
 
     kind: Kind
     key: str
     value: Any = None  # str | int | float | bool | None
+
+    # Equality is TYPE-STRICT on the value: Python's cross-type numeric
+    # equality (10 == 10.0 == True) would alias predicates whose exact
+    # semantics differ — ``json_scalar(10)`` is "10" but
+    # ``json_scalar(10.0)`` is "10.0", so ``score = 10`` matches a string
+    # row "10" while ``score = 10.0`` does not.  Clause caches and the
+    # pushed-clause lookup (``PushdownPlan.pushed_in``) key on predicate
+    # equality, so aliasing would let an earlier query's cached mask or
+    # bitvector answer a later, semantically different one.
+    def __eq__(self, other: object):
+        if not isinstance(other, SimplePredicate):
+            return NotImplemented
+        return (self.kind is other.kind and self.key == other.key
+                and type(self.value) is type(other.value)
+                and self.value == other.value)
+
+    def __hash__(self) -> int:
+        return hash((self.kind, self.key, type(self.value), self.value))
 
     # ---- pattern compilation (paper Table I) -------------------------------
     def patterns(self) -> tuple[bytes, ...]:

@@ -430,6 +430,24 @@ class CiaoStore:
         """Promoted raw remainders (no bitvectors), promotion order."""
         return self.jit_segments
 
+    def resident_group_rows(self) -> dict[tuple[int, int], int]:
+        """Per-(epoch, tier) row counts over the queryable segments —
+        sealed + open-builder + JIT-promoted, i.e. exactly the population
+        a scan reports as scanned/skipped.  Counts come from segment and
+        builder attributes, NOT ``blocks``: a partition-pruned shard must
+        account its residents without materializing open builder views
+        (a column build per open coverage group, invalidated by every
+        ingest) for rows nobody will touch."""
+        out: dict[tuple[int, int], int] = {}
+        for seg in (*self.segments, *self.jit_segments):
+            k = (seg.epoch, seg.tier)
+            out[k] = out.get(k, 0) + seg.n_rows
+        for b in self._builders.values():
+            if b.n_rows:
+                k = (b.epoch, b.tier)
+                out[k] = out.get(k, 0) + b.n_rows
+        return out
+
     @property
     def epoch(self) -> int:
         return self.plan.epoch

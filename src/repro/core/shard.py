@@ -34,6 +34,7 @@ schema gate.
 """
 from __future__ import annotations
 
+import bisect
 import json
 import os
 import time
@@ -166,10 +167,14 @@ class ShardRouter:
         if self.key is None or obj is None or self.key not in obj:
             return _crc(rec) % self.n_shards
         v = obj[self.key]
+        # range-routes exactly the values the partition summaries admit
+        # to their numeric bounds (_f64_exact also rejects NaN and ints
+        # beyond float64, which would overflow float(v)); bisect, not
+        # np.searchsorted — per-record numpy dispatch dominates routing
+        # cost on large chunks
         if self.mode == "range" and isinstance(v, (int, float)) \
-                and not isinstance(v, bool) and v == v:
-            return int(np.searchsorted(
-                np.asarray(self.boundaries), float(v), side="right"))
+                and not isinstance(v, bool) and _f64_exact(v):
+            return bisect.bisect_right(self.boundaries, float(v))
         return _crc(json_scalar(v).encode()) % self.n_shards
 
     def route(self, objs: Sequence[dict], recs: Sequence[bytes]
@@ -236,8 +241,14 @@ class _KeySummary:
                 self.reprs = None
 
     def to_obj(self) -> dict:
+        # empty bounds (no numeric value seen) serialize as null: the
+        # +/-inf sentinels would become json.dump's non-standard
+        # Infinity/-Infinity tokens and break every strict (RFC 8259)
+        # consumer of the checkpoint manifest
+        empty = self.num_min > self.num_max
         return {
-            "min": self.num_min, "max": self.num_max,
+            "min": None if empty else self.num_min,
+            "max": None if empty else self.num_max,
             "num_prunable": self.num_prunable,
             "any_notnull": self.any_notnull,
             "reprs": None if self.reprs is None else sorted(self.reprs),
@@ -247,8 +258,8 @@ class _KeySummary:
     @classmethod
     def from_obj(cls, d: dict) -> "_KeySummary":
         ks = cls()
-        ks.num_min = float(d["min"])
-        ks.num_max = float(d["max"])
+        ks.num_min = np.inf if d["min"] is None else float(d["min"])
+        ks.num_max = -np.inf if d["max"] is None else float(d["max"])
         ks.num_prunable = bool(d["num_prunable"])
         ks.any_notnull = bool(d["any_notnull"])
         ks.reprs = None if d["reprs"] is None else set(d["reprs"])
@@ -830,9 +841,11 @@ class ShardedScanner:
     The three-level skipping cascade in execution order:
 
       1. **partition prune** — shards whose :class:`ShardSummary` refutes
-         any query clause are skipped whole (their resident rows land in
-         the merged result as ``rows_skipped``, attributed per (epoch,
-         tier) group; no JIT promotion happens in a refuted shard);
+         any query clause are skipped whole (their loaded + JIT segment
+         rows land in the merged result as ``rows_skipped``, attributed
+         per (epoch, tier) group — the same population a scanned shard
+         reports; no JIT promotion happens in a refuted shard, so its
+         raw-remainder rows stay out of the accounting on both paths);
       2. **per-shard scan** — surviving shards run the monolithic
          :class:`DataSkippingScanner` (zone-prune -> pushed-bitvector AND
          -> vectorized residual) concurrently on a thread pool;
@@ -915,17 +928,28 @@ class ShardedScanner:
             merged = ScanResult(count=0, rows_scanned=0, rows_skipped=0,
                                 raw_parsed=0, time_s=0.0,
                                 used_skipping=False)
-        # refuted shards contribute their resident rows as skipped — a
-        # plain accumulation into the merged groups (no per-query merge
-        # of per-shard result objects for data nobody scanned)
+        # refuted shards contribute their resident SEGMENT rows (loaded +
+        # JIT-promoted) as skipped — the same population a scanned shard
+        # reports, so skip rates stay comparable between the pruned and
+        # scanned paths (and with the unsharded scanner).  Raw-remainder
+        # rows appear on neither path: a scanned shard only surfaces them
+        # once promotion parses them (raw_parsed), and a refuted shard
+        # never promotes
         for s in pruned:
             merged.shards_pruned += 1
-            for (e, t), n in store.shards[s].group_records.items():
+            for (e, t), n in store.shards[s].resident_group_rows().items():
                 merged.group(e, t).rows_skipped += n
                 merged.rows_skipped += n
         if pruned:
             merged.sort_groups()
-        pushed = store.pushed_by_epoch(q)
-        merged.used_skipping = any(pushed.values())
+        if not results:
+            # nothing scanned (all shards pruned or empty): resolve the
+            # current epoch's pushdown the way an empty monolithic scan
+            # would.  When shards DID run, their merged used_skipping is
+            # already correct — the per-shard scanner resolved pushdown
+            # per SEGMENT epoch, which a current-epoch-only recomputation
+            # here would clobber (e.g. a clause pushed under epoch 0 but
+            # dropped by the epoch-1 replan must still report True)
+            merged.used_skipping = any(store.pushed_by_epoch(q).values())
         merged.time_s = time.perf_counter() - t0
         return merged

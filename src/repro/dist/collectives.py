@@ -61,34 +61,46 @@ def tree_reduce(items: Sequence[T], fn: Callable[[T, T], T]) -> T:
     return xs[0]
 
 
+def _quantized_psum(x, axis: str):
+    """One leaf of :func:`compressed_allreduce`: int8 quantize -> int32
+    psum -> dequantize.  Must run inside a shard_map/pmap over ``axis``.
+
+    The quantization scale is AGREED over ``axis`` first (scalar pmax of
+    the per-device amax): dequantizing the summed int32 payload with a
+    device-LOCAL scale is silently wrong the moment inputs differ across
+    the axis — and gradients, the payload this exists for, always do.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    x = jnp.asarray(x)
+    out_dtype = (x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                 else jnp.float32)
+    xf = x.astype(jnp.float32)
+    amax = lax.pmax(jnp.max(jnp.abs(xf)), axis)
+    scale = jnp.where(amax > 0, amax, jnp.float32(1.0)) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    s = lax.psum(q.astype(jnp.int32), axis)
+    return (s.astype(jnp.float32) * scale).astype(out_dtype)
+
+
 def compressed_allreduce(tree: Any, mesh, axis: str = "pod") -> Any:
     """int8-compressed SUM all-reduce of a pytree over mesh ``axis``.
 
-    Per leaf: quantize to int8 with scale ``max|x| / 127`` (computed on
-    each device; identical across devices for replicated inputs), psum
-    the int8 payload in int32 over ``axis``, dequantize with the local
-    scale.  Wire cost is 1/4 of an f32 all-reduce; the error per element
-    is bounded by ``n_axis * scale / 2``.
+    Per leaf (:func:`_quantized_psum`): the per-device ``max|x|`` is
+    pmax-agreed over ``axis``, values quantize to int8 with the shared
+    scale ``amax / 127``, the int8 payload psums in int32, and the sum
+    dequantizes with the same shared scale.  Wire cost is 1/4 of an f32
+    all-reduce; the error per element is bounded by
+    ``n_axis * scale / 2``.
     """
     import jax
-    import jax.numpy as jnp
-    from jax import lax
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def _leaf(x):
-        x = jnp.asarray(x)
-        out_dtype = (x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
-                     else jnp.float32)
-        xf = x.astype(jnp.float32)
-        amax = jnp.max(jnp.abs(xf))
-        scale = jnp.where(amax > 0, amax, jnp.float32(1.0)) / 127.0
-        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-        s = lax.psum(q.astype(jnp.int32), axis)
-        return (s.astype(jnp.float32) * scale).astype(out_dtype)
-
-    f = shard_map(lambda t: jax.tree.map(_leaf, t), mesh=mesh,
-                  in_specs=(P(),), out_specs=P(), check_rep=False)
+    f = shard_map(
+        lambda t: jax.tree.map(lambda x: _quantized_psum(x, axis), t),
+        mesh=mesh, in_specs=(P(),), out_specs=P(), check_rep=False)
     return f(tree)
 
 

@@ -381,6 +381,29 @@ def test_load_migrates_format3_checkpoint(tmp_path):
     assert (a.count, a.rows_scanned) == (b.count, b.rows_scanned)
 
 
+def test_scan_counts_independent_of_query_order_across_value_types():
+    # Regression: segment clause caches (and the pushed-clause lookup)
+    # key on clause equality, and Python's 10 == 10.0 aliased the int and
+    # float probes — the first query's cached mask answered the second,
+    # so counts depended on query ORDER.  The probes differ exactly on
+    # string rows: json_scalar(10) = "10" matches the row "10",
+    # json_scalar(10.0) = "10.0" does not.
+    objs = [{"score": 100 + i} for i in range(20)] + [{"score": "10"}] * 4
+    recs = [json.dumps(o).encode() for o in objs]
+    q_int = Query((clause(key_value("score", 10)),))
+    q_float = Query((clause(key_value("score", 10.0)),))
+    oracles = {q: sum(1 for o in objs if q.matches_exact(o))
+               for q in (q_int, q_float)}
+    assert oracles[q_int] == 4 and oracles[q_float] == 0
+    for order in ((q_int, q_float), (q_float, q_int)):
+        store = CiaoStore(PushdownPlan(clauses=[]), segment_capacity=64)
+        chunk = encode_chunk(recs)
+        store.ingest_chunk(chunk, np.zeros((0, chunk.n_records), bool))
+        s = DataSkippingScanner(store, log_queries=False)
+        for q in order:
+            assert s.scan(q).count == oracles[q]
+
+
 def test_xla_and_reduce_matches_numpy():
     from repro.kernels.residual import bv_and_many_xla, popcount_xla
 

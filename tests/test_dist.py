@@ -197,6 +197,40 @@ def test_compressed_allreduce():
     assert out["rel_b"] < 0.01
 
 
+@needs_reduce
+def test_compressed_allreduce_device_varying_inputs():
+    """The quantization scale must be AGREED across the axis: with
+    device-local scales, the summed int8 payload dequantizes to garbage
+    the moment per-device inputs differ (regression: 2 devices holding
+    1.0 and 100.0 summed to 8.0 instead of ~101)."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import _quantized_psum
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((8,), ("pod",))
+        vals = (1.0, 100.0, 3.0, 7.0, 0.5, 50.0, 2.0, 9.0)
+        x = jnp.stack([jnp.full((16,), v, jnp.float32) for v in vals])
+        f = shard_map(lambda s: _quantized_psum(s[0], "pod")[None],
+                      mesh=mesh, in_specs=(P("pod"),),
+                      out_specs=P("pod"), check_rep=False)
+        out = np.asarray(f(x))
+        want = float(sum(vals))
+        # every device must hold the same dequantized sum, within the
+        # agreed-scale error bound n_axis * scale / 2
+        spread = float(np.abs(out - out[0, 0]).max())
+        err = float(np.abs(out - want).max())
+        bound = len(vals) * (max(vals) / 127) / 2
+        print(json.dumps({"err": err, "bound": bound, "spread": spread}))
+    """)
+    out = run_sub(code)
+    assert out["spread"] == 0.0
+    assert out["err"] <= out["bound"] + 1e-6
+
+
 @needs_full_dist
 def test_sharded_decode_attention():
     code = textwrap.dedent("""

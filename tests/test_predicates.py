@@ -33,6 +33,27 @@ def test_key_value_segment_semantics():
     assert key_value("score", 2).matches_raw(rec)  # substring of 22: FP ok
 
 
+def test_predicate_equality_is_type_strict():
+    # Python's 10 == 10.0 == True-style cross-type equality must NOT leak
+    # into predicate identity: json_scalar(10) is "10" but
+    # json_scalar(10.0) is "10.0", so the two predicates match different
+    # row sets, and every clause cache / pushed-clause lookup keys on
+    # equality.  (Regression: an earlier ``score = 10`` scan's cached
+    # mask answered a later ``score = 10.0`` scan.)
+    assert key_value("a", 10) == key_value("a", 10)
+    assert key_value("a", 10) != key_value("a", 10.0)
+    assert key_value("a", 1) != key_value("a", True)
+    assert key_value("a", 0) != key_value("a", False)
+    assert hash(key_value("a", 10)) != hash(key_value("a", 10.0))
+    assert hash(key_value("a", 1)) != hash(key_value("a", True))
+    assert clause(key_value("a", 10)) != clause(key_value("a", 10.0))
+    # row semantics really do differ across the alias
+    assert key_value("a", 10).matches_exact({"a": "10"})
+    assert not key_value("a", 10.0).matches_exact({"a": "10"})
+    assert key_value("a", True).matches_exact({"a": True})
+    assert not key_value("a", 1).matches_exact({"a": True})
+
+
 def test_key_value_multiple_key_occurrences():
     # key string also appears inside a text field before the real pair
     rec = b'{"text":"age is a number","age":7}'

@@ -188,6 +188,7 @@ def test_sharded_counts_bit_identical_to_unsharded(ycsb, mode):
             for sc in scanners:
                 r = sc.scan(q)
                 assert r.count == oracle, (q.describe(), r.count, oracle)
+                assert r.used_skipping == a.used_skipping, q.describe()
                 assert list(r.groups) == sorted(r.groups)
                 any_pruned += r.shards_pruned
     finally:
@@ -378,6 +379,138 @@ def test_nan_column_never_wrongly_skips_sharded_or_not():
                for s in plain.blocks + plain.jit_blocks)
 
 
+def test_used_skipping_parity_across_epochs(ycsb):
+    recs, objs, ranked = ycsb
+    fam0, fam1 = _families(ranked)
+    plain = _build(CiaoStore(fam0, segment_capacity=512), recs, fam0, fam1)
+    store = _build(
+        ShardedCiaoStore(fam0,
+                         router=ShardRouter(n_shards=4, key="linear_score"),
+                         segment_capacity=512),
+        recs, fam0, fam1)
+    # this clause was pushed by the epoch-0 plan but dropped by the
+    # epoch-1 replan: used_skipping must come from pushdown resolved per
+    # SEGMENT epoch (ORed through the merge), not from a current-epoch
+    # recomputation (regression: the executor clobbered the merged flag)
+    q_old = Query((fam0.plan.clauses[5],))
+    assert fam0.plan.clauses[5] not in fam1.plan.clauses
+    mono = DataSkippingScanner(plain, log_queries=False).scan(q_old)
+    with ShardedScanner(store, log_queries=False) as sc:
+        r = sc.scan(q_old)
+    assert mono.used_skipping
+    assert r.used_skipping == mono.used_skipping
+    assert r.count == mono.count
+
+
+def test_range_router_huge_int_values_fall_back_to_hash():
+    r = ShardRouter(n_shards=4, key="v", mode="range",
+                    boundaries=(10.0, 20.0, 30.0))
+    # > float64 max: float(v) raises OverflowError (regression: killed
+    # the whole ingest_chunk); routes by the hash rule instead
+    big = 10 ** 400
+    rec = json.dumps({"v": big}).encode()
+    sid = r.shard_of({"v": big}, rec)
+    assert 0 <= sid < 4
+    assert sid == r.shard_of({"v": big}, rec)
+    # f64-INEXACT ints also hash-route: the partition summaries never
+    # admit them to the numeric bounds, so range clustering is moot
+    assert 0 <= r.shard_of({"v": 2 ** 63 + 1}, b"x") < 4
+    # ordinary numerics still range-route by boundary
+    assert r.shard_of({"v": 5.0}, b"x") == 0
+    assert r.shard_of({"v": 15}, b"x") == 1
+    assert r.shard_of({"v": 35}, b"x") == 3
+
+
+# ---------------------------------------------------------------------------
+# saturated summaries vs cross-representation strings (regression)
+# ---------------------------------------------------------------------------
+
+def _crossrepr_records():
+    """200 distinct numeric scores (saturates a capped repr set) plus
+    string ``"10"`` rows that cross-repr match the numeric probe 10 —
+    which lies OUTSIDE the numeric min/max of [100, 299]."""
+    rows = [{"score": 100 + i, "tag": "n"} for i in range(200)]
+    rows += [{"score": "10", "tag": "s"}] * 8
+    random.Random(5).shuffle(rows)
+    return [json.dumps(r).encode() for r in rows], rows
+
+
+def test_saturated_summary_keeps_cross_repr_strings_possible():
+    _, rows = _crossrepr_records()
+    sat = ShardSummary(value_cap=16)
+    sat.update(rows)
+    assert sat._keys["score"].reprs is None
+    assert sat._keys["score"].strs is not None
+    # the numeric bounds only summarize numeric rows: an out-of-range
+    # probe must not refute the string "10" that cross-repr matches it
+    assert sat.term_possible(key_value("score", 10))
+    # ...while a probe matching no string still refutes via the str set —
+    # including the float spelling (json_scalar(10.0) = "10.0" != "10")
+    assert not sat.term_possible(key_value("score", 10.0))
+    assert not sat.term_possible(key_value("score", 11))
+    # both sets saturated: nothing may refute an out-of-range probe
+    tiny = ShardSummary(value_cap=2)
+    tiny.update([{"k": 1}, {"k": 2}, {"k": 3},
+                 {"k": "a"}, {"k": "b"}, {"k": "c"}])
+    assert tiny.term_possible(key_value("k", 99))
+
+
+def test_saturated_shard_summary_never_wrongly_prunes():
+    recs, rows = _crossrepr_records()
+    plan = PushdownPlan(clauses=[clause(key_value("tag", "n"))])
+    eng = NumpyEngine()
+    plain = CiaoStore(plan, segment_capacity=64)
+    sharded = ShardedCiaoStore(
+        plan, router=ShardRouter(n_shards=4, key="score"),
+        segment_capacity=64, summary_value_cap=16)
+    for store in (plain, sharded):
+        for lo in range(0, len(recs), 50):
+            chunk = encode_chunk(recs[lo: lo + 50])
+            store.ingest_chunk(chunk, eng.eval_fused(chunk, plan.clauses))
+    # the regression's trigger really is armed: repr summaries saturated
+    assert any(ks.reprs is None
+               for s in sharded.summaries for ks in s._keys.values())
+    queries = [Query((clause(key_value("score", v)),))
+               for v in (10, 10.0, "10", 150, 11, 9999)]
+    # the regression case: int probe 10 cross-repr matches the "10" rows
+    assert sum(1 for o in rows if queries[0].matches_exact(o)) == 8
+    s_plain = DataSkippingScanner(plain, log_queries=False)
+    with ShardedScanner(sharded, log_queries=False) as s_sh:
+        for q in queries:
+            oracle = sum(1 for o in rows if q.matches_exact(o))
+            assert s_plain.scan(q).count == oracle
+            assert s_sh.scan(q).count == oracle
+        # pruning still fires on a truly absent value (not over-conservative)
+        assert s_sh.scan(Query((clause(key_value("score", 9999)),))
+                         ).shards_pruned > 0
+
+
+def test_pruned_shard_skip_accounting_matches_scanned_population():
+    recs, _ = _crossrepr_records()
+    plan = PushdownPlan(clauses=[clause(key_value("tag", "n"))])
+    eng = NumpyEngine()
+    sharded = ShardedCiaoStore(
+        plan, router=ShardRouter(n_shards=4, key="score"),
+        segment_capacity=64, summary_value_cap=16)
+    for lo in range(0, len(recs), 50):
+        chunk = encode_chunk(recs[lo: lo + 50])
+        sharded.ingest_chunk(chunk, eng.eval_fused(chunk, plan.clauses))
+    with ShardedScanner(sharded, log_queries=False) as s_sh:
+        r = s_sh.scan(Query((clause(key_value("score", 9999)),)))
+    assert r.count == 0
+    assert r.shards_pruned == sharded.n_shards
+    # pruned shards report skips over the SAME population a scanned shard
+    # does — loaded + JIT segment rows; never-promoted raw residents stay
+    # out of the accounting on both paths
+    seg_rows = sum(seg.n_rows for s in sharded.shards
+                   for seg in (*s.blocks, *s.jit_blocks))
+    raw_rows = sum(rr.n for s in sharded.shards for rr in s.raw)
+    assert raw_rows > 0
+    assert r.rows_skipped == seg_rows
+    assert r.rows_scanned == 0
+    assert sum(g.rows_skipped for g in r.groups.values()) == seg_rows
+
+
 # ---------------------------------------------------------------------------
 # checkpoints: format 5 + 2/3/4 migrations + offline reshard
 # ---------------------------------------------------------------------------
@@ -400,6 +533,12 @@ def test_format5_roundtrip(tmp_path, ycsb):
     before = _scan_counts(store, queries)
     path = str(tmp_path / "ckpt5")
     store.save(path)
+    # the manifest must be STRICT RFC-8259 JSON: empty numeric bounds
+    # serialize as null, never as json.dump's Infinity/-Infinity tokens
+    # (regression: string-only keys broke every non-Python consumer)
+    manifest_text = (tmp_path / "ckpt5" / "manifest.json").read_text()
+    json.loads(manifest_text, parse_constant=lambda tok: pytest.fail(
+        f"non-standard JSON token {tok!r} in manifest"))
     loaded = ShardedCiaoStore.load(path)
     assert loaded.n_shards == 4
     assert loaded.router.to_obj() == router.to_obj()
