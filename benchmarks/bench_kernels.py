@@ -102,14 +102,21 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
     chunk_bytes = chunk.data.nbytes
 
     rows = []
+    # backend/device/interpret metadata per row: artifact consumers must
+    # know WHAT executed each number (a pallas figure measured under the
+    # interpreter is not a TPU figure), so the schema requires them
+    import jax
+
+    platform = jax.devices()[0].platform
     engines = [
-        ("python-bytes-find", PythonEngine()),
-        ("numpy-vectorized", NumpyEngine()),
-        ("xla-jit", KernelEngine(backend="xla")),
-        ("pallas-interpret", KernelEngine(backend="pallas_interpret")),
+        ("python-bytes-find", PythonEngine(), "python", "host", False),
+        ("numpy-vectorized", NumpyEngine(), "numpy", "host", False),
+        ("xla-jit", KernelEngine(backend="xla"), "xla", platform, False),
+        ("pallas-interpret", KernelEngine(backend="pallas_interpret"),
+         "pallas_interpret", platform, True),
     ]
     expected = None
-    for name, eng in engines:
+    for name, eng, backend, device, interpret in engines:
         eng.eval(chunk, clauses)  # warm caches / jit
         best = np.inf
         out = None
@@ -125,6 +132,9 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
         us_per_record = best / n_records * 1e6
         rows.append({
             "engine": name,
+            "backend": backend,
+            "device": device,
+            "interpret": interpret,
             "records_per_s": int(rec_per_s),
             "us_per_record": round(us_per_record, 3),
             "effective_GBps": round(chunk_bytes * n_clauses / best / 1e9, 3),
@@ -169,6 +179,9 @@ def main(n_records: int = 4000, n_clauses: int = 12, repeats: int = 3):
     v5e_bound = 819e9 / stride / n_clauses
     rows.append({
         "engine": "tpu-v5e-roofline-bound",
+        "backend": "analytic",
+        "device": "tpu-v5e",
+        "interpret": False,
         "records_per_s": int(v5e_bound),
         "us_per_record": round(1e6 / v5e_bound, 4),
         "effective_GBps": 819.0,

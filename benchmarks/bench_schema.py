@@ -36,6 +36,11 @@ def _check_fields(row: dict, spec: dict[str, type | tuple], where: str) -> None:
 
 _ENGINE_ROW = {
     "engine": str,
+    # execution provenance: a pallas number measured under the interpreter
+    # must never read as a TPU number in the tracked trajectory
+    "backend": str,
+    "device": str,
+    "interpret": bool,
     "records_per_s": numbers.Integral,
     "us_per_record": numbers.Real,
     "effective_GBps": numbers.Real,
@@ -247,6 +252,71 @@ def validate_shard(obj: dict) -> None:
              f"8-shard speedup {obj['speedup_8']} < required {floor}x")
 
 
+_DEVICE_SIDE = {
+    "scan_s": numbers.Real,
+    "us_per_query": numbers.Real,
+    "records_per_s": numbers.Integral,
+}
+
+
+def validate_device(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid device artifact.
+
+    Beyond shape, this gates the device scan plane's CLAIM (DESIGN.md
+    §15): counts bit-identical to the quiesced host oracle, ZERO
+    steady-state host->device segment uploads, the fused batched path
+    >= 2x the numpy-vectorized reference of the SAME plane scan on the
+    selective workload (full-size; reduced-size ``--quick`` runs gate
+    against collapse at 0.5x; the host skipping scanner is reported as
+    ``host_skipping`` context, not gated), a batch of 8 queries >= 3x
+    over 8 sequential device scans (>= 0.8x quick), and a roofline
+    fraction computed from the analytic flops model — present,
+    positive, and <= 1 (nothing beats the hardware bound).
+    """
+    _require(isinstance(obj, dict), "device", "top level must be an object")
+    for key in ("quick", "backend", "device", "interpret", "n_records",
+                "n_segments", "n_queries", "numpy", "host_skipping",
+                "device_batched", "device_sequential", "speedup",
+                "batch8_speedup", "counts_match", "uploads_steady",
+                "roofline", "roofline_frac"):
+        _require(key in obj, "device", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "device", "'quick' must be bool")
+    _require(isinstance(obj["backend"], str) and obj["backend"],
+             "device", "backend must be a non-empty string")
+    _require(isinstance(obj["interpret"], bool), "device",
+             "'interpret' must be bool")
+    for side in ("numpy", "host_skipping", "device_batched",
+                 "device_sequential"):
+        _check_fields(obj[side], _DEVICE_SIDE, side)
+        _require(obj[side]["scan_s"] > 0, side, "scan_s must be positive")
+    _require(obj["counts_match"] is True, "device",
+             "device counts diverged from the quiesced host oracle")
+    _require(obj["uploads_steady"] == 0, "device",
+             "steady-state scans re-uploaded segment data "
+             f"({obj['uploads_steady']} transfers; the resident plane is "
+             "not resident)")
+    _require(obj["n_segments"] >= 2, "device", "need >= 2 segments")
+    _require(obj["n_queries"] >= 10, "device", "need >= 10 workload queries")
+    floor = 0.5 if obj["quick"] else 2.0
+    _require(obj["speedup"] >= floor, "device",
+             f"device speedup {obj['speedup']} < required {floor}x over "
+             "numpy-vectorized")
+    b_floor = 0.8 if obj["quick"] else 3.0
+    _require(obj["batch8_speedup"] >= b_floor, "device",
+             f"batch-of-8 speedup {obj['batch8_speedup']} < required "
+             f"{b_floor}x over 8 sequential scans")
+    roof = obj["roofline"]
+    _require(isinstance(roof, dict), "roofline", "must be an object")
+    for key in ("device_flops", "device_bytes", "step_time_s",
+                "measured_s", "dominant"):
+        _require(key in roof, "roofline", f"missing key {key!r}")
+    frac = obj["roofline_frac"]
+    _require(isinstance(frac, numbers.Real) and not isinstance(frac, bool),
+             "device", "roofline_frac must be a number")
+    _require(0.0 < frac <= 1.0, "device",
+             f"roofline_frac {frac} outside (0, 1]")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -257,6 +327,8 @@ _VALIDATORS = {
     "BENCH_scan.json": validate_scan,
     "bench_shard.json": validate_shard,
     "BENCH_shard.json": validate_shard,
+    "bench_device.json": validate_device,
+    "BENCH_device.json": validate_device,
 }
 
 

@@ -88,13 +88,25 @@ def write_shard_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_device_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_device.json",
+) -> list[str]:
+    """Write the device-scan benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_device
+
+    return _write_gated_artifacts(
+        out, validator=validate_device, detail_name="bench_device.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,shard,roofline")
+             "scan,shard,device,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -238,6 +250,23 @@ def main() -> None:
             "shard_store", at8["us_per_query"],
             f"x{out['speedup_4']}@4;x{out['speedup_8']}@8;"
             f"pruned_{out['selective_pruned_fraction']:.0%};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "device" in only:
+        from . import bench_device
+
+        out = bench_device.run(
+            n_records=6144 if args.quick else 24576,
+            repeats=2 if args.quick else 3,
+            quick=args.quick,
+        )
+        write_device_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "device_scan", out["device_batched"]["us_per_query"],
+            f"x{out['speedup']}_vs_numpy;batch8_x{out['batch8_speedup']};"
+            f"uploads_steady_{out['uploads_steady']};"
+            f"roofline_frac_{out['roofline_frac']};"
             f"counts_match_{out['counts_match']}",
         ))
 

@@ -233,6 +233,54 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, n_params: int,
     return CostEstimate(fwd, hbm, {"cache_read": cache_read, "param_read": n_active * p_bytes})
 
 
+def scan_estimate(*, n_rows: int, n_terms: int, n_clauses: int,
+                  n_queries: int, n_slots: int) -> CostEstimate:
+    """Analytic FLOPs / memory-bytes of ONE fused device scan launch.
+
+    Walks the exact stages of ``kernels.scan_fused.scan_core_xla`` over
+    N = n_rows plane rows, T terms, C clauses, Q queries and S1 slot
+    buckets — every term is derived from the implementation, not a hand
+    constant, so the roofline fraction in ``BENCH_device.json`` tracks
+    the kernel it measures:
+
+      * term eval — per (T, N) element: 4 mask tests, the EXACT code
+        compare, the 3-candidate numeric-repr compare + any-reduce, the
+        LUT index arithmetic, null/bool-compat logic and the 4-way kind
+        select — 23 integer/predicate ops;
+      * clause membership matmul  (C, T) @ (T, N)   -> 2·C·T·N FLOPs;
+      * query violation matmul    (Q, C) @ (C, N)   -> 2·Q·C·N FLOPs;
+      * pushed AND + zone mask + hit combine        -> 4·Q·N;
+      * per-slot popcount scatter (counts + cands)  -> 2·Q·N.
+
+    Memory traffic (read-once streaming, the roofline's HBM term): the
+    gathered plane columns (4 uint8 masks + 2 int32 code columns per
+    term row), the per-row slot id + clause word, the per-slot parameter
+    gathers (code_a, lut_off int32; num_codes int32×3; LUT probe uint8),
+    one boolean term/clause/query intermediate each, and the (Q, S1)
+    int32 outputs.
+    """
+    N, T, C, Q = n_rows, n_terms, n_clauses, n_queries
+    S1 = n_slots + 1
+    flops = {
+        "term_eval": 23.0 * T * N,
+        "clause_matmul": 2.0 * C * T * N,
+        "query_matmul": 2.0 * Q * C * N,
+        "pushed_and_hit": 4.0 * Q * N,
+        "popcount_scatter": 2.0 * Q * N,
+    }
+    bytes_ = {
+        "plane_gather": (4 * 1 + 2 * 4) * T * N,
+        "row_meta": (4 + 4) * N,
+        "param_gather": (4 + 4 + 3 * 4 + 1) * T * N,
+        "intermediates": (T + C + Q) * N,
+        "outputs": 2 * 4 * Q * S1,
+    }
+    bd = {"flops": flops, "bytes": bytes_,
+          "shape": {"n_rows": N, "n_terms": T, "n_clauses": C,
+                    "n_queries": Q, "n_slots": n_slots}}
+    return CostEstimate(sum(flops.values()), sum(bytes_.values()), bd)
+
+
 def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
     """Total KV/recurrent cache bytes (bf16) for context length S."""
     if cfg.family == "rwkv":

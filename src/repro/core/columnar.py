@@ -382,6 +382,13 @@ class ColumnarSegment:
         """Parsed row objects (decoded fresh — differential/test use only)."""
         return [json.loads(self.record(i)) for i in range(self.n_rows)]
 
+    def plane_nbytes(self, k_cap: int) -> int:
+        """Device bytes this segment occupies in a resident plane with
+        ``k_cap`` key rows (DESIGN.md §15): four uint8 masks + two int32
+        code columns per key row, plus the int32 slot id and uint32
+        clause word per row."""
+        return self.n_rows * (k_cap * (4 * 1 + 2 * 4) + 8)
+
     # -- pushed-bitvector candidates ----------------------------------------
     def pushed_mask(self, pushed: Sequence[int],
                     and_reduce: Callable | None = None) -> np.ndarray:

@@ -1,0 +1,447 @@
+"""Device-resident COUNT(*) scanners (DESIGN.md §15).
+
+:class:`DeviceScanner` is the drop-in device counterpart of
+:class:`~repro.core.server.DataSkippingScanner`: same ``scan(q) ->
+ScanResult`` contract, bit-identical counts and per-(epoch, tier)
+accounting, plus ``scan_batch`` — N queries compiled together
+(:func:`~repro.kernels.scan_fused.compile_scan_batch`) and evaluated in
+ONE device launch over the resident segment plane.  The division of
+labor per scan:
+
+  host   — pushdown resolution (``store.pushed_by_epoch``), raw
+           promotion, zone-prune verdicts (memoized
+           ``ColumnarSegment.clause_possible``), parameter tables;
+  device — pushed-bitvector AND, lowered residual eval, per-(query,
+           slot) popcount for every cached segment, all queries fused;
+  host   — fold device counts + host-fallback segments (open builder
+           tails, evicted/oversized segments, non-lowerable queries —
+           scanned by the embedded ``DataSkippingScanner``) into the
+           standard accounting.
+
+:class:`ShardedDeviceScanner` mirrors
+:class:`~repro.core.shard.ShardedScanner`'s three-level cascade
+(partition prune -> per-shard scan -> deterministic
+``merge_scan_results`` through ``dist.collectives.tree_reduce``) with a
+per-shard :class:`~repro.core.device_cache.DeviceSegmentCache`.  When
+every surviving shard can own a jax device
+(``dist.sharding.scan_mesh``), the per-shard launches collapse into one
+``shard_map`` SPMD program over a ``("shards",)`` mesh — shard planes
+are padded to common buckets, stacked, and each device evaluates its
+own shard's rows; otherwise shards launch sequentially with identical
+results.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_cache import (
+    CacheSlot, DeviceSegmentCache, _grow1, _grow2,
+)
+from repro.core.predicates import Query
+from repro.core.server import CiaoStore, DataSkippingScanner, ScanResult
+from repro.core.shard import ShardedCiaoStore, merge_scan_results
+from repro.dist.sharding import scan_mesh
+from repro.kernels.scan_fused import (
+    DevicePlaneArrays, ScanBatch, ScanParams, bucket_pow2,
+    compile_scan_batch, scan_core_numpy, scan_core_xla, scan_counts,
+)
+
+
+@dataclass
+class _Prepared:
+    """Host-side launch state for one store's query batch."""
+
+    queries: tuple[Query, ...]
+    batch: ScanBatch
+    pushed_maps: list
+    promoted: list[dict]
+    jit_vis: list[int]        # per-query visible jit-segment prefix
+    slots: list[CacheSlot]
+    pushed_bits: np.ndarray   # uint32[Q, S]
+    active: np.ndarray        # uint8[Q, S]
+    pruned: np.ndarray        # bool[Q, S] zone map refuted a clause
+    params: ScanParams | None  # None when no device launch is needed
+
+
+class DeviceScanner:
+    """Device-plane scanner over a single :class:`CiaoStore`."""
+
+    def __init__(self, store: CiaoStore, *, backend: str = "xla",
+                 byte_budget: int = 256 << 20, log_queries: bool = True,
+                 r_blk: int = 512):
+        self.store = store
+        self.backend = backend
+        self.log_queries = log_queries
+        self.r_blk = r_blk
+        self.cache = DeviceSegmentCache(byte_budget=byte_budget)
+        self._synced_version = -1
+        # backend="numpy" baseline: host mirror of the plane, converted
+        # once per plane generation (not per scan)
+        self._np_plane = None
+        self._np_plane_src = None
+        # host fallback for open tails / evicted segments / non-lowerable
+        # queries; shares the store, so memoized segment state is shared
+        self._host = DataSkippingScanner(store, log_queries=False)
+
+    # -- public API ---------------------------------------------------------
+
+    def scan(self, q: Query) -> ScanResult:
+        return self.scan_batch([q])[0]
+
+    def scan_batch(self, queries: Sequence[Query]) -> list[ScanResult]:
+        """All queries in one launch; results bit-identical to sequential
+        ``DataSkippingScanner.scan`` calls in the same order."""
+        t0 = time.perf_counter()
+        if self.log_queries:
+            for q in queries:
+                self.store.log_query(q)
+        prep = self._prepare(queries)
+        counts, cands = self._launch(prep)
+        results = self._assemble(prep, counts, cands)
+        dt = time.perf_counter() - t0
+        for r in results:
+            r.time_s = dt / max(len(results), 1)
+        return results
+
+    # -- pipeline stages (ShardedDeviceScanner drives these directly) ------
+
+    def _prepare(self, queries: Sequence[Query], *,
+                 pushed_maps: list | None = None,
+                 promoted: list[dict] | None = None,
+                 jit_vis: list[int] | None = None) -> _Prepared:
+        store = self.store
+        queries = tuple(queries)
+        if pushed_maps is None:
+            pushed_maps = [store.pushed_by_epoch(q) for q in queries]
+        if promoted is None or jit_vis is None:
+            # promote raw remainders FIRST (same rows, same order as the
+            # sequential host scans), so the promoted segments are
+            # admitted by this very sync.  ``jit_vis`` snapshots the
+            # jit-segment list length after each query's promotion: query
+            # *i* of the batch must account exactly the jit segments a
+            # sequential run would have materialized by its turn, not the
+            # whole batch's promotions.  (The sharded executor passes
+            # these in precomputed — promotions there interleave with
+            # pruned-shard snapshots in global query order.)
+            promoted, jit_vis = [], []
+            for pm in pushed_maps:
+                promoted.append(dict(store.promote_uncovered_raw(pm)))
+                jit_vis.append(len(store.jit_blocks))
+        version = getattr(store, "data_version", None)
+        if version is None or version != self._synced_version:
+            self.cache.sync(store)
+            if version is not None:
+                self._synced_version = version
+        batch = compile_scan_batch(queries)
+        slots = list(self.cache.slots)
+        Q, S = len(queries), len(slots)
+        pushed_bits = np.zeros((Q, S), np.uint32)
+        active = np.zeros((Q, S), np.uint8)
+        pruned = np.zeros((Q, S), bool)
+        for si, slot in enumerate(slots):
+            seg = slot.seg
+            for qi, q in enumerate(queries):
+                if not batch.query_ok[qi]:
+                    continue   # whole query falls back to the host path
+                pushed = pushed_maps[qi][(seg.epoch, seg.n_covered)]
+                if slot.is_jit:
+                    if pushed:
+                        continue   # skipped whole by the assembly stage
+                elif pushed:
+                    bits = np.uint32(0)
+                    for p in pushed:
+                        bits |= np.uint32(1) << np.uint32(p)
+                    pushed_bits[qi, si] = bits
+                if any(not seg.clause_possible(c) for c in q.clauses):
+                    pruned[qi, si] = True
+                    continue
+                active[qi, si] = 1
+        params = None
+        if S and active.any():
+            params = self.cache.build_params(
+                batch, pushed_bits=pushed_bits, active=active)
+            self.cache.touch(
+                [si for si in range(S) if active[:, si].any()])
+        return _Prepared(
+            queries=queries, batch=batch, pushed_maps=pushed_maps,
+            promoted=promoted, jit_vis=jit_vis, slots=slots,
+            pushed_bits=pushed_bits, active=active, pruned=pruned,
+            params=params,
+        )
+
+    def _launch(self, prep: _Prepared):
+        if prep.params is None:
+            return None, None
+        plane = self.cache.plane
+        assert plane is not None
+        if self.backend == "numpy":
+            if self._np_plane_src is not plane.pres:
+                self._np_plane = tuple(np.asarray(a) for a in plane)
+                self._np_plane_src = plane.pres
+            return scan_core_numpy(*self._np_plane, prep.params)
+        return scan_counts(plane, prep.params, backend=self.backend,
+                           r_blk=self.r_blk)
+
+    def _assemble(self, prep: _Prepared, counts, cands) -> list[ScanResult]:
+        store = self.store
+        slot_of = {id(s.seg): i for i, s in enumerate(prep.slots)}
+        results: list[ScanResult] = []
+        for qi, q in enumerate(prep.queries):
+            pm = prep.pushed_maps[qi]
+            use_device = prep.batch.query_ok[qi]
+            result = ScanResult(count=0, rows_scanned=0, rows_skipped=0,
+                                raw_parsed=0, time_s=0.0,
+                                used_skipping=False)
+
+            def eat(seg, g, si):
+                if prep.pruned[qi, si]:
+                    g.rows_skipped += seg.n_rows
+                    g.segments_pruned += 1
+                    result.segments_pruned += 1
+                    return
+                cand = int(cands[qi, si])
+                g.rows_scanned += cand
+                g.rows_skipped += seg.n_rows - cand
+                g.count += int(counts[qi, si])
+
+            for seg in store.blocks:
+                g = result.group(seg.epoch, seg.tier)
+                si = slot_of.get(id(seg)) if use_device else None
+                if si is None:
+                    self._host._scan_segment(
+                        seg, q, pm[(seg.epoch, seg.n_covered)], g, result)
+                else:
+                    eat(seg, g, si)
+            for key, n in prep.promoted[qi].items():
+                result.group(*key).raw_parsed += n
+            for seg in store.jit_blocks[:prep.jit_vis[qi]]:
+                g = result.group(seg.epoch, seg.tier)
+                if pm[(seg.epoch, seg.n_covered)]:
+                    g.rows_skipped += seg.n_rows
+                    continue
+                si = slot_of.get(id(seg)) if use_device else None
+                if si is None:
+                    self._host._scan_segment(seg, q, (), g, result)
+                else:
+                    eat(seg, g, si)
+            result.sort_groups()
+            for g in result.groups.values():
+                result.count += g.count
+                result.rows_scanned += g.rows_scanned
+                result.rows_skipped += g.rows_skipped
+                result.raw_parsed += g.raw_parsed
+            result.used_skipping = any(pm.values())
+            results.append(result)
+        return results
+
+
+# ---------------------------------------------------------------------------
+# sharded scatter-gather
+# ---------------------------------------------------------------------------
+
+def _pad_params(p: ScanParams, T: int, C: int, Q: int, S1: int,
+                L: int) -> ScanParams:
+    """Pad one shard's tables to common SPMD buckets (inert fills)."""
+
+    def pad(a, shape, fill):
+        if a.shape == shape:
+            return a
+        out = np.full(shape, fill, a.dtype)
+        out[tuple(slice(0, d) for d in a.shape)] = a
+        return out
+
+    return ScanParams(
+        key_ids=pad(p.key_ids, (T,), 0),
+        kinds=pad(p.kinds, (T,), -1),
+        code_a=pad(p.code_a, (T, S1), -2),
+        num_codes=pad(p.num_codes, (T, 3, S1), -2),
+        lut_off=pad(p.lut_off, (T, S1), -1),
+        lut_flat=pad(p.lut_flat, (L,), 0),
+        is_null=pad(p.is_null, (T,), 0),
+        is_boolv=pad(p.is_boolv, (T,), 0),
+        membership=pad(p.membership, (C, T), 0),
+        query_clause=pad(p.query_clause, (Q, C), 0),
+        pushed_tbl=pad(p.pushed_tbl, (Q, S1), 0),
+        active=pad(p.active, (Q, S1), 0),
+    )
+
+
+def _pad_plane(pl: DevicePlaneArrays, K: int, N: int) -> DevicePlaneArrays:
+    if pl.pres.shape == (K, N):
+        return pl
+    return DevicePlaneArrays(
+        pres=_grow2(pl.pres, k=K, n=N, fill=0),
+        notn=_grow2(pl.notn, k=K, n=N, fill=0),
+        isb=_grow2(pl.isb, k=K, n=N, fill=0),
+        numv=_grow2(pl.numv, k=K, n=N, fill=0),
+        scod=_grow2(pl.scod, k=K, n=N, fill=-1),
+        rcod=_grow2(pl.rcod, k=K, n=N, fill=-1),
+        sid=_grow1(pl.sid, n=N, fill=-1),
+        cw=_grow1(pl.cw, n=N, fill=0),
+    )
+
+
+def _spmd_counts(planes: list[DevicePlaneArrays],
+                 params: list[ScanParams], mesh) -> list[tuple]:
+    """One ``shard_map`` program: shard i of the stacked inputs lands on
+    device i and runs the fused scan over its own plane."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    K = max(pl.pres.shape[0] for pl in planes)
+    N = max(pl.pres.shape[1] for pl in planes)
+    T = max(p.kinds.shape[0] for p in params)
+    C = max(p.membership.shape[0] for p in params)
+    Q = max(p.query_clause.shape[0] for p in params)
+    S1 = max(p.pushed_tbl.shape[1] for p in params)
+    L = max(p.lut_flat.shape[0] for p in params)
+    planes = [_pad_plane(pl, K, N) for pl in planes]
+    params = [_pad_params(p, T, C, Q, S1, L) for p in params]
+    stacked_plane = [jnp.stack(x) for x in zip(*planes)]
+    stacked_params = [np.stack(x) for x in zip(*params)]
+    spec = P("shards")
+
+    def one(*args):
+        c, d = scan_core_xla(*(a[0] for a in args))
+        return c[None], d[None]
+
+    run = shard_map(one, mesh=mesh,
+                    in_specs=tuple(spec for _ in range(20)),
+                    out_specs=(spec, spec))
+    counts, cands = jax.jit(run)(*stacked_plane, *stacked_params)
+    counts, cands = np.asarray(counts), np.asarray(cands)
+    return [(counts[i], cands[i]) for i in range(len(planes))]
+
+
+class ShardedDeviceScanner:
+    """Scatter-gather device scan over a :class:`ShardedCiaoStore`.
+
+    Bit-identical to :class:`~repro.core.shard.ShardedScanner`: empty
+    shards contribute nothing, partition-refuted shards contribute their
+    resident segment rows as skipped (and never promote), surviving
+    shards scan on their device plane, and the per-shard results reduce
+    deterministically through ``merge_scan_results``.
+    """
+
+    def __init__(self, store: ShardedCiaoStore, *, backend: str = "xla",
+                 byte_budget: int = 256 << 20, log_queries: bool = True,
+                 r_blk: int = 512, spmd: bool | None = None):
+        self.store = store
+        self.log_queries = log_queries
+        self._scanners = [
+            DeviceScanner(s, backend=backend, byte_budget=byte_budget,
+                          log_queries=False, r_blk=r_blk)
+            for s in store.shards
+        ]
+        # None = auto: engage iff a ("shards",) mesh fits the device count
+        self.spmd = spmd
+
+    @property
+    def caches(self) -> list[DeviceSegmentCache]:
+        return [sc.cache for sc in self._scanners]
+
+    def scan(self, q: Query) -> ScanResult:
+        return self.scan_batch([q])[0]
+
+    def scan_batch(self, queries: Sequence[Query]) -> list[ScanResult]:
+        t0 = time.perf_counter()
+        store = self.store
+        queries = tuple(queries)
+        if self.log_queries:
+            for q in queries:
+                store.log_query(q)
+        # per-shard surviving query subsets (partition prune, level 1)
+        sub: list[list[int]] = []
+        pruned_shards: list[list[int]] = [[] for _ in queries]
+        for s in range(store.n_shards):
+            shard = store.shards[s]
+            if not (shard.stats.n_records or shard.blocks
+                    or shard.jit_blocks or shard.raw):
+                sub.append([])
+                continue
+            qs: list[int] = []
+            for qi, q in enumerate(queries):
+                if store.n_shards > 1 and \
+                        not store.summaries[s].query_possible(q):
+                    pruned_shards[qi].append(s)
+                else:
+                    qs.append(qi)
+            sub.append(qs)
+        # promotions and pruned-shard row snapshots in GLOBAL query
+        # order: sequential scatter-gather scans run query i across every
+        # shard before query i+1, so a shard pruned for query i accounts
+        # its resident rows BEFORE later queries' promotions enlarge them
+        pushed_maps: list[list] = [[] for _ in range(store.n_shards)]
+        promoted: list[list[dict]] = [[] for _ in range(store.n_shards)]
+        jit_vis: list[list[int]] = [[] for _ in range(store.n_shards)]
+        pruned_rows: dict[tuple[int, int], dict] = {}
+        for qi, q in enumerate(queries):
+            for s in range(store.n_shards):
+                shard = store.shards[s]
+                if qi in sub[s]:
+                    pm = shard.pushed_by_epoch(q)
+                    pushed_maps[s].append(pm)
+                    promoted[s].append(dict(shard.promote_uncovered_raw(pm)))
+                    jit_vis[s].append(len(shard.jit_blocks))
+                elif s in pruned_shards[qi]:
+                    pruned_rows[(qi, s)] = shard.resident_group_rows()
+        prepared: dict[int, _Prepared] = {}
+        for s, qs in enumerate(sub):
+            if qs:
+                prepared[s] = self._scanners[s]._prepare(
+                    [queries[qi] for qi in qs],
+                    pushed_maps=pushed_maps[s], promoted=promoted[s],
+                    jit_vis=jit_vis[s])
+        launch = {s: p for s, p in prepared.items() if p.params is not None}
+        outputs: dict[int, tuple] = {}
+        mesh = None
+        if self.spmd is not False and len(launch) >= 2:
+            mesh = scan_mesh(len(launch))
+        if mesh is not None and all(
+                sc.backend == "xla" for sc in self._scanners):
+            order = sorted(launch)
+            per = _spmd_counts(
+                [self._scanners[s].cache.plane for s in order],
+                [launch[s].params for s in order], mesh)
+            outputs = dict(zip(order, per))
+        else:
+            for s, p in launch.items():
+                outputs[s] = self._scanners[s]._launch(p)
+        shard_results: dict[int, list[ScanResult]] = {}
+        for s, p in prepared.items():
+            c, d = outputs.get(s, (None, None))
+            shard_results[s] = self._scanners[s]._assemble(p, c, d)
+        out: list[ScanResult] = []
+        dt = time.perf_counter() - t0
+        for qi, q in enumerate(queries):
+            results: list[ScanResult] = []
+            for s in sorted(prepared):
+                if qi in sub[s]:
+                    r = shard_results[s][sub[s].index(qi)]
+                    r.shards_scanned = 1
+                    results.append(r)
+            if results:
+                merged = merge_scan_results(results)
+            else:
+                merged = ScanResult(count=0, rows_scanned=0,
+                                    rows_skipped=0, raw_parsed=0,
+                                    time_s=0.0, used_skipping=False)
+            for s in pruned_shards[qi]:
+                merged.shards_pruned += 1
+                for (e, t), n in pruned_rows[(qi, s)].items():
+                    merged.group(e, t).rows_skipped += n
+                    merged.rows_skipped += n
+            if pruned_shards[qi]:
+                merged.sort_groups()
+            if not results:
+                merged.used_skipping = any(
+                    store.pushed_by_epoch(q).values())
+            merged.time_s = dt / max(len(queries), 1)
+            out.append(merged)
+        return out

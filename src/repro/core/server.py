@@ -399,6 +399,11 @@ class CiaoStore:
         # bounded: consumers only ever read a recent window
         self.query_log: list[Query] = []
         self.query_log_cap = 4096
+        # monotonic counter bumped whenever the resident segment surface
+        # changes (ingest, JIT promotion, restore) — the device segment
+        # cache (DESIGN.md §15) keys its sync fast-path on it, so
+        # steady-state scans skip even the admission scan over ``segments``
+        self.data_version = 0
 
     # -- segment surface -----------------------------------------------------
     def _builder(self, epoch: int, n_covered: int, tier: int
@@ -656,6 +661,7 @@ class CiaoStore:
         self.stats.n_loaded += int(len(load_idx))
         self.group_loaded[gkey] = (
             self.group_loaded.get(gkey, 0) + int(len(load_idx)))
+        self.data_version += 1
         self.stats.load_time_s += time.perf_counter() - t0
         return self.stats
 
@@ -704,6 +710,8 @@ class CiaoStore:
                 epoch=epoch, n_covered=n_cov, tier=tier,
                 capacity=self.segment_capacity))
         self.raw = keep
+        if promoted:
+            self.data_version += 1
         self.stats.jit_time_s += time.perf_counter() - t0
         return promoted
 
@@ -928,6 +936,7 @@ class CiaoStore:
                 epoch=int(jit_epochs[ji]),
                 n_covered=int(jit_ncov[ji]),
                 tier=int(jit_tiers[ji])))
+        store.data_version += 1
         return store
 
 

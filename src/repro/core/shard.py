@@ -410,6 +410,12 @@ class ShardedCiaoStore:
         return len(self.shards)
 
     @property
+    def data_version(self) -> int:
+        """Sum of the shards' segment-surface counters (device cache sync
+        fast-path, DESIGN.md §15): monotonic, changes iff a shard's did."""
+        return sum(s.data_version for s in self.shards)
+
+    @property
     def plan(self) -> PushdownPlan:
         return self.shards[0].plan
 

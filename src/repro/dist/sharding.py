@@ -93,6 +93,26 @@ def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(mesh.shape)
 
 
+def scan_mesh(n_shards: int) -> Mesh | None:
+    """1-D mesh mapping store shards onto local devices, or ``None``.
+
+    The device scan plane (DESIGN.md §15) runs its scatter-gather scan
+    as ONE ``shard_map`` program when every shard can own a device;
+    otherwise callers fall back to sequential per-shard launches (the
+    results are bit-identical — the SPMD path only changes scheduling).
+    Requires >= 2 shards to be worth a mesh and >= ``n_shards`` devices
+    for the 1:1 placement.
+    """
+    if n_shards < 2:
+        return None
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        return None
+    import numpy as _np
+
+    return Mesh(_np.asarray(devs[:n_shards]), ("shards",))
+
+
 def spec_for_leaf(shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh,
                   rules: Mapping[str, tuple[str, ...]] | None = None) -> P:
     """PartitionSpec for one leaf; mesh axes of size 1 are dropped entirely."""

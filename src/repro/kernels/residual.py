@@ -9,11 +9,18 @@ kernel already exploits — so this module exposes it as an optional
 
     scanner = DataSkippingScanner(store, and_reduce=bv_and_many_xla)
 
-Shapes vary per segment (W = ceil(n_rows/32)); the jitted reduction
-retraces per (P, W) bucket, which segment compaction keeps small (one
-dominant W per store).  Kept deliberately tiny: column-predicate
-evaluation stays on the host, where the dictionary/zone-map structures
-live.
+Shapes vary per segment (W = ceil(n_rows/32), P = pushed rows), and a
+jitted reduction retraces per exact (P, W).  A store holds one dominant W
+after compaction, but open builder tails, tiered coverage groups and the
+sharded plane's per-shard row counts each mint fresh shapes — so both
+entry points pad to power-of-two (P, W) BUCKETS before dispatch
+(``_pow2``), with the reduction identity as fill (0xFFFFFFFF for AND,
+0 for popcount).  The jit cache then grows with the log of the largest
+shape ever seen, not with the number of distinct segment layouts; pinned
+by the trace-count test in ``tests/test_device_scan.py``.  Kept
+deliberately tiny: column-predicate evaluation stays on the host, where
+the dictionary/zone-map structures live (the full device residual path is
+``kernels.scan_fused``).
 """
 from __future__ import annotations
 
@@ -21,6 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+_AND_IDENTITY = np.uint32(0xFFFFFFFF)
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
 
 
 @jax.jit
@@ -35,9 +50,19 @@ def bv_and_many_xla(words: np.ndarray) -> np.ndarray:
     """AND-reduce packed rows (P, W) -> (W,) on the XLA backend.
 
     Drop-in for :func:`repro.core.bitvector.bv_and_many` (bit-identical;
-    the equivalence is pinned by ``tests/test_columnar.py``).
+    the equivalence is pinned by ``tests/test_columnar.py``).  Inputs are
+    padded to power-of-two (P, W) buckets with the AND identity
+    (all-ones rows; pad columns are sliced back off) so the jit cache
+    stays O(log^2) across segment shapes.
     """
-    return np.asarray(_and_reduce(jnp.asarray(words, jnp.uint32)))
+    words = np.asarray(words, np.uint32)
+    P, W = words.shape
+    Pb, Wb = _pow2(P), _pow2(W)
+    if (Pb, Wb) != (P, W):
+        padded = np.full((Pb, Wb), _AND_IDENTITY, np.uint32)
+        padded[:P, :W] = words
+        words = padded
+    return np.asarray(_and_reduce(jnp.asarray(words)))[:W]
 
 
 @jax.jit
@@ -46,5 +71,15 @@ def _popcount(words: jnp.ndarray) -> jnp.ndarray:
 
 
 def popcount_xla(words: np.ndarray) -> int:
-    """Total set bits of a packed array (device population_count)."""
-    return int(_popcount(jnp.asarray(words, jnp.uint32)))
+    """Total set bits of a packed array (device population_count).
+
+    Zero-padded to the same power-of-two buckets as the AND reduction
+    (zero words contribute no bits, so the total is unchanged).
+    """
+    words = np.ascontiguousarray(np.asarray(words, np.uint32))
+    flat = words.reshape(-1)
+    n = flat.shape[0]
+    nb = _pow2(n)
+    if nb != n:
+        flat = np.concatenate([flat, np.zeros((nb - n,), np.uint32)])
+    return int(_popcount(jnp.asarray(flat)))

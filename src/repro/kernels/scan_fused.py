@@ -1,0 +1,578 @@
+"""Fused multi-query scan kernel over the device-resident segment plane.
+
+This is the device half of DESIGN.md §15.  The host half
+(:class:`repro.core.device_cache.DeviceSegmentCache`) keeps every hot
+segment's columnar state resident as per-shard ``jnp`` buffers:
+
+  * per-key row masks     — present / notnull / is_bool / num_valid,
+    stacked ``uint8[K, N]`` over the concatenated rows of all cached
+    segments (``K`` = union of keys, row 0 reserved all-absent);
+  * dictionary codes      — ``str_codes`` / ``repr_codes`` ``int32[K, N]``
+    (-1 = not-a-string / absent, matching ``core.columnar.KeyColumn``);
+  * ``seg_ids int32[N]``  — row -> cache slot (-1 = capacity padding);
+  * ``clause_word``       — the segment's packed pushed bitvectors,
+    TRANSPOSED to one ``uint32`` per row (bit *p* = clause row *p* of
+    that segment's coverage; cache admission requires n_covered <= 32).
+
+A batch of queries compiles once (:func:`compile_scan_batch`) into the
+same clause/term-dedup shape the ingest plan compiler uses
+(``kernels.plan`` / ``core.client.dedup_terms``) — except keyed on
+type-strict predicate identity rather than pattern bytes, because two
+predicates with identical raw patterns (e.g. EXACT on different keys)
+evaluate differently under ``core.columnar.eval_lowered``.  Everything
+else arrives as small per-scan parameter tables resolved on the host
+from the segment dictionaries (codes, substring LUTs, pushed-bit masks,
+zone-prune verdicts): parameters are O(terms x slots), never O(rows) —
+segment columns are uploaded at admission only.
+
+One launch then evaluates the whole batch: zone-prune mask -> pushed
+bitvector AND -> lowered residual on dictionary codes -> per-(query,
+slot) popcount.  Counts are bit-identical to
+``core.columnar.query_mask`` because every ``eval_lowered`` branch has
+an exact integer form:
+
+  * KEY_PRESENCE          — ``notnull``;
+  * EXACT (str value)     — ``str_codes == str_index.get(v, -2)``;
+  * SUBSTRING             — per-slot LUT over the string dictionary,
+    probed by ``str_codes`` (offset -1 = provably-empty / missing key);
+  * KEY_VALUE             — repr-code equality, plus the null branch,
+    plus the numeric branch: ``num_valid & (num == float(v))`` equals
+    ``num_valid & repr_codes ∈ codes(_num_reprs(float(v)))`` — the repr
+    dictionary encodes ``json_scalar`` of every present value, and
+    ``_num_reprs`` enumerates every rendering a float64-equal scalar can
+    have — so no float column ever needs to leave the host.
+
+Two backends: ``"xla"`` (jitted jnp, the fast path on CPU hosts) and
+``"pallas"``/interpret (one real ``pallas_call``: per-row slot one-hot,
+parameter gathers and the final per-slot popcount are all expressed as
+f32 matmuls — exact for dictionary codes < 2^24 — so the kernel maps
+onto the MXU; the substring LUT probe is the one vector gather,
+supported by interpret mode and recent Mosaic toolchains).  Both return
+``counts[Q, S]`` / ``cands[Q, S]`` (matches, pushed-candidate rows) per
+cache slot, which the device scanner folds into the standard per-(epoch,
+tier) :class:`~repro.core.server.ScanResult` accounting.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.predicates import (
+    Clause, Kind, Query, SimplePredicate, lowerable,
+)
+
+from .residual import _pow2
+
+KIND_PRESENCE = 0
+KIND_EXACT = 1
+KIND_SUBSTRING = 2
+KIND_KV = 3
+_KIND_CODE = {
+    Kind.KEY_PRESENCE: KIND_PRESENCE,
+    Kind.EXACT: KIND_EXACT,
+    Kind.SUBSTRING: KIND_SUBSTRING,
+    Kind.KEY_VALUE: KIND_KV,
+}
+
+#: cache slots carry pushed coverage as one uint32 word per row
+MAX_COVERED = 32
+
+
+# ---------------------------------------------------------------------------
+# batch compilation: queries -> deduped clause/term tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScanBatch:
+    """Clause/term-deduped encoding of a query batch (host-side)."""
+
+    queries: tuple[Query, ...]
+    clauses: tuple[Clause, ...]          # unique clauses across the batch
+    terms: tuple[SimplePredicate, ...]   # unique terms across those clauses
+    membership: np.ndarray               # uint8[C, T] clause -> term
+    query_clause: np.ndarray             # uint8[Q, C] query -> clause
+    query_ok: tuple[bool, ...]           # per-query device eligibility
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.queries)
+
+    @property
+    def n_clauses(self) -> int:
+        return len(self.clauses)
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.terms)
+
+
+def compile_scan_batch(queries: Sequence[Query]) -> ScanBatch:
+    """Dedup clauses and terms across a query batch.
+
+    Mirrors the ingest path's ``compile_plan``/``dedup_terms`` shape —
+    one slot per unique disjunct, a clause-membership matrix, and here
+    additionally a query->clause matrix — but keys the dedup on the
+    predicates' own type-strict equality.  ``dedup_terms`` keys on
+    pattern BYTES, which is sound for the raw-matching client engines
+    (identical patterns match identical byte positions) but not for
+    columnar evaluation: EXACT compiles a value-only pattern, so
+    ``EXACT(a, "x")`` and ``EXACT(b, "x")`` alias at the byte level
+    while reading different columns.
+    """
+    queries = tuple(queries)
+    cl_index: dict[Clause, int] = {}
+    clauses: list[Clause] = []
+    for q in queries:
+        for c in q.clauses:
+            if c not in cl_index:
+                cl_index[c] = len(clauses)
+                clauses.append(c)
+    t_index: dict[SimplePredicate, int] = {}
+    terms: list[SimplePredicate] = []
+    for c in clauses:
+        for t in c.terms:
+            if t not in t_index:
+                t_index[t] = len(terms)
+                terms.append(t)
+    membership = np.zeros((len(clauses), len(terms)), np.uint8)
+    for ci, c in enumerate(clauses):
+        for t in c.terms:
+            membership[ci, t_index[t]] = 1
+    query_clause = np.zeros((len(queries), len(clauses)), np.uint8)
+    for qi, q in enumerate(queries):
+        for c in q.clauses:
+            query_clause[qi, cl_index[c]] = 1
+    query_ok = tuple(
+        all(lowerable(t) for c in q.clauses for t in c.terms)
+        for q in queries
+    )
+    return ScanBatch(
+        queries=queries, clauses=tuple(clauses), terms=tuple(terms),
+        membership=membership, query_clause=query_clause, query_ok=query_ok,
+    )
+
+
+class ScanParams(NamedTuple):
+    """Per-scan parameter tables (host numpy, bucket-padded).
+
+    Shapes: T/C/Q/S1 are power-of-two buckets of (terms, clauses,
+    queries, slots + 1); the extra slot S1-1 is the dummy that
+    capacity-padding rows (seg_id -1) resolve to, with ``active`` zeroed
+    so they can never contribute.
+    """
+
+    key_ids: np.ndarray      # int32[T]   term -> plane key row (0 = absent)
+    kinds: np.ndarray        # int32[T]   KIND_* (-1 = padding, inert)
+    code_a: np.ndarray       # int32[T, S1]  EXACT str code / KV repr code
+    num_codes: np.ndarray    # int32[T, 3, S1] KV numeric repr codes
+    lut_off: np.ndarray      # int32[T, S1]  substring LUT base (-1 = empty)
+    lut_flat: np.ndarray     # uint8[L]      concatenated substring LUTs
+    is_null: np.ndarray      # uint8[T]   KV value is None
+    is_boolv: np.ndarray     # uint8[T]   KV value is a bool
+    membership: np.ndarray   # uint8[C, T]
+    query_clause: np.ndarray  # uint8[Q, C]
+    pushed_tbl: np.ndarray   # uint32[Q, S1] pushed clause bits (0 = all-pass)
+    active: np.ndarray       # uint8[Q, S1]  zone-prune verdict (0 = pruned)
+
+
+# ---------------------------------------------------------------------------
+# XLA backend
+# ---------------------------------------------------------------------------
+
+def scan_core_xla(pres, notn, isb, numv, scod, rcod, sid, cw,
+                  key_ids, kinds, code_a, num_codes, lut_off, lut_flat,
+                  is_null, is_boolv, membership, query_clause,
+                  pushed_tbl, active, kind_counts=None):
+    """Unjitted fused scan body (also the ``shard_map`` SPMD payload).
+
+    Three CPU-motivated structural choices, all bit-exact:
+
+      * ``optimization_barrier`` after every gather-producing
+        intermediate — XLA fusion otherwise inlines the gathers into
+        each consumer's scalar loop and recomputes them per use (~2.4x
+        on the CPU backend);
+      * the clause/query matmuls and the per-slot count reduction run
+        as f32 GEMMs (Eigen on CPU, MXU on TPU) instead of int32
+        matmuls / ``.at[].add`` scatters.  Exact: every operand is 0/1
+        and every sum is bounded by max(T, C, N) < 2^24;
+      * when ``kind_counts`` (a static ``(n_presence, n_exact,
+        n_substring, n_kv)`` tuple over kind-sorted term rows) is
+        given, each term row evaluates ONLY its own kind's branch and
+        gathers only the tables that branch reads, instead of
+        computing all four branches for every row and selecting.  The
+        per-kind expressions are unchanged, so the term matrix is
+        identical row-for-row; this is what makes a batched launch
+        scale with the batch's real work.  ``None`` keeps the generic
+        select body (the ``shard_map`` path, where kinds arrive
+        traced).
+    """
+    S1 = pushed_tbl.shape[1]
+    L = lut_flat.shape[0]
+    bar = jax.lax.optimization_barrier
+    sid = jnp.where(sid < 0, S1 - 1, sid)
+    sid = bar(sid)
+    if kind_counts is None:
+        tp = pres[key_ids] > 0                # (T, N)
+        tn = notn[key_ids] > 0
+        tb = isb[key_ids] > 0
+        tv = numv[key_ids] > 0
+        ts = scod[key_ids]
+        tr = rcod[key_ids]
+        tp, tn, tb, tv, ts, tr = bar((tp, tn, tb, tv, ts, tr))
+        ca = code_a[:, sid]                   # (T, N)
+        off = lut_off[:, sid]
+        ca, off = bar((ca, off))
+        m_exact = ts == ca
+        idx = jnp.clip(off + 1 + ts, 0, L - 1)
+        m_sub = (lut_flat[idx] > 0) & (off >= 0)
+        nc = num_codes[:, :, sid]             # (T, 3, N)
+        nc = bar(nc)
+        m_num = tv & jnp.any(nc == tr[:, None, :], axis=1)
+        m_null = (is_null[:, None] > 0) & tp & ~tn
+        compat = jnp.where(is_boolv[:, None] > 0, tb, tp & ~tb)
+        m_kv = ((tr == ca) | m_num | m_null) & compat
+        k = kinds[:, None]
+        term = jnp.where(
+            k == KIND_PRESENCE, tn,
+            jnp.where(k == KIND_EXACT, m_exact,
+                      jnp.where(k == KIND_SUBSTRING, m_sub,
+                                jnp.where(k == KIND_KV, m_kv, False))))
+    else:
+        n_pre, n_ex, n_sub, n_kv = kind_counts
+        parts = []
+        a = 0
+        if n_pre:
+            parts.append(bar(notn[key_ids[a:a + n_pre]]) > 0)
+        a += n_pre
+        if n_ex:
+            ts = scod[key_ids[a:a + n_ex]]
+            ca = code_a[a:a + n_ex][:, sid]
+            ts, ca = bar((ts, ca))
+            parts.append(ts == ca)
+        a += n_ex
+        if n_sub:
+            ts = scod[key_ids[a:a + n_sub]]
+            off = lut_off[a:a + n_sub][:, sid]
+            ts, off = bar((ts, off))
+            idx = jnp.clip(off + 1 + ts, 0, L - 1)
+            hitb = bar(lut_flat[idx])
+            parts.append((hitb > 0) & (off >= 0))
+        a += n_sub
+        if n_kv:
+            kk = key_ids[a:a + n_kv]
+            tp = pres[kk] > 0
+            tn = notn[kk] > 0
+            tb = isb[kk] > 0
+            tv = numv[kk] > 0
+            tr = rcod[kk]
+            tp, tn, tb, tv, tr = bar((tp, tn, tb, tv, tr))
+            ca = code_a[a:a + n_kv][:, sid]
+            nc = num_codes[a:a + n_kv][:, :, sid]
+            ca, nc = bar((ca, nc))
+            m_num = tv & jnp.any(nc == tr[:, None, :], axis=1)
+            m_null = (is_null[a:a + n_kv, None] > 0) & tp & ~tn
+            compat = jnp.where(is_boolv[a:a + n_kv, None] > 0,
+                               tb, tp & ~tb)
+            parts.append(((tr == ca) | m_num | m_null) & compat)
+        a += n_kv
+        if kinds.shape[0] > a:                # bucket-padding rows: inert
+            parts.append(jnp.zeros((kinds.shape[0] - a, sid.shape[0]),
+                                   bool))
+        term = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+    term = bar(term)
+    cm = (membership.astype(jnp.float32) @ term.astype(jnp.float32)) > 0.0
+    viol = query_clause.astype(jnp.float32) @ (1.0 - cm.astype(jnp.float32))
+    qm = viol == 0.0                          # (Q, N)
+    ptab = pushed_tbl[:, sid]                 # (Q, N)
+    ptab = jax.lax.optimization_barrier(ptab)
+    pm = (cw[None, :] & ptab) == ptab
+    act = active[:, sid] > 0
+    hit = qm & pm & act
+    hit, pa = bar((hit, pm & act))
+    # per-slot popcount as ONE (2Q, N) @ (N, S1) f32 GEMM: the one-hot
+    # is built directly in (N, S1) layout — Eigen runs the non-transposed
+    # product ~3x faster than two (Q, N) @ (S1, N)^T calls
+    iota = jax.lax.broadcasted_iota(jnp.int32, (sid.shape[0], S1), 1)
+    slot_oh = (sid[:, None] == iota).astype(jnp.float32)
+    z = jnp.concatenate([hit, pa], axis=0).astype(jnp.float32)
+    seg = (z @ slot_oh).astype(jnp.int32)
+    Q = pushed_tbl.shape[0]
+    return seg[:Q], seg[Q:]
+
+
+_scan_core_xla = jax.jit(scan_core_xla, static_argnames=("kind_counts",))
+
+
+# ---------------------------------------------------------------------------
+# pallas backend
+# ---------------------------------------------------------------------------
+
+def _scan_kernel(keym_ref, pres_ref, notn_ref, isb_ref, numv_ref,
+                 scod_ref, rcod_ref, sid_ref, cw_ref,
+                 kinds_ref, code_a_ref, num_codes_ref, lut_off_ref,
+                 lut_flat_ref, is_null_ref, is_boolv_ref,
+                 mem_ref, qc_ref, plo_ref, phi_ref, act_ref,
+                 counts_ref, cands_ref, *, n_slots: int, r_blk: int):
+    nb = pl.program_id(0)
+
+    @pl.when(nb == 0)
+    def _init():  # first tile zeroes the accumulators
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        cands_ref[...] = jnp.zeros_like(cands_ref)
+
+    f32 = jnp.float32
+    sid = sid_ref[0, :]
+    sid = jnp.where(sid < 0, n_slots - 1, sid)
+    # per-row slot one-hot: every parameter gather and the final per-slot
+    # reduction become (.., S1) x (S1, blk) matmuls — MXU-friendly, and
+    # exact in f32 for dictionary codes / offsets < 2^24
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n_slots, r_blk), 0)
+    slot_oh = (sid[None, :] == iota).astype(f32)          # (S1, blk)
+    keym = keym_ref[...]                                  # (T, K) one-hot
+    tp = keym @ pres_ref[...].astype(f32) > 0.0           # (T, blk)
+    tn = keym @ notn_ref[...].astype(f32) > 0.0
+    tb = keym @ isb_ref[...].astype(f32) > 0.0
+    tv = keym @ numv_ref[...].astype(f32) > 0.0
+    ts = (keym @ scod_ref[...].astype(f32)).astype(jnp.int32)
+    tr = (keym @ rcod_ref[...].astype(f32)).astype(jnp.int32)
+    ca = (code_a_ref[...].astype(f32) @ slot_oh).astype(jnp.int32)
+    off = (lut_off_ref[...].astype(f32) @ slot_oh).astype(jnp.int32)
+    m_exact = ts == ca
+    lut = lut_flat_ref[0, :]
+    idx = jnp.clip(off + 1 + ts, 0, lut.shape[0] - 1)
+    m_sub = (jnp.take(lut, idx) > 0) & (off >= 0)
+    ncf = (num_codes_ref[...].astype(f32) @ slot_oh).astype(jnp.int32)
+    nc = ncf.reshape(-1, 3, r_blk)                        # (T, 3, blk)
+    m_num = tv & jnp.any(nc == tr[:, None, :], axis=1)
+    isn = is_null_ref[...] > 0                            # (T, 1)
+    isb_v = is_boolv_ref[...] > 0
+    m_null = isn & tp & ~tn
+    compat = jnp.where(isb_v, tb, tp & ~tb)
+    m_kv = ((tr == ca) | m_num | m_null) & compat
+    k = kinds_ref[...]                                    # (T, 1)
+    term = jnp.where(
+        k == KIND_PRESENCE, tn,
+        jnp.where(k == KIND_EXACT, m_exact,
+                  jnp.where(k == KIND_SUBSTRING, m_sub,
+                            jnp.where(k == KIND_KV, m_kv, False))))
+    cm = (mem_ref[...].astype(f32) @ term.astype(f32)) > 0.0   # (C, blk)
+    viol = qc_ref[...].astype(f32) @ (1.0 - cm.astype(f32))
+    qm = viol == 0.0                                      # (Q, blk)
+    # pushed words gathered as two exact 16-bit f32 halves
+    plo = (plo_ref[...].astype(f32) @ slot_oh).astype(jnp.uint32)
+    phi = (phi_ref[...].astype(f32) @ slot_oh).astype(jnp.uint32)
+    ptab = (phi << 16) | plo
+    cw = cw_ref[0, :]
+    pm = (cw[None, :] & ptab) == ptab
+    act = (act_ref[...].astype(f32) @ slot_oh) > 0.0
+    hit = (qm & pm & act).astype(f32)
+    counts_ref[...] += hit @ slot_oh.T                    # (Q, S1)
+    cands_ref[...] += (pm & act).astype(f32) @ slot_oh.T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_blk", "interpret"))
+def _scan_core_pallas(pres, notn, isb, numv, scod, rcod, sid, cw,
+                      keym, kinds, code_a, num_codes, lut_off, lut_flat,
+                      is_null, is_boolv, membership, query_clause,
+                      plo, phi, active, *, r_blk: int, interpret: bool):
+    K, N = pres.shape
+    T = kinds.shape[0]
+    C = membership.shape[0]
+    Q, S1 = plo.shape
+    L = lut_flat.shape[1]
+    grid = (N // r_blk,)
+
+    def col(k):      # (K, N) column tiles
+        return pl.BlockSpec((k, r_blk), lambda nb: (0, nb))
+
+    def full(*shape):  # whole-array parameter blocks
+        return pl.BlockSpec(shape, lambda nb, _n=len(shape): (0,) * _n)
+
+    counts, cands = pl.pallas_call(
+        functools.partial(_scan_kernel, n_slots=S1, r_blk=r_blk),
+        grid=grid,
+        in_specs=[
+            full(T, K),                       # keym
+            col(K), col(K), col(K), col(K),   # pres/notn/isb/numv
+            col(K), col(K),                   # scod/rcod
+            col(1), col(1),                   # sid/cw
+            full(T, 1),                       # kinds
+            full(T, S1),                      # code_a
+            full(3 * T, S1),                  # num_codes
+            full(T, S1),                      # lut_off
+            full(1, L),                       # lut_flat
+            full(T, 1), full(T, 1),           # is_null / is_boolv
+            full(C, T), full(Q, C),           # membership / query_clause
+            full(Q, S1), full(Q, S1),         # plo / phi
+            full(Q, S1),                      # active
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, S1), lambda nb: (0, 0)),
+            pl.BlockSpec((Q, S1), lambda nb: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, S1), jnp.float32),
+            jax.ShapeDtypeStruct((Q, S1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keym, pres, notn, isb, numv, scod, rcod, sid, cw, kinds,
+      code_a, num_codes, lut_off, lut_flat, is_null, is_boolv,
+      membership, query_clause, plo, phi, active)
+    return counts.astype(jnp.int32), cands.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+class DevicePlaneArrays(NamedTuple):
+    """The device-resident plane a launch consumes (all ``jnp``)."""
+
+    pres: jnp.ndarray    # uint8[K, N]
+    notn: jnp.ndarray    # uint8[K, N]
+    isb: jnp.ndarray     # uint8[K, N]
+    numv: jnp.ndarray    # uint8[K, N]
+    scod: jnp.ndarray    # int32[K, N]
+    rcod: jnp.ndarray    # int32[K, N]
+    sid: jnp.ndarray     # int32[N] (-1 = padding)
+    cw: jnp.ndarray      # uint32[N]
+
+
+def scan_core_numpy(pres, notn, isb, numv, scod, rcod, sid, cw,
+                    params: ScanParams) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy-vectorized reference of the fused scan, bit-identical.
+
+    Plane arrays arrive as HOST numpy (the baseline's "resident"
+    mirror).  Serves two roles: the differential oracle the kernel
+    backends are tested against, and the ``numpy`` side of
+    ``benchmarks.bench_device`` — the same multi-query plane scan,
+    vectorized the way a numpy engine would write it (one temporary per
+    stage), so the gated speedup isolates what the fused single launch
+    buys on identical work.
+    """
+    S1 = params.pushed_tbl.shape[1]
+    L = params.lut_flat.shape[0]
+    sid = np.where(sid < 0, S1 - 1, sid)
+    key_ids = params.key_ids
+    tp = pres[key_ids] > 0                    # (T, N)
+    tn = notn[key_ids] > 0
+    tb = isb[key_ids] > 0
+    tv = numv[key_ids] > 0
+    ts = scod[key_ids]
+    tr = rcod[key_ids]
+    ca = params.code_a[:, sid]
+    off = params.lut_off[:, sid]
+    m_exact = ts == ca
+    idx = np.clip(off + 1 + ts, 0, L - 1)
+    m_sub = (params.lut_flat[idx] > 0) & (off >= 0)
+    nc = params.num_codes[:, :, sid]
+    m_num = tv & (nc == tr[:, None, :]).any(axis=1)
+    m_null = (params.is_null[:, None] > 0) & tp & ~tn
+    compat = np.where(params.is_boolv[:, None] > 0, tb, tp & ~tb)
+    m_kv = ((tr == ca) | m_num | m_null) & compat
+    k = params.kinds[:, None]
+    term = np.select(
+        [k == KIND_PRESENCE, k == KIND_EXACT, k == KIND_SUBSTRING,
+         k == KIND_KV],
+        [tn, m_exact, m_sub, m_kv], False)
+    cm = (params.membership.astype(np.int32) @ term.astype(np.int32)) > 0
+    viol = params.query_clause.astype(np.int32) @ (1 - cm.astype(np.int32))
+    qm = viol == 0                            # (Q, N)
+    ptab = params.pushed_tbl[:, sid]
+    pm = (cw[None, :] & ptab) == ptab
+    act = params.active[:, sid] > 0
+    hit = qm & pm & act
+    pa = pm & act
+    Q = params.pushed_tbl.shape[0]
+    counts = np.zeros((Q, S1), np.int32)
+    cands = np.zeros((Q, S1), np.int32)
+    for q in range(Q):
+        counts[q] = np.bincount(sid, weights=hit[q], minlength=S1)[:S1]
+        cands[q] = np.bincount(sid, weights=pa[q], minlength=S1)[:S1]
+    return counts, cands
+
+
+def scan_counts(plane: DevicePlaneArrays, params: ScanParams, *,
+                backend: str = "xla", r_blk: int = 512,
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """One fused launch over the plane; ``(counts, cands)`` as int32[Q, S1].
+
+    ``backend``: ``"xla"`` (jitted jnp), ``"pallas_interpret"`` (the
+    pallas kernel under the interpreter — the CPU-verifiable TPU
+    artifact), ``"pallas"`` (compiled, real hardware), or ``"numpy"``
+    (the host reference — converts the plane per call; perf baselines
+    should pre-convert and call :func:`scan_core_numpy` directly).
+    """
+    if backend == "numpy":
+        counts, cands = scan_core_numpy(
+            *(np.asarray(a) for a in plane), params)
+        return counts, cands
+    if backend == "xla":
+        # sort term rows by kind (stable; bucket padding, kind -1, goes
+        # last) so the launch can evaluate each row's own branch only.
+        # Membership columns permute with them — results are identical.
+        kinds = params.kinds
+        order = np.argsort(
+            np.where(kinds < 0, np.int32(KIND_KV + 1), kinds),
+            kind="stable")
+        kc = tuple(int((kinds == k).sum())
+                   for k in (KIND_PRESENCE, KIND_EXACT,
+                             KIND_SUBSTRING, KIND_KV))
+        counts, cands = _scan_core_xla(
+            *plane,
+            jnp.asarray(params.key_ids[order]),
+            jnp.asarray(params.kinds[order]),
+            jnp.asarray(params.code_a[order]),
+            jnp.asarray(params.num_codes[order]),
+            jnp.asarray(params.lut_off[order]),
+            jnp.asarray(params.lut_flat),
+            jnp.asarray(params.is_null[order]),
+            jnp.asarray(params.is_boolv[order]),
+            jnp.asarray(params.membership[:, order]),
+            jnp.asarray(params.query_clause),
+            jnp.asarray(params.pushed_tbl), jnp.asarray(params.active),
+            kind_counts=kc,
+        )
+    elif backend in ("pallas", "pallas_interpret"):
+        K = plane.pres.shape[0]
+        T = params.kinds.shape[0]
+        keym = np.zeros((T, K), np.float32)
+        keym[np.arange(T), params.key_ids] = 1.0
+        n = plane.sid.shape[0]
+        r_blk = min(r_blk, n)
+        counts, cands = _scan_core_pallas(
+            plane.pres, plane.notn, plane.isb, plane.numv,
+            plane.scod, plane.rcod,
+            plane.sid.reshape(1, -1), plane.cw.reshape(1, -1),
+            jnp.asarray(keym),
+            jnp.asarray(params.kinds.reshape(-1, 1)),
+            jnp.asarray(params.code_a),
+            jnp.asarray(params.num_codes.reshape(
+                params.num_codes.shape[0] * 3, -1)),
+            jnp.asarray(params.lut_off),
+            jnp.asarray(params.lut_flat.reshape(1, -1)),
+            jnp.asarray(params.is_null.reshape(-1, 1)),
+            jnp.asarray(params.is_boolv.reshape(-1, 1)),
+            jnp.asarray(params.membership), jnp.asarray(params.query_clause),
+            jnp.asarray((params.pushed_tbl & np.uint32(0xFFFF))
+                        .astype(np.int32)),
+            jnp.asarray((params.pushed_tbl >> np.uint32(16))
+                        .astype(np.int32)),
+            jnp.asarray(params.active),
+            r_blk=r_blk, interpret=(backend == "pallas_interpret"),
+        )
+    else:
+        raise ValueError(f"unknown device scan backend {backend!r}")
+    return np.asarray(counts), np.asarray(cands)
+
+
+def bucket_pow2(n: int, floor: int = 1) -> int:
+    """Power-of-two shape bucket (shared with ``kernels.residual``)."""
+    return _pow2(n, floor)

@@ -11,21 +11,23 @@ import os
 import pytest
 
 from benchmarks.bench_schema import (
-    SchemaError, validate_file, validate_kernels, validate_replan,
-    validate_scan, validate_shard, validate_tiers,
+    SchemaError, validate_device, validate_file, validate_kernels,
+    validate_replan, validate_scan, validate_shard, validate_tiers,
 )
 from benchmarks.run import (
-    write_kernels_artifacts, write_scan_artifacts, write_shard_artifacts,
-    write_tiers_artifacts,
+    write_device_artifacts, write_kernels_artifacts, write_scan_artifacts,
+    write_shard_artifacts, write_tiers_artifacts,
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _GOOD_KERNELS = {
     "engines": [
-        {"engine": "python-bytes-find", "records_per_s": 10000,
+        {"engine": "python-bytes-find", "backend": "python",
+         "device": "host", "interpret": False, "records_per_s": 10000,
          "us_per_record": 100.0, "effective_GBps": 0.1},
-        {"engine": "xla-jit", "records_per_s": 500000,
+        {"engine": "xla-jit", "backend": "xla", "device": "cpu",
+         "interpret": False, "records_per_s": 500000,
          "us_per_record": 2.0, "effective_GBps": 5.0},
     ],
     "fused_vs_split": [
@@ -50,6 +52,8 @@ def test_schema_accepts_wellformed_synthetic():
     lambda o: o.pop("engines"),
     lambda o: o.pop("fused_vs_split"),
     lambda o: o["engines"][0].pop("us_per_record"),
+    lambda o: o["engines"][0].pop("backend"),         # provenance required
+    lambda o: o["engines"][0].__setitem__("interpret", "no"),
     lambda o: o["engines"][0].__setitem__("us_per_record", "fast"),
     lambda o: o["engines"][0].__setitem__("us_per_record", -1.0),
     lambda o: o["engines"].clear(),
@@ -323,6 +327,101 @@ def test_quick_shard_benchmark_beats_monolith():
 
     out = bench_shard.run(n_records=16384, repeats=2, quick=True)
     validate_shard(out)
+
+
+def _device_side(scan_s):
+    return {"scan_s": scan_s, "us_per_query": scan_s / 20 * 1e6,
+            "records_per_s": int(24576 * 20 / scan_s)}
+
+
+_GOOD_DEVICE = {
+    "quick": False,
+    "backend": "xla", "device": "cpu", "interpret": False,
+    "n_records": 24576, "n_segments": 12, "n_queries": 20, "n_slots": 12,
+    "numpy": _device_side(0.19),
+    "host_skipping": _device_side(0.002),
+    "device_batched": _device_side(0.017),
+    "device_sequential": _device_side(0.049),
+    "speedup": 11.0, "batch8_speedup": 3.2,
+    "counts_match": True,
+    "uploads_steady": 0,
+    "upload_bytes_warm": 5000000,
+    "roofline": {"device_flops": 2.6e7, "device_bytes": 3.8e7,
+                 "compute_s": 1.3e-7, "memory_s": 4.6e-5,
+                 "step_time_s": 4.6e-5, "measured_s": 0.0134,
+                 "dominant": "memory",
+                 "shape": {"n_rows": 32768, "n_terms": 32, "n_clauses": 32,
+                           "n_queries": 32, "n_slots": 15}},
+    "roofline_frac": 0.0035,
+}
+
+
+def test_device_schema_accepts_tracked_artifact():
+    path = os.path.join(REPO_ROOT, "BENCH_device.json")
+    assert validate_file(path) == "BENCH_device.json"
+
+
+def test_device_schema_accepts_wellformed_synthetic():
+    validate_device(_GOOD_DEVICE)
+    quick = json.loads(json.dumps(_GOOD_DEVICE))
+    quick["quick"] = True
+    quick["speedup"] = 0.6       # reduced-size floor gates collapse only
+    quick["batch8_speedup"] = 0.9
+    validate_device(quick)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda o: o.pop("numpy"),
+    lambda o: o.pop("roofline"),
+    lambda o: o.pop("counts_match"),
+    lambda o: o.__setitem__("counts_match", False),      # THE claim gate
+    lambda o: o.__setitem__("uploads_steady", 2),        # plane not resident
+    lambda o: o.__setitem__("speedup", 1.9),             # below full floor
+    lambda o: o.__setitem__("batch8_speedup", 2.9),      # fusion claim
+    lambda o: o.__setitem__("roofline_frac", 0.0),
+    lambda o: o.__setitem__("roofline_frac", 1.2),       # beats the hardware
+    lambda o: o["roofline"].pop("measured_s"),
+    lambda o: o["device_batched"].__setitem__("scan_s", 0.0),
+    lambda o: o["numpy"].pop("records_per_s"),
+    lambda o: o.pop("backend"),
+    lambda o: o.__setitem__("interpret", "no"),
+    lambda o: o.__setitem__("quick", "no"),
+])
+def test_device_schema_rejects_malformed_or_losing(mutate):
+    obj = json.loads(json.dumps(_GOOD_DEVICE))
+    mutate(obj)
+    with pytest.raises(SchemaError):
+        validate_device(obj)
+
+
+def test_device_quick_run_never_touches_tracked_artifact(tmp_path):
+    artifacts = tmp_path / "artifacts"
+    artifacts.mkdir()
+    tracked = tmp_path / "BENCH_device.json"
+    tracked.write_text("SENTINEL")
+    written = write_device_artifacts(
+        _GOOD_DEVICE, quick=True,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert written == [str(artifacts / "bench_device.json")]
+    assert tracked.read_text() == "SENTINEL"
+    written = write_device_artifacts(
+        _GOOD_DEVICE, quick=False,
+        artifacts_dir=str(artifacts), tracked_path=str(tracked))
+    assert str(tracked) in written
+    assert json.loads(tracked.read_text()) == _GOOD_DEVICE
+
+
+@pytest.mark.ci_smoke
+def test_quick_device_benchmark_beats_numpy():
+    """Reduced-size device-scan benchmark -> schema-valid artifact:
+    counts bit-identical to the host skipping oracle, zero steady-state
+    uploads, the fused launch beating the numpy plane-scan reference
+    (the in-suite twin of the CI smoke gate's ``benchmarks.run --quick
+    --only device``)."""
+    from benchmarks import bench_device
+
+    out = bench_device.run(n_records=6144, repeats=2, quick=True)
+    validate_device(out)
 
 
 def test_quick_run_never_touches_tracked_artifact(tmp_path):
