@@ -317,6 +317,61 @@ def validate_device(obj: dict) -> None:
              f"roofline_frac {frac} outside (0, 1]")
 
 
+_BATCH_SIDE = {
+    "scan_s": numbers.Real,
+    "us_per_query": numbers.Real,
+}
+
+
+def validate_batch(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid batch artifact.
+
+    Beyond shape, this gates the multi-query plane's CLAIM (DESIGN.md
+    §16): per-query counts AND accounting bit-identical to the
+    sequential scanner oracle, batch-of-8 >= 2x over sequential scans at
+    full size (>= 0.8x for reduced-size ``--quick`` runs, which gate
+    against collapse only — tiny stores leave little parse work for the
+    batcher to share), and warm-cache repeats >= 5x over the uncached
+    batch (>= 1.5x quick).
+    """
+    _require(isinstance(obj, dict), "batch", "top level must be an object")
+    for key in ("quick", "n_records", "n_segments", "n_queries",
+                "n_slices", "audit_key", "sequential", "batched",
+                "speedup", "cache", "cache_speedup", "counts_match",
+                "accounting_match"):
+        _require(key in obj, "batch", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "batch", "'quick' must be bool")
+    _require(isinstance(obj["audit_key"], str) and obj["audit_key"],
+             "batch", "audit_key must be a non-empty string")
+    for side in ("sequential", "batched"):
+        _check_fields(obj[side], _BATCH_SIDE, side)
+        _require(obj[side]["scan_s"] > 0, side, "scan_s must be positive")
+    _check_fields(obj["cache"], {
+        "warm_scan_s": numbers.Real,
+        "uncached_scan_s": numbers.Real,
+        "speedup": numbers.Real,
+        "hits": numbers.Integral,
+        "misses": numbers.Integral,
+        "hit_rate": numbers.Real,
+    }, "cache")
+    _require(obj["counts_match"] is True, "batch",
+             "batched counts diverged from the sequential oracle")
+    _require(obj["accounting_match"] is True, "batch",
+             "batched accounting diverged from the sequential oracle")
+    _require(obj["n_queries"] >= 8, "batch", "need a panel of >= 8 queries")
+    _require(obj["n_segments"] >= 2, "batch", "need >= 2 segments")
+    _require(obj["cache"]["hits"] >= 1, "batch",
+             "the warm pass never hit the result cache")
+    floor = 0.8 if obj["quick"] else 2.0
+    _require(obj["speedup"] >= floor, "batch",
+             f"batch-of-{obj['n_queries']} speedup {obj['speedup']} < "
+             f"required {floor}x over sequential scans")
+    c_floor = 1.5 if obj["quick"] else 5.0
+    _require(obj["cache_speedup"] >= c_floor, "batch",
+             f"warm-cache speedup {obj['cache_speedup']} < required "
+             f"{c_floor}x over the uncached batch")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -329,6 +384,8 @@ _VALIDATORS = {
     "BENCH_shard.json": validate_shard,
     "bench_device.json": validate_device,
     "BENCH_device.json": validate_device,
+    "bench_batch.json": validate_batch,
+    "BENCH_batch.json": validate_batch,
 }
 
 

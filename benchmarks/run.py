@@ -100,13 +100,25 @@ def write_device_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_batch_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_batch.json",
+) -> list[str]:
+    """Write the multi-query batch benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_batch
+
+    return _write_gated_artifacts(
+        out, validator=validate_batch, detail_name="bench_batch.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,shard,device,roofline")
+             "scan,shard,device,batch,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -267,6 +279,22 @@ def main() -> None:
             f"x{out['speedup']}_vs_numpy;batch8_x{out['batch8_speedup']};"
             f"uploads_steady_{out['uploads_steady']};"
             f"roofline_frac_{out['roofline_frac']};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "batch" in only:
+        from . import bench_batch
+
+        out = bench_batch.run(
+            n_records=6144 if args.quick else 24576,
+            repeats=2 if args.quick else 3,
+            quick=args.quick,
+        )
+        write_batch_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "batch_scan", out["batched"]["us_per_query"],
+            f"seq_{out['sequential']['us_per_query']}us;x{out['speedup']};"
+            f"cache_x{out['cache_speedup']};"
             f"counts_match_{out['counts_match']}",
         ))
 

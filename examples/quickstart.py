@@ -4,6 +4,9 @@ Builds a query workload over the YCSB-like dataset, selects predicates to
 push down under a 1 µs/record client budget, ingests with partial loading,
 and runs data-skipping queries — printing the same three bars as the
 paper's figures (prefilter / loading / query) vs the zero-budget baseline.
+Finishes on the multi-query plane (DESIGN.md §16): the same queries
+batched through ``ScanBatcher``, re-served from a ``ResultCache``, and
+the store's ``stats_report()`` telemetry snapshot.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -78,3 +81,34 @@ print(f"{'query (200q)':18s}{query_s:>9.3f}s{base_query_s:>9.3f}s"
       f"{base_query_s / query_s:>8.1f}x")
 e2e = (base_loading_s + base_query_s) / (loading_s + query_s)
 print(f"end-to-end (server path): {e2e:.1f}x   — all query counts identical")
+
+# 5) multi-query plane: batch the workload through ONE pass per segment,
+# re-serve verbatim repeats from the epoch-validated result cache, and
+# read the telemetry the store kept while all of the above ran (§16)
+from repro.core.batch_scan import ResultCache, ScanBatcher
+
+panel = workload.queries[:8]
+# exactness first (untimed — this also pays the one-off lazy import of
+# the shared batch compiler in repro.kernels.plan)
+probe = ScanBatcher(store, log_queries=False)
+batch_counts = [r.count for r in probe.scan_batch(panel)]
+assert batch_counts == [scanner.scan(q).count for q in panel], \
+    "batching must be exact"
+
+batcher = ScanBatcher(store, cache=ResultCache(), log_queries=False)
+t0 = time.perf_counter()
+batcher.scan_batch(panel)            # cold: one batched pass, fills cache
+batch_s = time.perf_counter() - t0
+t0 = time.perf_counter()
+batcher.scan_batch(panel)            # verbatim repeat: answered from cache
+warm_s = time.perf_counter() - t0
+cache = batcher.cache
+print(f"\nbatch of {len(panel)}: {batch_s * 1e3:.1f} ms cold, "
+      f"{warm_s * 1e3:.2f} ms warm (cache hit rate "
+      f"{cache.hit_rate:.0%}, {cache.hits} hits / {cache.misses} misses)")
+
+tenant = store.stats_report()["telemetry"]["tenants"]["default"]
+print(f"telemetry[default]: {tenant['scans']} scans, "
+      f"zone_skip {tenant['zone_skip_fraction']:.0%}, "
+      f"row_skip {tenant['row_skip_fraction']:.0%}, "
+      f"p50 {tenant['latency']['p50_us']:.0f} us")

@@ -29,6 +29,15 @@ every surviving shard can own a jax device
 are padded to common buckets, stacked, and each device evaluates its
 own shard's rows; otherwise shards launch sequentially with identical
 results.
+
+Public contract, shared with every other scanner: ``ScanResult.groups``
+sorted by (epoch, tier), deterministic merge order, accounting
+bit-identical to the host ``DataSkippingScanner``.  Since DESIGN.md §16
+a :class:`~repro.core.batch_scan.ResultCache` can be attached (distinct
+from the segment cache: it stores finished ``ScanResult`` objects keyed on
+type-strict predicates, validated per ``(epoch, data_version)``) and
+every scan is folded into the store's
+:class:`~repro.core.telemetry.TelemetryPlane`.
 """
 from __future__ import annotations
 
@@ -48,7 +57,7 @@ from repro.core.server import CiaoStore, DataSkippingScanner, ScanResult
 from repro.core.shard import ShardedCiaoStore, merge_scan_results
 from repro.dist.sharding import scan_mesh
 from repro.kernels.scan_fused import (
-    DevicePlaneArrays, ScanBatch, ScanParams, bucket_pow2,
+    DevicePlaneArrays, ScanBatch, ScanParams,
     compile_scan_batch, scan_core_numpy, scan_core_xla, scan_counts,
 )
 
@@ -74,12 +83,26 @@ class DeviceScanner:
 
     def __init__(self, store: CiaoStore, *, backend: str = "xla",
                  byte_budget: int = 256 << 20, log_queries: bool = True,
-                 r_blk: int = 512):
+                 r_blk: int = 512, result_cache: "object | None" = None,
+                 telemetry: "object | bool | None" = None,
+                 tenant: str = "default"):
         self.store = store
         self.backend = backend
         self.log_queries = log_queries
         self.r_blk = r_blk
         self.cache = DeviceSegmentCache(byte_budget=byte_budget)
+        # optional core.batch_scan.ResultCache — NOT the segment cache
+        # above: entries are whole per-query ScanResults under the same
+        # (shard 0, clauses) keys and (epoch, data_version) validity the
+        # host batcher and ShardedScanner use, so host and device paths
+        # share one cache and one accounting contract (DESIGN.md §16)
+        self.result_cache = result_cache
+        from repro.core.telemetry import TelemetryPlane
+        if telemetry is None:
+            telemetry = getattr(store, "telemetry", None)
+        self.telemetry = telemetry if isinstance(telemetry, TelemetryPlane) \
+            else None
+        self.tenant = tenant
         self._synced_version = -1
         # backend="numpy" baseline: host mirror of the plane, converted
         # once per plane generation (not per scan)
@@ -87,7 +110,8 @@ class DeviceScanner:
         self._np_plane_src = None
         # host fallback for open tails / evicted segments / non-lowerable
         # queries; shares the store, so memoized segment state is shared
-        self._host = DataSkippingScanner(store, log_queries=False)
+        self._host = DataSkippingScanner(store, log_queries=False,
+                                         telemetry=False)
 
     # -- public API ---------------------------------------------------------
 
@@ -96,17 +120,60 @@ class DeviceScanner:
 
     def scan_batch(self, queries: Sequence[Query]) -> list[ScanResult]:
         """All queries in one launch; results bit-identical to sequential
-        ``DataSkippingScanner.scan`` calls in the same order."""
+        ``DataSkippingScanner.scan`` calls in the same order.
+
+        With a ``result_cache`` attached, each query consults it in batch
+        order (a hit skips the query's promotion step — valid entries
+        imply a re-scan would promote nothing) and misses are compiled
+        into one launch; fresh results are stored at the post-batch
+        ``data_version``.
+        """
         t0 = time.perf_counter()
+        store = self.store
+        queries = tuple(queries)
         if self.log_queries:
             for q in queries:
-                self.store.log_query(q)
-        prep = self._prepare(queries)
-        counts, cands = self._launch(prep)
-        results = self._assemble(prep, counts, cands)
+                store.log_query(q)
+        hits: dict[int, ScanResult] = {}
+        miss: list[int] = []
+        pushed_maps: list = []
+        promoted: list[dict] = []
+        jit_vis: list[int] = []
+        for qi, q in enumerate(queries):
+            if self.result_cache is not None:
+                r = self.result_cache.lookup(
+                    0, q, epoch=store.plan.epoch,
+                    data_version=store.data_version)
+                if r is not None:
+                    hits[qi] = r
+                    continue
+            pm = store.pushed_by_epoch(q)
+            pushed_maps.append(pm)
+            promoted.append(dict(store.promote_uncovered_raw(pm)))
+            jit_vis.append(len(store.jit_blocks))
+            miss.append(qi)
+        by_pos: dict[int, ScanResult] = dict(hits)
+        if miss:
+            prep = self._prepare(
+                [queries[qi] for qi in miss], pushed_maps=pushed_maps,
+                promoted=promoted, jit_vis=jit_vis)
+            counts, cands = self._launch(prep)
+            for qi, r in zip(miss, self._assemble(prep, counts, cands)):
+                by_pos[qi] = r
+                if self.result_cache is not None:
+                    self.result_cache.store(
+                        0, queries[qi], r, epoch=store.plan.epoch,
+                        data_version=store.data_version)
+        results = [by_pos[qi] for qi in range(len(queries))]
         dt = time.perf_counter() - t0
-        for r in results:
+        for qi, r in enumerate(results):
             r.time_s = dt / max(len(results), 1)
+            if self.telemetry is not None:
+                self.telemetry.record_scan(
+                    r, tenant=self.tenant,
+                    cache_hits=int(qi in hits),
+                    cache_misses=int(self.result_cache is not None
+                                     and qi not in hits))
         return results
 
     # -- pipeline stages (ShardedDeviceScanner drives these directly) ------
@@ -209,6 +276,7 @@ class DeviceScanner:
                 g.rows_scanned += cand
                 g.rows_skipped += seg.n_rows - cand
                 g.count += int(counts[qi, si])
+                result.segments_scanned += 1
 
             for seg in store.blocks:
                 g = result.group(seg.epoch, seg.tier)
@@ -331,12 +399,20 @@ class ShardedDeviceScanner:
 
     def __init__(self, store: ShardedCiaoStore, *, backend: str = "xla",
                  byte_budget: int = 256 << 20, log_queries: bool = True,
-                 r_blk: int = 512, spmd: bool | None = None):
+                 r_blk: int = 512, spmd: bool | None = None,
+                 telemetry: "object | bool | None" = None,
+                 tenant: str = "default"):
         self.store = store
         self.log_queries = log_queries
+        from repro.core.telemetry import TelemetryPlane
+        if telemetry is None:
+            telemetry = getattr(store, "telemetry", None)
+        self.telemetry = telemetry if isinstance(telemetry, TelemetryPlane) \
+            else None
+        self.tenant = tenant
         self._scanners = [
             DeviceScanner(s, backend=backend, byte_budget=byte_budget,
-                          log_queries=False, r_blk=r_blk)
+                          log_queries=False, r_blk=r_blk, telemetry=False)
             for s in store.shards
         ]
         # None = auto: engage iff a ("shards",) mesh fits the device count
@@ -443,5 +519,7 @@ class ShardedDeviceScanner:
                 merged.used_skipping = any(
                     store.pushed_by_epoch(q).values())
             merged.time_s = dt / max(len(queries), 1)
+            if self.telemetry is not None:
+                self.telemetry.record_scan(merged, tenant=self.tenant)
             out.append(merged)
         return out

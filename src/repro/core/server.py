@@ -40,6 +40,7 @@ from .columnar import (
     query_mask, segment_from_packed,
 )
 from .predicates import Clause, Query, clause_from_obj, clause_to_obj
+from .telemetry import TelemetryPlane
 
 
 class StaleEpochError(ValueError):
@@ -401,9 +402,13 @@ class CiaoStore:
         self.query_log_cap = 4096
         # monotonic counter bumped whenever the resident segment surface
         # changes (ingest, JIT promotion, restore) — the device segment
-        # cache (DESIGN.md §15) keys its sync fast-path on it, so
-        # steady-state scans skip even the admission scan over ``segments``
+        # cache (DESIGN.md §15) keys its sync fast-path on it, and the
+        # result cache (DESIGN.md §16) validates entries against it, so
+        # an ingest or promotion invalidates every cached answer
         self.data_version = 0
+        # per-tenant/per-tier scan + ingest statistics (DESIGN.md §16);
+        # scanners built over this store record into it by default
+        self.telemetry = TelemetryPlane()
 
     # -- segment surface -----------------------------------------------------
     def _builder(self, epoch: int, n_covered: int, tier: int
@@ -456,6 +461,31 @@ class CiaoStore:
     @property
     def epoch(self) -> int:
         return self.plan.epoch
+
+    def stats_report(self) -> dict:
+        """JSON-able operational snapshot: load stats, resident surface,
+        and the full per-tenant/per-tier telemetry plane (DESIGN.md §16).
+        The monitoring endpoint every front-end exposes — the sharded
+        plane's report nests one of these per shard."""
+        s = self.stats
+        return {
+            "epoch": self.plan.epoch,
+            "data_version": self.data_version,
+            "load": {
+                "n_records": s.n_records,
+                "n_loaded": s.n_loaded,
+                "n_jit_loaded": s.n_jit_loaded,
+                "loading_ratio": round(s.loading_ratio, 4),
+                "load_time_s": round(s.load_time_s, 6),
+                "parse_time_s": round(s.parse_time_s, 6),
+                "jit_time_s": round(s.jit_time_s, 6),
+            },
+            "resident_group_rows": {
+                f"{e},{t}": n
+                for (e, t), n in sorted(self.resident_group_rows().items())
+            },
+            "telemetry": self.telemetry.snapshot(),
+        }
 
     @property
     def clause_counts(self) -> np.ndarray:
@@ -1000,6 +1030,9 @@ class ScanResult:
     # independent of the pushed-bitvector path, so NOT part of
     # used_skipping, which keeps its pushed-clause meaning)
     segments_pruned: int = 0
+    # segments whose rows were actually visited (the zone-prune
+    # denominator: visited = segments_scanned + segments_pruned)
+    segments_scanned: int = 0
     # sharded scatter-gather only (DESIGN.md §14): shards whose partition
     # metadata refuted the query (first-level skipping) vs shards scanned
     shards_scanned: int = 0
@@ -1033,14 +1066,26 @@ class DataSkippingScanner:
     default is the host numpy reduction.
 
     Every scan is appended to ``store.query_log`` — the replan control
-    plane's workload-drift signal (paper §V workload estimation).
+    plane's workload-drift signal (paper §V workload estimation) — and
+    recorded into the store's telemetry plane (DESIGN.md §16) under
+    ``tenant``.  ``telemetry`` is tri-state: ``None`` inherits
+    ``store.telemetry``, ``False`` disables recording (inner scanners of
+    multi-store front-ends, which record once at the top), or an explicit
+    :class:`~repro.core.telemetry.TelemetryPlane`.
     """
 
     def __init__(self, store: CiaoStore, *, log_queries: bool = True,
-                 and_reduce: Callable | None = None):
+                 and_reduce: Callable | None = None,
+                 telemetry: "TelemetryPlane | bool | None" = None,
+                 tenant: str = "default"):
         self.store = store
         self.log_queries = log_queries
         self.and_reduce = and_reduce
+        if telemetry is None:
+            telemetry = getattr(store, "telemetry", None)
+        self.telemetry = telemetry if isinstance(telemetry, TelemetryPlane) \
+            else None
+        self.tenant = tenant
 
     def _scan_segment(self, seg: ColumnarSegment, q: Query,
                       pushed: Sequence[int], g: TierScan,
@@ -1058,6 +1103,7 @@ class DataSkippingScanner:
         g.rows_scanned += cand
         g.rows_skipped += seg.n_rows - cand
         g.count += int(mask.sum())
+        result.segments_scanned += 1
 
     def scan(self, q: Query) -> ScanResult:
         t0 = time.perf_counter()
@@ -1093,6 +1139,8 @@ class DataSkippingScanner:
             result.raw_parsed += g.raw_parsed
         result.time_s = time.perf_counter() - t0
         result.used_skipping = any(pushed_by_epoch.values())
+        if self.telemetry is not None:
+            self.telemetry.record_scan(result, tenant=self.tenant)
         return result
 
 

@@ -27,10 +27,17 @@ module scales it out into N shards:
     store (:meth:`ShardedCiaoStore.load`) and :func:`reshard`
     re-partitions a store offline onto a new router.
 
-Every query over a sharded store returns counts bit-identical to the
-unsharded oracle across engines, epochs, and tiers — pinned by the
-differential sweep in ``tests/test_shard.py`` and the ``bench_shard``
-schema gate.
+Public contract: every query over a sharded store returns counts AND
+accounting bit-identical to the unsharded oracle across engines,
+epochs, and tiers — ``ScanResult.groups`` sorted by (epoch, tier),
+merge order deterministic regardless of thread scheduling — pinned by
+the differential sweep in ``tests/test_shard.py`` and the
+``bench_shard`` schema gate.  Since DESIGN.md §16 the scanner optionally
+consults a per-shard :class:`~repro.core.batch_scan.ResultCache` before
+dispatch (validated against each shard's ``(epoch, data_version)``,
+cached shards skipped and merged in the same stable order) and folds
+every merged result into the store's
+:class:`~repro.core.telemetry.TelemetryPlane`.
 """
 from __future__ import annotations
 
@@ -62,6 +69,7 @@ from .server import (
     RawRemainder, ScanResult, TierScan, _EpochPushdown,
     resolve_ingest_coverage,
 )
+from .telemetry import TelemetryPlane
 
 # distinct values tracked per key per shard before the value-set summary
 # saturates (min/max survives saturation; set-based refutation does not)
@@ -403,6 +411,10 @@ class ShardedCiaoStore:
         self.route_time_s = 0.0
         self.query_log: list[Query] = []
         self.query_log_cap = 4096
+        # front-end telemetry plane (DESIGN.md §16): scanners over the
+        # sharded store record ONCE here (per merged query), never into
+        # the per-shard stores' planes
+        self.telemetry = TelemetryPlane()
 
     # -- shared plan state ---------------------------------------------------
     @property
@@ -452,6 +464,28 @@ class ShardedCiaoStore:
         agg.load_time_s += self.route_time_s
         agg.parse_time_s += self.route_time_s
         return agg
+
+    def stats_report(self) -> dict:
+        """JSON-able operational snapshot: the front-end telemetry plane
+        (where sharded scanners record their merged per-query results)
+        plus one nested :meth:`CiaoStore.stats_report` per shard."""
+        s = self.stats
+        return {
+            "epoch": self.epoch,
+            "data_version": self.data_version,
+            "n_shards": self.n_shards,
+            "load": {
+                "n_records": s.n_records,
+                "n_loaded": s.n_loaded,
+                "n_jit_loaded": s.n_jit_loaded,
+                "loading_ratio": round(s.loading_ratio, 4),
+                "load_time_s": round(s.load_time_s, 6),
+                "parse_time_s": round(s.parse_time_s, 6),
+                "jit_time_s": round(s.jit_time_s, 6),
+            },
+            "telemetry": self.telemetry.snapshot(),
+            "shards": [sh.stats_report() for sh in self.shards],
+        }
 
     def _sum_epoch(self, attr: str, epoch: int) -> np.ndarray:
         out = None
@@ -827,6 +861,7 @@ def merge_scan_results(results: Sequence[ScanResult]) -> ScanResult:
             used_skipping=a.used_skipping or b.used_skipping,
             groups=groups,
             segments_pruned=a.segments_pruned + b.segments_pruned,
+            segments_scanned=a.segments_scanned + b.segments_scanned,
             shards_scanned=a.shards_scanned + b.shards_scanned,
             shards_pruned=a.shards_pruned + b.shards_pruned,
         )
@@ -865,11 +900,24 @@ class ShardedScanner:
     def __init__(self, store: ShardedCiaoStore, *, log_queries: bool = True,
                  and_reduce: Callable | None = None,
                  max_workers: int | None = None,
-                 parallel_threshold_rows: int = 1 << 20):
+                 parallel_threshold_rows: int = 1 << 20,
+                 cache: "object | None" = None,
+                 telemetry: "TelemetryPlane | bool | None" = None,
+                 tenant: str = "default"):
         self.store = store
         self.log_queries = log_queries
+        # optional core.batch_scan.ResultCache (duck-typed to avoid the
+        # import cycle): per-shard entries under the shared (shard,
+        # clauses) keys, validated per shard (epoch, data_version)
+        self.cache = cache
+        if telemetry is None:
+            telemetry = getattr(store, "telemetry", None)
+        self.telemetry = telemetry if isinstance(telemetry, TelemetryPlane) \
+            else None
+        self.tenant = tenant
         self._scanners = [
-            DataSkippingScanner(s, log_queries=False, and_reduce=and_reduce)
+            DataSkippingScanner(s, log_queries=False, and_reduce=and_reduce,
+                                telemetry=False)
             for s in store.shards
         ]
         self._max_workers = max_workers or min(
@@ -907,6 +955,7 @@ class ShardedScanner:
             store.log_query(q)
         run: list[int] = []
         pruned: list[int] = []
+        hits: dict[int, ScanResult] = {}
         run_rows = 0
         for s in range(store.n_shards):
             shard = store.shards[s]
@@ -916,6 +965,12 @@ class ShardedScanner:
             if store.n_shards > 1 and not store.summaries[s].query_possible(q):
                 pruned.append(s)
                 continue
+            if self.cache is not None:
+                r = self.cache.lookup(s, q, epoch=shard.plan.epoch,
+                                      data_version=shard.data_version)
+                if r is not None:
+                    hits[s] = r   # already a private copy
+                    continue
             run.append(s)
             run_rows += shard.stats.n_records
         use_pool = (len(run) > 1 and self._max_workers > 1
@@ -923,9 +978,18 @@ class ShardedScanner:
         if use_pool:
             pool = self._ensure_pool()
             futures = [pool.submit(self._scanners[s].scan, q) for s in run]
-            results = [f.result() for f in futures]  # stable shard order
+            scanned = [f.result() for f in futures]  # stable shard order
         else:
-            results = [self._scanners[s].scan(q) for s in run]
+            scanned = [self._scanners[s].scan(q) for s in run]
+        if self.cache is not None:
+            for s, r in zip(run, scanned):
+                # post-scan version: the scan's own JIT promotions are
+                # folded in, so a valid future hit implies a re-scan
+                # would promote nothing and counts stay bit-identical
+                self.cache.store(s, q, r, epoch=store.shards[s].plan.epoch,
+                                 data_version=store.shards[s].data_version)
+        by_shard = dict(zip(run, scanned)) | hits
+        results = [by_shard[s] for s in sorted(by_shard)]
         for r in results:
             r.shards_scanned = 1
         if results:
@@ -958,4 +1022,8 @@ class ShardedScanner:
             # dropped by the epoch-1 replan must still report True)
             merged.used_skipping = any(store.pushed_by_epoch(q).values())
         merged.time_s = time.perf_counter() - t0
+        if self.telemetry is not None:
+            self.telemetry.record_scan(merged, tenant=self.tenant,
+                                       cache_hits=len(hits),
+                                       cache_misses=len(run))
         return merged

@@ -76,6 +76,10 @@ class ClientShard:
     family: PlanFamily | None = None    # tiered deployments only
     tier: int = 0
     cost_ewma_alpha: float = 0.3
+    # optional core.telemetry.TelemetryPlane (typically the store's):
+    # every evaluation reports its measured wall-clock there, feeding
+    # FleetTierAllocator measured per-client rates (DESIGN.md §16)
+    telemetry: object | None = None
 
     def __post_init__(self) -> None:
         self._stream = record_stream(self.dataset, seed=1000 + self.shard_id)
@@ -137,6 +141,9 @@ class ClientShard:
         self.eval_time_s += dt
         self.eval_records += chunk.n_records
         self._update_cost_scale(dt, chunk.n_records)
+        if self.telemetry is not None:
+            self.telemetry.record_client_eval(
+                self.shard_id, dt, chunk.n_records)
         return bv
 
     def next_chunk(self) -> tuple[Chunk, bitvector.ChunkBitvectors]:
@@ -188,7 +195,8 @@ class FleetTierAllocator:
     """
 
     def __init__(self, family: PlanFamily, budget_us: float, *,
-                 retier_every_records: int = 4096):
+                 retier_every_records: int = 4096,
+                 telemetry: object | None = None):
         if not family.tier_costs:
             raise ValueError(
                 "allocator needs a family with tier_costs "
@@ -199,10 +207,21 @@ class FleetTierAllocator:
         self.allocation: TierAllocation | None = None
         self.retier_events = 0
         self._records_since = 0
+        # optional core.telemetry.TelemetryPlane: when attached (and fed
+        # by ClientShard.evaluate reports), profiles() weights clients by
+        # their MEASURED record rates instead of the speed*chunk prior
+        self.telemetry = telemetry
 
     def profiles(self, clients: Sequence[ClientShard]) -> list[ClientProfile]:
-        rates = np.array(
-            [max(c.speed * c.chunk_records, 1e-12) for c in clients])
+        rates = []
+        for c in clients:
+            rate = max(c.speed * c.chunk_records, 1e-12)  # modeled prior
+            if self.telemetry is not None:
+                m = self.telemetry.client_eval(c.shard_id)
+                if m is not None and m["records_per_s"] > 0:
+                    rate = m["records_per_s"]             # measured
+            rates.append(rate)
+        rates = np.array(rates)
         weights = rates / rates.sum()
         return [
             ClientProfile(cost_scale=c.cost_scale, weight=float(w))

@@ -20,6 +20,13 @@ are ordered simple-first so the simple/key-value boundary is a static
 split point.  Key and value patterns get SEPARATE padded widths — values
 are typically much shorter than quoted keys, so the value window loops
 stay tight.
+
+The QUERY-side mirror of the same idea is :func:`compile_query_batch`
+(DESIGN.md §16): it dedups a multi-query batch query -> clause -> term,
+keyed on the predicates' own type-strict equality (not pattern bytes —
+see the function docstring), and both multi-query execution planes
+consume it: the host :class:`~repro.core.batch_scan.ScanBatcher` and the
+device batch compiler (``kernels.scan_fused.compile_scan_batch``).
 """
 from __future__ import annotations
 
@@ -29,7 +36,9 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.client import dedup_terms, encode_patterns
-from repro.core.predicates import Clause, Kind
+from repro.core.predicates import (
+    Clause, Kind, Query, SimplePredicate, lowerable,
+)
 
 _PAT_ALIGN = 8  # pattern width bucket (stabilizes jit specializations)
 
@@ -174,4 +183,96 @@ def compile_plan(clauses: Sequence[Clause]) -> CompiledPlan:
         membership=membership[:, perm].astype(np.uint8),
         ukeys=ukeys, uklens=uklens, uvals=uvals, uvlens=uvlens, uunb=uunb,
         key_ids=key_ids, val_ids=val_ids,
+    )
+
+
+# ---------------------------------------------------------------------------
+# multi-query batch compilation (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QueryBatch:
+    """Three-level dedup of a query batch: query -> clause -> term.
+
+    The shared front half of both multi-query planes — the host
+    :class:`~repro.core.batch_scan.ScanBatcher` evaluates each unique
+    clause once per segment and recombines per query through
+    ``query_clause``; the device compiler
+    (``kernels.scan_fused.compile_scan_batch``) extends the same tables
+    into its per-scan parameter form.  First-occurrence order everywhere:
+    ``clauses[j]`` is the j-th distinct clause encountered walking the
+    batch in query order, so indexes are deterministic for a given batch.
+    """
+
+    queries: tuple[Query, ...]
+    clauses: tuple[Clause, ...]          # unique clauses across the batch
+    terms: tuple[SimplePredicate, ...]   # unique terms across those clauses
+    membership: np.ndarray               # uint8[C, T] clause -> term
+    query_clause: np.ndarray             # uint8[Q, C] query -> clause
+    clause_ids: tuple[tuple[int, ...], ...]   # per query: its clause rows
+    lowerable: tuple[bool, ...]          # per query: every term lowerable
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.queries)
+
+    @property
+    def n_clauses(self) -> int:
+        return len(self.clauses)
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.terms)
+
+
+def compile_query_batch(queries: Sequence[Query]) -> QueryBatch:
+    """Dedup clauses and terms across a query batch.
+
+    Mirrors the ingest path's :func:`compile_plan`/``dedup_terms`` shape —
+    one slot per unique disjunct, a clause-membership matrix, and here
+    additionally a query->clause matrix — but keys the dedup on the
+    predicates' own TYPE-STRICT equality (``SimplePredicate.__eq__``
+    includes ``type(value)``).  ``dedup_terms`` keys on pattern BYTES,
+    which is sound for the raw-matching client engines (identical
+    patterns match identical byte positions) but not for columnar
+    evaluation: EXACT compiles a value-only pattern, so ``EXACT(a, "x")``
+    and ``EXACT(b, "x")`` alias at the byte level while reading different
+    columns.
+    """
+    queries = tuple(queries)
+    cl_index: dict[Clause, int] = {}
+    clauses: list[Clause] = []
+    clause_ids: list[tuple[int, ...]] = []
+    for q in queries:
+        rows = []
+        for c in q.clauses:
+            ci = cl_index.get(c)
+            if ci is None:
+                ci = cl_index[c] = len(clauses)
+                clauses.append(c)
+            rows.append(ci)
+        clause_ids.append(tuple(rows))
+    t_index: dict[SimplePredicate, int] = {}
+    terms: list[SimplePredicate] = []
+    for c in clauses:
+        for t in c.terms:
+            if t not in t_index:
+                t_index[t] = len(terms)
+                terms.append(t)
+    membership = np.zeros((len(clauses), len(terms)), np.uint8)
+    for ci, c in enumerate(clauses):
+        for t in c.terms:
+            membership[ci, t_index[t]] = 1
+    query_clause = np.zeros((len(queries), len(clauses)), np.uint8)
+    for qi, rows in enumerate(clause_ids):
+        for ci in rows:
+            query_clause[qi, ci] = 1
+    low = tuple(
+        all(lowerable(t) for c in q.clauses for t in c.terms)
+        for q in queries
+    )
+    return QueryBatch(
+        queries=queries, clauses=tuple(clauses), terms=tuple(terms),
+        membership=membership, query_clause=query_clause,
+        clause_ids=tuple(clause_ids), lowerable=low,
     )

@@ -63,10 +63,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.predicates import (
-    Clause, Kind, Query, SimplePredicate, lowerable,
-)
+from repro.core.predicates import Clause, Kind, Query, SimplePredicate
 
+from .plan import compile_query_batch
 from .residual import _pow2
 
 KIND_PRESENCE = 0
@@ -115,46 +114,19 @@ class ScanBatch:
 def compile_scan_batch(queries: Sequence[Query]) -> ScanBatch:
     """Dedup clauses and terms across a query batch.
 
-    Mirrors the ingest path's ``compile_plan``/``dedup_terms`` shape —
-    one slot per unique disjunct, a clause-membership matrix, and here
-    additionally a query->clause matrix — but keys the dedup on the
-    predicates' own type-strict equality.  ``dedup_terms`` keys on
-    pattern BYTES, which is sound for the raw-matching client engines
-    (identical patterns match identical byte positions) but not for
-    columnar evaluation: EXACT compiles a value-only pattern, so
-    ``EXACT(a, "x")`` and ``EXACT(b, "x")`` alias at the byte level
-    while reading different columns.
+    Thin wrapper over :func:`repro.kernels.plan.compile_query_batch` —
+    ONE implementation of the query -> clause -> term type-strict dedup
+    serves both multi-query planes (the host ``ScanBatcher`` and this
+    device compiler); see its docstring for why the dedup keys on
+    predicate equality rather than ``dedup_terms``' pattern bytes.
+    ``query_ok`` is the per-query device-eligibility flag: every term
+    must lower onto the dictionary-code plane.
     """
-    queries = tuple(queries)
-    cl_index: dict[Clause, int] = {}
-    clauses: list[Clause] = []
-    for q in queries:
-        for c in q.clauses:
-            if c not in cl_index:
-                cl_index[c] = len(clauses)
-                clauses.append(c)
-    t_index: dict[SimplePredicate, int] = {}
-    terms: list[SimplePredicate] = []
-    for c in clauses:
-        for t in c.terms:
-            if t not in t_index:
-                t_index[t] = len(terms)
-                terms.append(t)
-    membership = np.zeros((len(clauses), len(terms)), np.uint8)
-    for ci, c in enumerate(clauses):
-        for t in c.terms:
-            membership[ci, t_index[t]] = 1
-    query_clause = np.zeros((len(queries), len(clauses)), np.uint8)
-    for qi, q in enumerate(queries):
-        for c in q.clauses:
-            query_clause[qi, cl_index[c]] = 1
-    query_ok = tuple(
-        all(lowerable(t) for c in q.clauses for t in c.terms)
-        for q in queries
-    )
+    qb = compile_query_batch(queries)
     return ScanBatch(
-        queries=queries, clauses=tuple(clauses), terms=tuple(terms),
-        membership=membership, query_clause=query_clause, query_ok=query_ok,
+        queries=qb.queries, clauses=qb.clauses, terms=qb.terms,
+        membership=qb.membership, query_clause=qb.query_clause,
+        query_ok=qb.lowerable,
     )
 
 
