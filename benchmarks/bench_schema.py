@@ -372,6 +372,63 @@ def validate_batch(obj: dict) -> None:
              f"{c_floor}x over the uncached batch")
 
 
+def validate_serve(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid serve artifact.
+
+    Beyond shape, this gates the async serving plane's CLAIM (DESIGN.md
+    §17): every count answered during live ingest bounded by the
+    ``matches_exact`` oracle and the quiesced panel BIT-IDENTICAL to it,
+    p99 scan latency under live writes <= 3x the quiesced p99 at the
+    same reader concurrency (<= 8x quick — tiny quick stores leave the
+    snapshot churn nothing to amortize over), and aggregate scan
+    throughput >= 2x the serialized ingest-then-scan loop (>= 0.5x
+    quick, a collapse gate only).
+    """
+    _require(isinstance(obj, dict), "serve", "top level must be an object")
+    for key in ("quick", "n_records", "n_chunks", "n_shards",
+                "query_threads", "panel_size", "cpu_count", "serialized",
+                "live", "quiesced", "throughput_speedup", "p99_ratio",
+                "counts_match", "live_counts_bounded"):
+        _require(key in obj, "serve", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "serve", "'quick' must be bool")
+    _check_fields(obj["serialized"], {
+        "ingest_s": numbers.Real,
+        "total_s": numbers.Real,
+        "queries": numbers.Integral,
+        "qps": numbers.Real,
+    }, "serialized")
+    _check_fields(obj["live"], {
+        "total_s": numbers.Real,
+        "queries": numbers.Integral,
+        "qps": numbers.Real,
+        "p50_us": numbers.Real,
+        "p99_us": numbers.Real,
+        "blocked_s": numbers.Real,
+    }, "live")
+    _check_fields(obj["quiesced"], {
+        "queries": numbers.Integral,
+        "p50_us": numbers.Real,
+        "p99_us": numbers.Real,
+    }, "quiesced")
+    for side in ("serialized", "live"):
+        _require(obj[side]["total_s"] > 0, side, "total_s must be positive")
+        _require(obj[side]["queries"] > 0, side, "queries must be positive")
+    _require(obj["query_threads"] >= 8, "serve",
+             "the claim is gated at >= 8 query threads")
+    _require(obj["counts_match"] is True, "serve",
+             "quiesced counts diverged from the matches_exact oracle")
+    _require(obj["live_counts_bounded"] is True, "serve",
+             "a live count exceeded the final oracle (phantom rows)")
+    floor = 0.5 if obj["quick"] else 2.0
+    _require(obj["throughput_speedup"] >= floor, "serve",
+             f"aggregate scan throughput {obj['throughput_speedup']}x < "
+             f"required {floor}x over the serialized ingest-then-scan loop")
+    ceil = 8.0 if obj["quick"] else 3.0
+    _require(obj["p99_ratio"] <= ceil, "serve",
+             f"live p99 is {obj['p99_ratio']}x the quiesced p99 > "
+             f"allowed {ceil}x")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -386,6 +443,8 @@ _VALIDATORS = {
     "BENCH_device.json": validate_device,
     "bench_batch.json": validate_batch,
     "BENCH_batch.json": validate_batch,
+    "bench_serve.json": validate_serve,
+    "BENCH_serve.json": validate_serve,
 }
 
 

@@ -1,0 +1,277 @@
+"""Async serving plane: concurrent ingest + snapshot scans (§17).
+
+Measures what :class:`~repro.serve.store_engine.CiaoServeEngine` buys
+over the architecture it replaces: a serialized ingest-then-scan loop
+that cannot answer a single query until the load finishes.  Both sides
+run the identical workload — the same pre-encoded chunk stream into a
+4-shard store, the same 8-query panel — and the metric is *aggregate
+scan throughput*: queries answered per second of total wall-clock.
+
+  * **serialized baseline** — ingest every chunk, THEN scan the panel
+    repeatedly on one thread (the panel pass count adapts so the scan
+    phase is a meaningful fraction of the ingest time).  Queries served
+    during ingest: zero, by construction — that dead window is the cost
+    the serving plane exists to delete.
+  * **live engine** — a feeder thread streams the same chunks through
+    the engine's backpressured write queues while ``query_threads``
+    reader threads answer the panel continuously from epoch snapshots
+    (mixed ``host`` / ``batch`` modes, no result cache: every count is
+    recomputed).  Per-query wall-clock latencies are recorded for the
+    percentile gates.
+
+Claim gates (``bench_schema.validate_serve``):
+
+  * every live count is bounded by the ``matches_exact`` oracle, and
+    after ``quiesce()`` the panel is BIT-IDENTICAL to it on both the
+    host and batch paths (``counts_match``);
+  * live p99 scan latency <= 3x the quiesced p99 at the SAME reader
+    concurrency (<= 8x for reduced-size ``--quick`` runs);
+  * aggregate scan throughput >= 2x the serialized loop at 8 query
+    threads (>= 0.5x quick — tiny quick stores leave almost no ingest
+    window to overlap, so CI gates against collapse only).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core.batch_scan import ScanBatcher
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.predicates import Query
+from repro.core.server import PlanFamily, PushdownPlan
+from repro.core.shard import ShardedCiaoStore, ShardedScanner, ShardRouter, \
+    choose_routing_key
+from repro.data.datasets import generate_records, predicate_pool
+from repro.serve.store_engine import CiaoServeEngine
+
+PANEL_SIZE = 8
+
+
+def _prepare(n_records: int, chunk_records: int):
+    """Pre-encode the chunk stream so both sides measure pure store-side
+    work (client-side eval is the same constant for either architecture)."""
+    recs = generate_records("ycsb", n_records, seed=7)
+    objs = [json.loads(r) for r in recs]
+    pool = predicate_pool("ycsb")
+    # tier 0 has EMPTY coverage: a third of the stream stays raw, so
+    # snapshot-local JIT promotion is part of the measured scan path
+    fam = PlanFamily(plan=PushdownPlan(clauses=pool[:6]),
+                     tier_sizes=(0, 2, 6))
+    eng = NumpyEngine()
+    chunks = []
+    for i, start in enumerate(range(0, n_records, chunk_records)):
+        ch = encode_chunk(recs[start:start + chunk_records])
+        tier = i % fam.n_tiers
+        bv = eng.eval_fused_prefix(ch, fam.plan.clauses,
+                                   fam.tier_sizes[tier])
+        chunks.append((ch, bv, tier))
+    queries = [Query(clauses=(pool[k],)) for k in range(PANEL_SIZE)]
+    oracle = [sum(1 for o in objs if q.matches_exact(o)) for q in queries]
+    return fam, chunks, queries, oracle
+
+
+def _mk_store(fam, n_shards: int, segment_capacity: int) -> ShardedCiaoStore:
+    router = ShardRouter(n_shards=n_shards, key=choose_routing_key(fam.plan))
+    return ShardedCiaoStore(fam, router=router,
+                            segment_capacity=segment_capacity)
+
+
+def _pcts(lat_s: list[float]) -> tuple[float, float]:
+    arr = np.asarray(lat_s, dtype=np.float64) * 1e6
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+def run(n_records: int = 24576, chunk_records: int = 512,
+        segment_capacity: int = 1024, n_shards: int = 4,
+        query_threads: int = 8, quick: bool | None = None) -> dict:
+    quick = (n_records <= 8192) if quick is None else quick
+    fam, chunks, queries, oracle = _prepare(n_records, chunk_records)
+    epoch = fam.plan.epoch
+
+    # process warmup, outside every timed window: the batcher's dedup
+    # compiler imports the kernels package (which pulls jax) on first
+    # use — a one-time interpreter cost, not a serving-plane cost.
+    warm = _mk_store(fam, n_shards, segment_capacity)
+    warm.ingest_chunk(*chunks[0][:2], epoch=epoch, tier=chunks[0][2])
+    ScanBatcher(warm, log_queries=False, telemetry=False) \
+        .scan_batch(queries)
+    ShardedScanner(warm, log_queries=False, telemetry=False) \
+        .scan(queries[0])
+    del warm
+
+    # -- serialized baseline: ingest everything, then scan ----------------
+    store_s = _mk_store(fam, n_shards, segment_capacity)
+    t0 = time.perf_counter()
+    for ch, bv, tier in chunks:
+        store_s.ingest_chunk(ch, bv, epoch=epoch, tier=tier)
+    ingest_s = time.perf_counter() - t0
+    scanner = ShardedScanner(store_s, log_queries=False, telemetry=False)
+    serial_lat: list[float] = []
+
+    def panel_pass() -> None:
+        for q in queries:
+            tq = time.perf_counter()
+            scanner.scan(q)
+            serial_lat.append(time.perf_counter() - tq)
+
+    panel_pass()                  # cold probe: pays promotion + memos
+    panel_pass()                  # warm pass: the steady-state panel cost
+    warm_s = sum(serial_lat[PANEL_SIZE:])
+    # size the scan phase to ~1/3 of the ingest window (a mixed workload,
+    # not a scan microbench) using the WARM cost — the most favorable
+    # amortization the serialized architecture can claim for itself
+    passes = 2 if warm_s <= 0 else \
+        max(2, min(64, int(ingest_s / (3 * warm_s))))
+    for _ in range(passes):
+        panel_pass()
+    total_serial_s = time.perf_counter() - t0
+    q_serial = len(serial_lat)
+    serial_qps = q_serial / total_serial_s
+
+    # -- live engine: feeder + query_threads readers, no result cache -----
+    store_l = _mk_store(fam, n_shards, segment_capacity)
+    serve = CiaoServeEngine(store_l, queue_depth=8)
+    live_lat_per: list[list[float]] = [[] for _ in range(query_threads)]
+    feeder_done = threading.Event()
+    bounded = [True]
+    errors: list[BaseException] = []
+
+    def feed() -> None:
+        try:
+            for ch, bv, tier in chunks:
+                serve.ingest_chunk(ch, bv, epoch=epoch, tier=tier)
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+        finally:
+            feeder_done.set()
+
+    def read(ri: int) -> None:
+        lat = live_lat_per[ri]
+        try:
+            loops = 0
+            while True:
+                for k, q in enumerate(queries):
+                    mode = "batch" if (ri + k) % 2 else "host"
+                    tq = time.perf_counter()
+                    r = serve.query(q, mode=mode)
+                    lat.append(time.perf_counter() - tq)
+                    if r.count > oracle[k]:
+                        bounded[0] = False
+                loops += 1
+                if feeder_done.is_set() and loops >= 2:
+                    return
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=feed)] + [
+        threading.Thread(target=read, args=(i,))
+        for i in range(query_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    serve.quiesce()
+    total_live_s = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    live_lat = [x for per in live_lat_per for x in per]
+    q_live = len(live_lat)
+    live_qps = q_live / total_live_s
+    live_p50, live_p99 = _pcts(live_lat)
+
+    # -- quiesced reference: same reader concurrency, writes stopped ------
+    per_thread = max(2, passes // 2)
+    quiesced_per: list[list[float]] = [[] for _ in range(query_threads)]
+
+    def read_quiesced(ri: int) -> None:
+        lat = quiesced_per[ri]
+        for _ in range(per_thread):
+            for k, q in enumerate(queries):
+                mode = "batch" if (ri + k) % 2 else "host"
+                tq = time.perf_counter()
+                serve.query(q, mode=mode)
+                lat.append(time.perf_counter() - tq)
+
+    qthreads = [threading.Thread(target=read_quiesced, args=(i,))
+                for i in range(query_threads)]
+    for t in qthreads:
+        t.start()
+    for t in qthreads:
+        t.join()
+    quiesced_lat = [x for per in quiesced_per for x in per]
+    q_p50, q_p99 = _pcts(quiesced_lat)
+    p99_ratio = live_p99 / q_p99 if q_p99 > 0 else float("inf")
+
+    # -- exactness gate: quiesced counts vs the row-at-a-time oracle ------
+    counts_match = True
+    for mode in ("host", "batch"):
+        got = [serve.query(q, mode=mode).count for q in queries]
+        counts_match &= (got == oracle)
+    rep = serve.stats_report()
+    counts_match &= (rep["engine"]["errors"] == 0)
+    counts_match &= (rep["engine"]["drained"] == rep["engine"]["enqueued"])
+    serve.close()
+
+    out = {
+        "quick": bool(quick),
+        "n_records": int(n_records),
+        "n_chunks": len(chunks),
+        "n_shards": int(n_shards),
+        "query_threads": int(query_threads),
+        "panel_size": PANEL_SIZE,
+        "cpu_count": int(os.cpu_count() or 1),
+        "serialized": {
+            "ingest_s": round(ingest_s, 6),
+            "total_s": round(total_serial_s, 6),
+            "queries": int(q_serial),
+            "qps": round(serial_qps, 2),
+        },
+        "live": {
+            "total_s": round(total_live_s, 6),
+            "queries": int(q_live),
+            "qps": round(live_qps, 2),
+            "p50_us": round(live_p50, 1),
+            "p99_us": round(live_p99, 1),
+            "blocked_s": rep["engine"]["blocked_s"],
+        },
+        "quiesced": {
+            "queries": len(quiesced_lat),
+            "p50_us": round(q_p50, 1),
+            "p99_us": round(q_p99, 1),
+        },
+        "throughput_speedup": round(live_qps / serial_qps, 2),
+        "p99_ratio": round(p99_ratio, 2),
+        "counts_match": bool(counts_match),
+        "live_counts_bounded": bool(bounded[0]),
+    }
+    print(f"[serve] {n_records} records / {len(chunks)} chunks into "
+          f"{n_shards} shards, panel of {PANEL_SIZE} x "
+          f"{query_threads} reader threads (cpu_count="
+          f"{out['cpu_count']})")
+    print(f"[serve] serialized: ingest {ingest_s:6.2f} s, then "
+          f"{q_serial} queries -> {serial_qps:8.1f} qps over "
+          f"{total_serial_s:.2f} s")
+    print(f"[serve] live:       {q_live} queries DURING ingest -> "
+          f"{live_qps:8.1f} qps over {total_live_s:.2f} s: "
+          f"x{out['throughput_speedup']}")
+    print(f"[serve] p99: live {live_p99:9.1f} us vs quiesced "
+          f"{q_p99:9.1f} us = x{out['p99_ratio']} "
+          f"(p50 {live_p50:.1f} vs {q_p50:.1f} us)")
+    print(f"[serve] counts_match={out['counts_match']} "
+          f"live_counts_bounded={out['live_counts_bounded']}")
+    return out
+
+
+if __name__ == "__main__":
+    os.makedirs("artifacts", exist_ok=True)
+    out = run()
+    with open("artifacts/bench_serve.json", "w") as f:
+        json.dump(out, f, indent=1)

@@ -112,13 +112,26 @@ def write_batch_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_serve_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_serve.json",
+) -> list[str]:
+    """Write the async serving plane benchmark JSON; returns the paths
+    written."""
+    from .bench_schema import validate_serve
+
+    return _write_gated_artifacts(
+        out, validator=validate_serve, detail_name="bench_serve.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,shard,device,batch,roofline")
+             "scan,shard,device,batch,serve,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -295,6 +308,22 @@ def main() -> None:
             "batch_scan", out["batched"]["us_per_query"],
             f"seq_{out['sequential']['us_per_query']}us;x{out['speedup']};"
             f"cache_x{out['cache_speedup']};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "serve" in only:
+        from . import bench_serve
+
+        out = bench_serve.run(
+            n_records=6144 if args.quick else 24576,
+            segment_capacity=512 if args.quick else 1024,
+            quick=args.quick,
+        )
+        write_serve_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "serve_live_p99", out["live"]["p99_us"],
+            f"x{out['throughput_speedup']}_vs_serialized;"
+            f"p99_ratio_{out['p99_ratio']};"
             f"counts_match_{out['counts_match']}",
         ))
 

@@ -5,10 +5,14 @@
   (this container has no network access), registers the deterministic
   sampling shim from ``repro._compat.hypothesis_shim`` under the same
   module name so the property tests still collect and run.
+* Per-test timeout: uses ``pytest-timeout`` when installed (CI does);
+  otherwise falls back to a SIGALRM watchdog so a deadlocked queue in
+  the threaded serve-plane tests fails fast instead of hanging the run.
 """
 from __future__ import annotations
 
 import os
+import signal
 import sys
 
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
@@ -24,8 +28,38 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _shim.strategies
 
 
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+# generous: some tier-1 tests run 900s-budget subprocesses; this guard
+# exists to kill DEADLOCKS (a stuck queue join), not slow tests
+_FALLBACK_TIMEOUT_S = 1200
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "ci_smoke: reduced-size end-to-end gates the CI workflow also runs",
     )
+
+
+if not _HAVE_PYTEST_TIMEOUT and hasattr(signal, "SIGALRM"):
+    import pytest
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        def _alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded the {_FALLBACK_TIMEOUT_S}s deadlock "
+                f"watchdog (conftest SIGALRM fallback): {item.nodeid}")
+
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.alarm(_FALLBACK_TIMEOUT_S)
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)

@@ -44,6 +44,7 @@ same keys and the same validity rule.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from typing import TYPE_CHECKING, Callable, Sequence
 
@@ -96,6 +97,12 @@ class ResultCache:
     never aliased by callers.  Unhashable queries (clause values without
     a type-strict hash) are silently uncacheable: lookups miss, stores
     are dropped.
+
+    Thread-safe (DESIGN.md §17): one cache instance is shared by every
+    reader thread of the serve plane, so the LRU dict mutation and the
+    hit/miss counters are guarded by a lock.  Snapshot-forked
+    ``data_version`` values are negative — already distinct from every
+    live-store version, so no extra keying is needed.
     """
 
     def __init__(self, cap: int = 256):
@@ -103,9 +110,11 @@ class ResultCache:
         self._entries: dict[tuple, tuple[int, int, ScanResult]] = {}
         self.hits = 0
         self.misses = 0
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     @staticmethod
     def _key(shard_id, q: Query):
@@ -119,37 +128,41 @@ class ResultCache:
                data_version: int) -> ScanResult | None:
         """A deep copy of the cached result, or None (miss counted)."""
         key = self._key(shard_id, q)
-        hit = self._entries.get(key) if key is not None else None
-        if hit is not None and hit[0] == epoch and hit[1] == data_version:
-            self._entries[key] = self._entries.pop(key)   # LRU touch
-            self.hits += 1
-            return copy_scan_result(hit[2])
-        self.misses += 1
-        return None
+        with self._lock:
+            hit = self._entries.get(key) if key is not None else None
+            if hit is not None and hit[0] == epoch \
+                    and hit[1] == data_version:
+                self._entries[key] = self._entries.pop(key)   # LRU touch
+                self.hits += 1
+                return copy_scan_result(hit[2])
+            self.misses += 1
+            return None
 
     def store(self, shard_id, q: Query, result: ScanResult, *, epoch: int,
               data_version: int) -> None:
         key = self._key(shard_id, q)
         if key is None:
             return
-        self._entries.pop(key, None)
-        while len(self._entries) >= self.cap:
-            self._entries.pop(next(iter(self._entries)))
-        self._entries[key] = (int(epoch), int(data_version),
-                              copy_scan_result(result))
+        entry = (int(epoch), int(data_version), copy_scan_result(result))
+        with self._lock:
+            self._entries.pop(key, None)
+            while len(self._entries) >= self.cap:
+                self._entries.pop(next(iter(self._entries)))
+            self._entries[key] = entry
 
     def invalidate(self, shard_id=None) -> int:
         """Drop entries for one shard (or all); returns how many.
         Correctness never needs this — version validation already fences
         staleness — it only releases memory early."""
-        if shard_id is None:
-            n = len(self._entries)
-            self._entries.clear()
-            return n
-        dead = [k for k in self._entries if k[0] == shard_id]
-        for k in dead:
-            del self._entries[k]
-        return len(dead)
+        with self._lock:
+            if shard_id is None:
+                n = len(self._entries)
+                self._entries.clear()
+                return n
+            dead = [k for k in self._entries if k[0] == shard_id]
+            for k in dead:
+                del self._entries[k]
+            return len(dead)
 
     @property
     def hit_rate(self) -> float:
@@ -231,7 +244,10 @@ class ScanBatcher:
         self.telemetry = telemetry if isinstance(telemetry, TelemetryPlane) \
             else None
         self.tenant = tenant
-        self._sharded = isinstance(store, ShardedCiaoStore)
+        # duck-typed, not isinstance: store snapshots (DESIGN.md §17)
+        # present the same ``shards`` / ``summaries`` surface without
+        # being a ShardedCiaoStore
+        self._sharded = hasattr(store, "shards")
         self._shards: list[CiaoStore] = (
             list(store.shards) if self._sharded else [store])
 

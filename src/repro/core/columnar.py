@@ -222,6 +222,7 @@ def _num_reprs(fv: float) -> frozenset[str]:
     checks call this once per (segment, clause) and the json round-trips
     dominate the probe cost on fresh point lookups.
     """
+    global _NUM_REPRS_CACHE
     hit = _NUM_REPRS_CACHE.get(fv)
     if hit is not None:
         return hit
@@ -232,7 +233,9 @@ def _num_reprs(fv: float) -> frozenset[str]:
         cands.add(str(int(fv)))
     out = frozenset(cands)
     if len(_NUM_REPRS_CACHE) >= _NUM_REPRS_CACHE_CAP:
-        _NUM_REPRS_CACHE.clear()
+        # fresh dict, never .clear(): concurrent readers (serve-plane
+        # scan threads) may be probing the old one
+        _NUM_REPRS_CACHE = {}
     _NUM_REPRS_CACHE[fv] = out
     return out
 
@@ -392,7 +395,15 @@ class ColumnarSegment:
     # -- pushed-bitvector candidates ----------------------------------------
     def pushed_mask(self, pushed: Sequence[int],
                     and_reduce: Callable | None = None) -> np.ndarray:
-        """bool[n]: AND of the pushed clauses' bitvector rows (memoized)."""
+        """bool[n]: AND of the pushed clauses' bitvector rows (memoized).
+
+        The memo caches here and in :meth:`clause_possible` /
+        :meth:`clause_mask` are safe under concurrent readers (segments
+        are shared between the live store and its snapshots, DESIGN.md
+        §17): entries are pure functions of immutable segment state, so
+        a racing recompute stores an identical value, and eviction swaps
+        in a fresh dict rather than clearing the one a peer may hold.
+        """
         key = tuple(pushed)
         m = self._and_masks.get(key)
         if m is None:
@@ -400,7 +411,7 @@ class ColumnarSegment:
             words = reduce(self.bitvectors[list(key)])
             m = bitvector.unpack(words, self.n_rows)
             if len(self._and_masks) >= _AND_CACHE_CAP:
-                self._and_masks.clear()
+                self._and_masks = {}
             self._and_masks[key] = m
         return m
 
@@ -412,7 +423,7 @@ class ColumnarSegment:
             p = any(_term_possible(self.key_cols.get(t.key), t)
                     for t in c.terms)
             if len(self._possible) >= _CLAUSE_CACHE_CAP:
-                self._possible.clear()
+                self._possible = {}
             self._possible[c] = p
         return p
 
@@ -438,7 +449,7 @@ class ColumnarSegment:
                     mask |= eval_lowered(col, t)
             hit = (mask, tuple(leftover))
             if len(self._clause_masks) >= _CLAUSE_CACHE_CAP:
-                self._clause_masks.clear()
+                self._clause_masks = {}
             self._clause_masks[c] = hit
         return hit
 

@@ -26,7 +26,9 @@ Query path (:class:`DataSkippingScanner`, DESIGN.md §13):
 """
 from __future__ import annotations
 
+import itertools
 import json
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -409,6 +411,13 @@ class CiaoStore:
         # per-tenant/per-tier scan + ingest statistics (DESIGN.md §16);
         # scanners built over this store record into it by default
         self.telemetry = TelemetryPlane()
+        # serializes every mutation of the resident surface (ingest, JIT
+        # promotion, epoch advance) and the snapshot() read point, so a
+        # snapshot can never observe a half-applied seal-then-extend
+        # sequence (DESIGN.md §17).  Reentrant: promote_uncovered_raw
+        # calls jit_load_raw under the same lock.  Scans themselves never
+        # take it — readers go through immutable snapshots.
+        self._ingest_lock = threading.RLock()
 
     # -- segment surface -----------------------------------------------------
     def _builder(self, epoch: int, n_covered: int, tier: int
@@ -449,10 +458,12 @@ class CiaoStore:
         (a column build per open coverage group, invalidated by every
         ingest) for rows nobody will touch."""
         out: dict[tuple[int, int], int] = {}
-        for seg in (*self.segments, *self.jit_segments):
+        # list() the live containers: a concurrent ingest appending to
+        # them must not blow up this read-only accounting pass
+        for seg in (*list(self.segments), *list(self.jit_segments)):
             k = (seg.epoch, seg.tier)
             out[k] = out.get(k, 0) + seg.n_rows
-        for b in self._builders.values():
+        for b in list(self._builders.values()):
             if b.n_rows:
                 k = (b.epoch, b.tier)
                 out[k] = out.get(k, 0) + b.n_rows
@@ -466,7 +477,14 @@ class CiaoStore:
         """JSON-able operational snapshot: load stats, resident surface,
         and the full per-tenant/per-tier telemetry plane (DESIGN.md §16).
         The monitoring endpoint every front-end exposes — the sharded
-        plane's report nests one of these per shard."""
+        plane's report nests one of these per shard.
+
+        Taken under the ingest lock so a concurrent ingest can't tear the
+        counters mid-report (DESIGN.md §17)."""
+        with self._ingest_lock:
+            return self._stats_report_locked()
+
+    def _stats_report_locked(self) -> dict:
         s = self.stats
         return {
             "epoch": self.plan.epoch,
@@ -541,19 +559,22 @@ class CiaoStore:
             new_plan = family.plan
         else:
             family = trivial_family(new_plan)
-        if new_plan.epoch <= self.plan.epoch:
-            raise ValueError(
-                f"epoch must advance: {new_plan.epoch} <= {self.plan.epoch}")
-        remap = new_plan.remap_from(self.plan)
-        self.plans[new_plan.epoch] = new_plan
-        self.families[new_plan.epoch] = family
-        self.plan = new_plan
-        self.family = family
-        self._epoch_counts[new_plan.epoch] = np.zeros((new_plan.n,), np.int64)
-        self._epoch_records[new_plan.epoch] = 0
-        self._epoch_clause_records[new_plan.epoch] = np.zeros(
-            (new_plan.n,), np.int64)
-        return remap
+        with self._ingest_lock:
+            if new_plan.epoch <= self.plan.epoch:
+                raise ValueError(
+                    f"epoch must advance: "
+                    f"{new_plan.epoch} <= {self.plan.epoch}")
+            remap = new_plan.remap_from(self.plan)
+            self.plans[new_plan.epoch] = new_plan
+            self.families[new_plan.epoch] = family
+            self.plan = new_plan
+            self.family = family
+            self._epoch_counts[new_plan.epoch] = np.zeros(
+                (new_plan.n,), np.int64)
+            self._epoch_records[new_plan.epoch] = 0
+            self._epoch_clause_records[new_plan.epoch] = np.zeros(
+                (new_plan.n,), np.int64)
+            return remap
 
     def remap_table(self, from_epoch: int, to_epoch: int) -> np.ndarray:
         """int32[plans[to].n]: to-epoch local row -> from-epoch row or -1."""
@@ -628,7 +649,22 @@ class CiaoStore:
         ``objs`` optionally supplies already-parsed row objects aligned to
         the chunk's rows (the shard router parses once for routing +
         partition metadata); loaded rows then skip the ingest re-parse.
+
+        Thread-safety: the whole mutation runs under ``_ingest_lock``.
+        The store supports ONE concurrent writer stream (the serve plane's
+        per-shard writer queues guarantee this); the lock exists so
+        ``snapshot()`` taken from reader threads sees a consistent surface.
         """
+        with self._ingest_lock:
+            return self._ingest_chunk_locked(
+                chunk, bitvecs, epoch=epoch, tier=tier, objs=objs)
+
+    def _ingest_chunk_locked(
+        self, chunk: Chunk,
+        bitvecs: np.ndarray | bitvector.ChunkBitvectors,
+        *, epoch: int | None, tier: int | None,
+        objs: Sequence[dict] | None,
+    ) -> LoadStats:
         t0 = time.perf_counter()
         n = chunk.n_records
         e = self.plan.epoch
@@ -708,6 +744,14 @@ class CiaoStore:
         pushes none of a query's clauses); ``None``/``None`` promotes
         everything.  Returns rows promoted per ``(epoch, tier)``.
         """
+        with self._ingest_lock:
+            return self._jit_load_raw_locked(
+                only_epochs, only_groups=only_groups)
+
+    def _jit_load_raw_locked(
+        self, only_epochs: set[int] | None = None,
+        *, only_groups: set[tuple[int, int]] | None = None,
+    ) -> dict[tuple[int, int], int]:
         promoted: dict[tuple[int, int], int] = {}
         if not self.raw:
             return promoted
@@ -744,6 +788,22 @@ class CiaoStore:
             self.data_version += 1
         self.stats.jit_time_s += time.perf_counter() - t0
         return promoted
+
+    # -- consistent reads (async serve plane, DESIGN.md §17) -----------------
+    def snapshot(self) -> "StoreSnapshot":
+        """Pin an immutable ``(epoch, data_version)`` view of the store.
+
+        Taken under the ingest lock, so the snapshot observes every
+        fully-applied ingest and nothing of any in-flight one.  Sealed
+        segments are shared by reference (immutable once built); open
+        builder tails are captured as their current frozen views — a
+        builder's ``view()`` object is never mutated, the next append
+        *replaces* it.  Scanners built over the snapshot therefore see a
+        store that never changes while live ingest continues on the
+        parent (DESIGN.md §17).
+        """
+        with self._ingest_lock:
+            return StoreSnapshot(self)
 
     # -- persistence (ingest checkpointing) ----------------------------------
     def save(self, path: str) -> None:
@@ -996,6 +1056,149 @@ class _EpochPushdown(dict):
             pushed = self._store.plans[key].pushed_in(self._q)
         self[key] = pushed
         return pushed
+
+
+# process-global id source for snapshot version forks: two snapshots that
+# promote raw rows independently must never share a data_version, or the
+# result cache would serve one lineage's counts for the other's
+_SNAPSHOT_FORKS = itertools.count(1)
+
+
+class StoreSnapshot:
+    """Immutable ``(epoch, data_version)`` view of one :class:`CiaoStore`.
+
+    The reader half of the async serving plane (DESIGN.md §17): scans run
+    against the snapshot while ingest keeps appending to the parent.  The
+    snapshot exposes the full scanner protocol surface (``blocks`` /
+    ``jit_blocks`` / ``raw`` / ``plans`` / ``pushed_by_epoch`` /
+    ``promote_uncovered_raw`` / ``stats`` / ``data_version``), so
+    ``DataSkippingScanner``, ``ScanBatcher`` and ``DeviceScanner`` work
+    over it unchanged.
+
+    Consistency: construction happens under the parent's ingest lock, so
+    the captured surface is a prefix of the ingest history — never a torn
+    ingest.  Sealed segments and frozen builder views are shared by
+    reference; both are immutable after construction.
+
+    JIT promotion is **snapshot-local**: a query whose clauses were never
+    pushed must still parse the raw remainder, but doing so on the parent
+    would mutate state readers of *other* snapshots depend on.  Promoted
+    segments and the shrunken raw list live only in this snapshot; the
+    parent store is untouched (it promotes independently on its own query
+    path).  Promotion bumps the snapshot's ``data_version`` to a
+    **fork-unique negative** value ``-(fork_id << 20 | n_promotions)``:
+    live stores only ever produce non-negative versions, so cache entries
+    fenced by a forked version can never alias a live-store version or
+    another snapshot's fork, keeping ``ResultCache`` /
+    ``DeviceSegmentCache`` fencing exact.  Untainted snapshots keep the
+    parent's ``base_version`` and therefore share cache entries with it.
+
+    Thread-safety: any number of reader threads may scan one snapshot
+    concurrently; the snapshot-local promotion state is guarded by its
+    own lock.  ``log_query`` feeds back to the parent store (workload
+    drift must observe snapshot reads too).
+    """
+
+    def __init__(self, store: CiaoStore):
+        # caller must hold store._ingest_lock (use CiaoStore.snapshot())
+        self._store = store               # query-log feedback only
+        self.plan = store.plan
+        self.family = store.family
+        self.plans = dict(store.plans)
+        self.families = dict(store.families)
+        self.segment_capacity = store.segment_capacity
+        self.base_version = store.data_version
+        self.telemetry = store.telemetry
+        self._blocks = list(store.blocks)          # sealed + frozen tails
+        self._raw = list(store.raw)
+        self._jit = list(store.jit_segments)
+        self.stats = LoadStats(**vars(store.stats))
+        self._seg_rows: dict[tuple[int, int], int] = {}
+        for seg in self._blocks:
+            k = (seg.epoch, seg.tier)
+            self._seg_rows[k] = self._seg_rows.get(k, 0) + seg.n_rows
+        self._fork = next(_SNAPSHOT_FORKS)
+        self._promotions = 0
+        self._lock = threading.Lock()     # snapshot-local JIT state
+
+    # -- scanner protocol surface --------------------------------------------
+    @property
+    def epoch(self) -> int:
+        return self.plan.epoch
+
+    @property
+    def data_version(self) -> int:
+        """Parent's version at capture, or a fork-unique negative once
+        snapshot-local promotion has run (see class docstring)."""
+        with self._lock:
+            if not self._promotions:
+                return self.base_version
+            return -((self._fork << 20) | min(self._promotions, (1 << 20) - 1))
+
+    @property
+    def blocks(self) -> list["ColumnarSegment"]:
+        return list(self._blocks)
+
+    @property
+    def jit_blocks(self) -> list["ColumnarSegment"]:
+        with self._lock:
+            return list(self._jit)
+
+    @property
+    def raw(self) -> list[RawRemainder]:
+        with self._lock:
+            return list(self._raw)
+
+    def log_query(self, q: Query) -> None:
+        self._store.log_query(q)
+
+    def pushed_by_epoch(self, q: Query) -> "_EpochPushdown":
+        m = _EpochPushdown(self, q)
+        m[self.plan.epoch]
+        return m
+
+    def resident_group_rows(self) -> dict[tuple[int, int], int]:
+        out = dict(self._seg_rows)
+        for seg in self.jit_blocks:
+            k = (seg.epoch, seg.tier)
+            out[k] = out.get(k, 0) + seg.n_rows
+        return out
+
+    def promote_uncovered_raw(
+        self, pushed: "_EpochPushdown",
+    ) -> dict[tuple[int, int], int]:
+        """Snapshot-local JIT promotion (parent store untouched)."""
+        with self._lock:
+            keep: list[RawRemainder] = []
+            take: list[RawRemainder] = []
+            for rr in self._raw:
+                if pushed[(rr.epoch, rr.n_covered)]:
+                    keep.append(rr)
+                else:
+                    take.append(rr)
+            if not take:
+                return {}
+            t0 = time.perf_counter()
+            promoted: dict[tuple[int, int], int] = {}
+            grouped: dict[tuple[int, int, int], tuple[list, list]] = {}
+            for rr in take:
+                recs, objs = decode_rows(rr.data, rr.lengths)
+                g = grouped.setdefault((rr.epoch, rr.n_covered, rr.tier),
+                                       ([], []))
+                g[0].extend(recs)
+                g[1].extend(objs)
+                self.stats.n_jit_loaded += rr.n
+                key = (rr.epoch, rr.tier)
+                promoted[key] = promoted.get(key, 0) + rr.n
+            for (epoch, n_cov, tier), (recs, objs) in grouped.items():
+                self._jit.extend(build_segments(
+                    recs, np.zeros((0, len(recs)), bool), objs=objs,
+                    epoch=epoch, n_covered=n_cov, tier=tier,
+                    capacity=self.segment_capacity))
+            self._raw = keep
+            self._promotions += 1
+            self.stats.jit_time_s += time.perf_counter() - t0
+            return promoted
 
 
 @dataclass

@@ -44,6 +44,7 @@ from __future__ import annotations
 import bisect
 import json
 import os
+import threading
 import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
@@ -289,6 +290,19 @@ class ShardSummary:
     or the N=1 degenerate case where routing is skipped) disables pruning
     entirely — the summary answers "possible" for every clause until
     :func:`reshard` rebuilds it from the full row population.
+
+    Concurrent-read soundness (async serve plane, DESIGN.md §17): every
+    field is *monotone-permissive* — mins only fall, maxes only rise,
+    value sets only grow (or saturate to ``None``), ``any_notnull`` only
+    flips True, ``num_prunable`` only flips False — so a reader racing
+    ONE writer (the serve plane guarantees a single writer per shard)
+    observes a state at least as permissive as some fully-applied prefix
+    of the updates.  Since the summary is updated BEFORE its shard's
+    ingest, that prefix covers every row any store snapshot can contain,
+    and a torn read can only *fail* to prune, never prune unsoundly.
+    Cached clause verdicts are version-tagged: :meth:`update` bumps
+    ``_version`` after its mutations, retiring any verdict whose compute
+    overlapped them.
     """
 
     def __init__(self, *, exhaustive: bool = True,
@@ -297,12 +311,14 @@ class ShardSummary:
         self.value_cap = int(value_cap)
         self.n_rows = 0
         self._keys: dict[str, _KeySummary] = {}
-        self._possible: dict[Clause, bool] = {}
+        # clause -> (version-at-compute-start, verdict); valid only while
+        # the tag equals the current _version (see class docstring)
+        self._possible: dict[Clause, tuple[int, bool]] = {}
+        self._version = 0
 
     def update(self, objs: Sequence[dict]) -> None:
         if not self.exhaustive or not objs:
             return
-        self._possible.clear()
         cap = self.value_cap
         keys = self._keys
         for obj in objs:
@@ -312,6 +328,12 @@ class ShardSummary:
                     ks = keys[k] = _KeySummary()
                 ks.add(v, cap)
         self.n_rows += len(objs)
+        # invalidate cached verdicts LAST: a verdict computed concurrently
+        # with the mutations above carries the pre-bump version tag, so
+        # this bump retires it even if it lands in the cache afterwards.
+        # Fresh dict, never .clear() — readers may hold the old one.
+        self._version += 1
+        self._possible = {}
 
     # -- pruning -------------------------------------------------------------
     def term_possible(self, t: SimplePredicate) -> bool:
@@ -325,22 +347,30 @@ class ShardSummary:
         ks = self._keys.get(t.key)
         if ks is None:
             return False
-        return term_possible_over(
-            t, any_notnull=ks.any_notnull,
-            num_min=ks.num_min, num_max=ks.num_max,
-            num_prunable=ks.num_prunable,
-            strs=ks.strs, reprs=ks.reprs,
-        )
+        try:
+            return term_possible_over(
+                t, any_notnull=ks.any_notnull,
+                num_min=ks.num_min, num_max=ks.num_max,
+                num_prunable=ks.num_prunable,
+                strs=ks.strs, reprs=ks.reprs,
+            )
+        except RuntimeError:
+            # a concurrent writer grew a value set mid-membership-scan
+            # ("set changed size during iteration"): answer conservatively
+            return True
 
     def clause_possible(self, c: Clause) -> bool:
         if not self.exhaustive:
             return True
-        p = self._possible.get(c)
-        if p is None:
-            p = any(self.term_possible(t) for t in c.terms)
-            if len(self._possible) >= _CLAUSE_CACHE_CAP:
-                self._possible.clear()
-            self._possible[c] = p
+        ver = self._version          # read BEFORE computing the verdict
+        cache = self._possible
+        hit = cache.get(c)
+        if hit is not None and hit[0] == ver:
+            return hit[1]
+        p = any(self.term_possible(t) for t in c.terms)
+        if len(cache) >= _CLAUSE_CACHE_CAP:
+            self._possible = cache = {}
+        cache[c] = (ver, p)
         return p
 
     def query_possible(self, q: Query) -> bool:
@@ -604,6 +634,27 @@ class ShardedCiaoStore:
             self.shards[0].ingest_chunk(chunk, bitvecs,
                                         epoch=epoch, tier=tier)
             return self.stats
+        for s, sub_chunk, sub_bv, sub_objs in \
+                self.route_slices(chunk, bitvecs):
+            self.ingest_slice(s, sub_chunk, sub_bv, sub_objs,
+                              epoch=epoch, tier=tier)
+        return self.stats
+
+    def route_slices(
+        self, chunk: Chunk,
+        bitvecs: "np.ndarray | bitvector.ChunkBitvectors",
+    ) -> list[tuple[int, Chunk, "bitvector.ChunkBitvectors", list[dict]]]:
+        """Parse + route one validated chunk into per-shard slices.
+
+        Returns ``(shard, sub_chunk, sub_bitvectors, sub_objs)`` per
+        non-empty target shard.  Split out of :meth:`ingest_chunk` so the
+        serve plane (``repro.serve.store_engine``) can route in the
+        submitting thread and enqueue each slice onto its shard's writer
+        queue.  Callers must have validated the chunk with
+        :func:`~repro.core.server.resolve_ingest_coverage` first.
+        ``route_time_s`` accumulation is unsynchronized — approximate
+        when several submitters race (it is a timing stat, never a gate).
+        """
         n = chunk.n_records
         t0 = time.perf_counter()
         recs, objs = decode_rows(chunk.data, chunk.lengths)
@@ -612,18 +663,51 @@ class ShardedCiaoStore:
                  if isinstance(bitvecs, bitvector.ChunkBitvectors)
                  else np.asarray(bitvecs, np.uint32))
         bits = bitvector.unpack(words, n)
-        self.route_time_s += time.perf_counter() - t0
+        out: list[tuple[int, Chunk, bitvector.ChunkBitvectors, list[dict]]] \
+            = []
         for s in range(self.n_shards):
             idx = np.nonzero(sid == s)[0]
             if not idx.size:
                 continue
-            sub_objs = [objs[i] for i in idx]
-            self.summaries[s].update(sub_objs)
-            self.shards[s].ingest_chunk(
+            out.append((
+                s,
                 Chunk(data=chunk.data[idx], lengths=chunk.lengths[idx]),
                 bitvector.ChunkBitvectors.from_bits(bits[:, idx]),
-                epoch=epoch, tier=tier, objs=sub_objs)
-        return self.stats
+                [objs[i] for i in idx],
+            ))
+        self.route_time_s += time.perf_counter() - t0
+        return out
+
+    def ingest_slice(
+        self, s: int, chunk: Chunk,
+        bitvecs: "bitvector.ChunkBitvectors", objs: list[dict],
+        *, epoch: int | None = None, tier: int | None = None,
+    ) -> None:
+        """Apply one routed slice to shard ``s``: summary update FIRST,
+        then the per-shard ingest — the ordering that keeps partition
+        pruning sound for concurrent snapshot readers (every row a
+        snapshot can see was already summarized; see
+        :class:`ShardSummary`).  At most ONE thread may ingest into a
+        given shard at a time (the serve plane's writer queues assign
+        each shard to exactly one writer)."""
+        self.summaries[s].update(objs)
+        self.shards[s].ingest_chunk(chunk, bitvecs,
+                                    epoch=epoch, tier=tier, objs=objs)
+
+    # -- consistent reads (async serve plane, DESIGN.md §17) -----------------
+    def snapshot(self) -> "ShardedStoreSnapshot":
+        """Pin an immutable view of every shard.
+
+        Per-shard snapshots are taken sequentially, each under its own
+        shard's ingest lock, so the view is *per-shard prefix-consistent*:
+        each shard's slice is a prefix of that shard's ingest history.
+        Under the serve plane's single-writer-per-shard queues that is
+        snapshot isolation per shard; cross-shard atomicity of one
+        multi-shard chunk is NOT guaranteed (a snapshot may contain shard
+        A's slice of a chunk but not yet shard B's).  Counts still
+        quiesce to the oracle because every slice lands exactly once.
+        """
+        return ShardedStoreSnapshot(self)
 
     # -- persistence (format 5: manifest + per-shard files) ------------------
     def save(self, path: str) -> None:
@@ -704,6 +788,107 @@ class ShardedCiaoStore:
         ]
         store.query_log_cap = 4096
         return store
+
+
+class ShardedStoreSnapshot:
+    """Immutable view of a :class:`ShardedCiaoStore` (DESIGN.md §17).
+
+    ``shards`` holds one :class:`~repro.core.server.StoreSnapshot` per
+    shard, so :class:`ShardedScanner`,
+    :class:`~repro.core.batch_scan.ScanBatcher` and the device scanners
+    run over it unchanged.  ``summaries`` are shared LIVE by reference:
+    a :class:`ShardSummary` is monotone-permissive and updated before its
+    shard's ingest, so a concurrent update can only make a verdict more
+    permissive — pruning stays sound for every row the snapshot can see.
+
+    ``data_version`` is the sum of the per-shard snapshot versions (the
+    same composition rule as the live store); snapshot-local JIT
+    promotion in any shard forks it negative, keeping cache fencing
+    exact (see :class:`~repro.core.server.StoreSnapshot`).
+    """
+
+    def __init__(self, store: ShardedCiaoStore):
+        self._store = store               # query-log feedback only
+        self.router = store.router
+        self.segment_capacity = store.segment_capacity
+        self.shards = [s.snapshot() for s in store.shards]
+        self.summaries = store.summaries
+        self.telemetry = store.telemetry
+        self.route_time_s = store.route_time_s
+        self.base_version = sum(s.base_version for s in self.shards)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def data_version(self) -> int:
+        return sum(s.data_version for s in self.shards)
+
+    @property
+    def plan(self) -> PushdownPlan:
+        return self.shards[0].plan
+
+    @property
+    def family(self) -> PlanFamily:
+        return self.shards[0].family
+
+    @property
+    def plans(self) -> dict[int, PushdownPlan]:
+        return self.shards[0].plans
+
+    @property
+    def families(self) -> dict[int, PlanFamily]:
+        return self.shards[0].families
+
+    @property
+    def epoch(self) -> int:
+        return self.plan.epoch
+
+    @property
+    def stats(self) -> LoadStats:
+        agg = LoadStats()
+        for s in self.shards:
+            agg.add(s.stats)
+        agg.load_time_s += self.route_time_s
+        agg.parse_time_s += self.route_time_s
+        return agg
+
+    @property
+    def blocks(self) -> list[ColumnarSegment]:
+        return [seg for s in self.shards for seg in s.blocks]
+
+    @property
+    def jit_blocks(self) -> list[ColumnarSegment]:
+        return [seg for s in self.shards for seg in s.jit_blocks]
+
+    @property
+    def raw(self) -> list[RawRemainder]:
+        return [rr for s in self.shards for rr in s.raw]
+
+    def log_query(self, q: Query) -> None:
+        self._store.log_query(q)
+
+    def pushed_by_epoch(self, q: Query) -> _EpochPushdown:
+        m = _EpochPushdown(self, q)
+        m[self.plan.epoch]
+        return m
+
+    def resident_group_rows(self) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.resident_group_rows().items():
+                out[k] = out.get(k, 0) + n
+        return out
+
+    def promote_uncovered_raw(
+        self, pushed: _EpochPushdown,
+    ) -> dict[tuple[int, int], int]:
+        out: dict[tuple[int, int], int] = {}
+        for s in self.shards:
+            for k, n in s.promote_uncovered_raw(pushed).items():
+                out[k] = out.get(k, 0) + n
+        return out
 
 
 def reshard(store: "ShardedCiaoStore | CiaoStore",
@@ -929,13 +1114,18 @@ class ShardedScanner:
         # run the shard loop inline (same results, no pool round-trip)
         self.parallel_threshold_rows = parallel_threshold_rows
         self._pool: ThreadPoolExecutor | None = None
+        # scan() may run from many serve-plane reader threads at once;
+        # without the lock two of them could race _ensure_pool and leak
+        # an executor
+        self._pool_lock = threading.Lock()
 
     def _ensure_pool(self) -> ThreadPoolExecutor:
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self._max_workers,
-                thread_name_prefix="ciao-shard-scan")
-        return self._pool
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._max_workers,
+                    thread_name_prefix="ciao-shard-scan")
+            return self._pool
 
     def close(self) -> None:
         if self._pool is not None:

@@ -42,7 +42,11 @@ from repro.data.tokenizer import ByteTokenizer
 # only touch the shared protocol (ingest_chunk / plan / family / blocks /
 # pushed_by_epoch), so a sharded store slots in without pipeline changes —
 # the ShardRouter inside ShardedCiaoStore.ingest_chunk fans each chunk out
-# to its per-shard segment stores
+# to its per-shard segment stores.  The async serving plane's
+# CiaoServeEngine (repro.serve.store_engine, DESIGN.md §17) duck-types
+# the same ingest surface — validation stays synchronous at submit, so
+# the coordinator's StaleEpochError retry loop works against it
+# unchanged even though the actual ingest happens on a writer pool.
 AnyStore = CiaoStore | ShardedCiaoStore
 
 

@@ -1,4 +1,9 @@
-"""Serving engine: jitted prefill / decode steps with sharded caches.
+"""LLM serving engine: jitted prefill / decode steps with sharded caches.
+
+NOT the CIAO store-serving plane: this module serves the *model* (token
+generation); the async store engine that serves *queries* under live
+ingest lives in :mod:`repro.serve.store_engine` (``CiaoServeEngine``,
+DESIGN.md §17).  The two share nothing but the package.
 
 ``make_serve_fns(model, mesh, batch, seq)`` builds the two jitted step
 functions the dry-run lowers and the serve driver executes:

@@ -1,0 +1,519 @@
+"""Async serving plane tests (DESIGN.md §17).
+
+Covers the epoch-snapshot primitive (a scan started before an ingest
+must not see its rows; snapshot-local JIT promotion never touches the
+parent), thread-safety of the shared ResultCache and TelemetryPlane,
+CiaoServeEngine correctness (quiesced counts bit-identical to the
+``matches_exact`` oracle across host / batch / device modes),
+backpressure (block and reject), tenant-tier admission control, and a
+threaded stress sweep with concurrent writers and mixed-mode readers.
+"""
+from __future__ import annotations
+
+import json
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core.batch_scan import ResultCache, ScanBatcher
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.predicates import Query
+from repro.core.server import (
+    CiaoStore, DataSkippingScanner, PlanFamily, PushdownPlan, ScanResult,
+    StaleEpochError,
+)
+from repro.core.shard import (
+    ShardedCiaoStore, ShardedScanner, ShardRouter, choose_routing_key,
+)
+from repro.core.telemetry import TelemetryPlane
+from repro.data.datasets import generate_records, predicate_pool
+from repro.serve.store_engine import (
+    AdmissionError, BackpressureError, CiaoServeEngine, QueryAdmission,
+    TierPolicy,
+)
+
+N_RECORDS = 3000
+CHUNK = 250
+
+
+@pytest.fixture(scope="module")
+def ycsb():
+    recs = generate_records("ycsb", N_RECORDS, seed=7)
+    objs = [json.loads(r) for r in recs]
+    pool = predicate_pool("ycsb")
+    return recs, objs, pool
+
+
+def _family(pool) -> PlanFamily:
+    # tier 0 has EMPTY coverage: its chunks stay raw remainders, so the
+    # JIT-promotion path is exercised by every sweep below
+    return PlanFamily(plan=PushdownPlan(clauses=pool[:6]),
+                      tier_sizes=(0, 2, 6))
+
+
+def _encode_chunks(recs, fam):
+    eng = NumpyEngine()
+    out = []
+    for i, start in enumerate(range(0, len(recs), CHUNK)):
+        ch = encode_chunk(recs[start:start + CHUNK])
+        tier = i % fam.n_tiers
+        bv = eng.eval_fused_prefix(ch, fam.plan.clauses,
+                                   fam.tier_sizes[tier])
+        out.append((ch, bv, tier))
+    return out
+
+
+def _oracle(objs, q: Query) -> int:
+    return sum(1 for o in objs if q.matches_exact(o))
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation
+# ---------------------------------------------------------------------------
+
+def test_snapshot_isolation_plain(ycsb):
+    """A snapshot pins its view: rows ingested after snapshot() are
+    invisible to scans against it, while the live store sees them."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    half = len(chunks) // 2
+    half_rows = half * CHUNK
+
+    store = CiaoStore(fam, segment_capacity=256)
+    for ch, bv, tier in chunks[:half]:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+    snap = store.snapshot()
+    base = snap.base_version
+    snap_scanner = DataSkippingScanner(snap, telemetry=False)
+
+    for ch, bv, tier in chunks[half:]:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+
+    live_scanner = DataSkippingScanner(store)
+    for k in range(6):
+        q = Query(clauses=(pool[k],))
+        snap_count = snap_scanner.scan(q).count
+        assert snap_count == _oracle(objs[:half_rows], q)
+        assert live_scanner.scan(q).count == _oracle(objs, q)
+    # untainted reads keep the pinned base version
+    q_pushed = Query(clauses=(pool[0],))
+    assert snap.base_version == base
+    assert store.data_version > base
+
+
+def test_snapshot_isolation_sharded(ycsb):
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    half = len(chunks) // 2
+    half_rows = half * CHUNK
+
+    router = ShardRouter(n_shards=4, key=choose_routing_key(fam.plan))
+    store = ShardedCiaoStore(fam, router=router, segment_capacity=256)
+    for ch, bv, tier in chunks[:half]:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+    snap = store.snapshot()
+    scanner = ShardedScanner(snap, telemetry=False)
+    batcher = ScanBatcher(snap, cache=ResultCache(), telemetry=False)
+
+    for ch, bv, tier in chunks[half:]:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+
+    queries = [Query(clauses=(pool[k],)) for k in range(6)]
+    for q in queries:
+        assert scanner.scan(q).count == _oracle(objs[:half_rows], q)
+    got = [r.count for r in batcher.scan_batch(queries)]
+    assert got == [_oracle(objs[:half_rows], q) for q in queries]
+
+
+def test_snapshot_local_promotion_leaves_parent_untouched(ycsb):
+    """JIT promotion triggered by a snapshot scan stays snapshot-local:
+    the parent keeps its raw remainders and data_version, and the
+    snapshot's version forks negative so ResultCache entries from
+    different lineages can never alias."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+
+    store = CiaoStore(fam, segment_capacity=256)
+    for ch, bv, tier in chunks:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+    parent_raw = len(store.raw)
+    parent_version = store.data_version
+    assert parent_raw > 0            # tier 0 left raw remainders
+
+    snap = store.snapshot()
+    scanner = DataSkippingScanner(snap, telemetry=False)
+    q = Query(clauses=(pool[0],))
+    assert scanner.scan(q).count == _oracle(objs, q)
+
+    assert len(store.raw) == parent_raw          # parent untouched
+    assert store.data_version == parent_version
+    assert len(snap.raw) < parent_raw            # snapshot promoted
+    assert snap.data_version < 0                 # forked version
+    # repeat scan promotes nothing further and stays exact
+    jit_before = len(snap.jit_blocks)
+    assert scanner.scan(q).count == _oracle(objs, q)
+    assert len(snap.jit_blocks) == jit_before
+
+
+# ---------------------------------------------------------------------------
+# shared-structure thread safety
+# ---------------------------------------------------------------------------
+
+def test_result_cache_thread_safe():
+    """Concurrent store/lookup/invalidate churn must never corrupt the
+    LRU dict or blow past the capacity bound."""
+    cache = ResultCache(cap=32)
+    qs = [Query(clauses=(predicate_pool("ycsb")[k],)) for k in range(8)]
+    res = ScanResult(count=1, rows_scanned=1, rows_skipped=0,
+                     raw_parsed=0, time_s=0.0, used_skipping=True)
+    errors: list[BaseException] = []
+
+    def churn(seed: int) -> None:
+        rng = random.Random(seed)
+        try:
+            for _ in range(400):
+                q = qs[rng.randrange(len(qs))]
+                sid = rng.randrange(4)
+                op = rng.randrange(10)
+                if op < 5:
+                    cache.store(sid, q, res, epoch=0,
+                                data_version=rng.randrange(3))
+                elif op < 9:
+                    hit = cache.lookup(sid, q, epoch=0,
+                                       data_version=rng.randrange(3))
+                    if hit is not None:
+                        assert hit.count == 1
+                else:
+                    cache.invalidate(sid if rng.random() < 0.5 else None)
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(cache) <= cache.cap
+    assert cache.hits + cache.misses > 0
+
+
+def test_telemetry_thread_safe():
+    """Concurrent record_scan/record_client_eval + snapshot() reads:
+    counters must end exactly at the submitted totals (no lost updates)
+    and snapshots must never raise mid-mutation."""
+    tele = TelemetryPlane()
+    res = ScanResult(count=3, rows_scanned=10, rows_skipped=5,
+                     raw_parsed=0, time_s=0.001, used_skipping=True)
+    n_threads, per_thread = 8, 300
+    errors: list[BaseException] = []
+
+    def record(i: int) -> None:
+        try:
+            for k in range(per_thread):
+                tele.record_scan(res, tenant=f"t{i % 3}")
+                if k % 16 == 0:
+                    tele.record_client_eval(f"c{i}", 0.0005, n_records=100)
+                if k % 32 == 0:
+                    tele.snapshot()
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=record, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    snap = tele.snapshot()
+    total = sum(t["scans"] for t in snap["tenants"].values())
+    assert total == n_threads * per_thread
+
+
+def test_telemetry_stats_report_consistent_under_ingest(ycsb):
+    """stats_report() runs under the ingest lock: a report taken while a
+    writer is mid-stream is a consistent snapshot (counters agree with
+    each other), not a torn read."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def ingest() -> None:
+        try:
+            for ch, bv, tier in chunks:
+                store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=ingest)
+    t.start()
+    while not stop.is_set():
+        rep = store.stats_report()
+        s = rep["load"]
+        # chunk-atomic: rows land in n_records in chunk multiples
+        assert s["n_records"] % CHUNK == 0
+        assert s["n_records"] <= len(recs)
+    t.join()
+    assert not errors
+    assert store.stats_report()["load"]["n_records"] == len(recs)
+
+
+# ---------------------------------------------------------------------------
+# serve engine
+# ---------------------------------------------------------------------------
+
+def test_engine_quiesced_counts_match_oracle(ycsb):
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    router = ShardRouter(n_shards=4, key=choose_routing_key(fam.plan))
+    store = ShardedCiaoStore(fam, router=router, segment_capacity=256)
+    queries = [Query(clauses=(pool[k],)) for k in range(6)]
+    oracle = [_oracle(objs, q) for q in queries]
+
+    with CiaoServeEngine(store, queue_depth=8,
+                         result_cache=ResultCache()) as serve:
+        for ch, bv, tier in chunks:
+            serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        serve.quiesce()
+        for mode in ("host", "batch", "device"):
+            assert [serve.query(q, mode=mode).count
+                    for q in queries] == oracle, mode
+        assert [r.count for r in serve.query_batch(queries)] == oracle
+        rep = serve.stats_report()
+        assert rep["engine"]["drained"] == rep["engine"]["enqueued"]
+        assert rep["engine"]["errors"] == 0
+
+
+def test_engine_snapshot_pins_before_ingest(ycsb):
+    """A query answered from the engine's snapshot must not see rows
+    from an ingest submitted after the snapshot was taken."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+    q = Query(clauses=(pool[0],))
+
+    with CiaoServeEngine(store) as serve:
+        for ch, bv, tier in chunks[:6]:
+            serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        serve.quiesce()
+        snap = serve.snapshot()
+        before = serve.query(q).count
+        assert before == _oracle(objs[:6 * CHUNK], q)
+        for ch, bv, tier in chunks[6:]:
+            serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        serve.quiesce()
+        # the pinned snapshot still answers the old view
+        assert DataSkippingScanner(snap, telemetry=False).scan(q).count \
+            == before
+        # the engine re-snapshots and sees everything
+        assert serve.query(q).count == _oracle(objs, q)
+
+
+def test_engine_stale_epoch_raises_at_submit(ycsb):
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+    with CiaoServeEngine(store) as serve:
+        serve.ingest_chunk(*chunks[0][:2], epoch=fam.plan.epoch,
+                           tier=chunks[0][2])
+        fam2 = PlanFamily(
+            plan=PushdownPlan(clauses=pool[:6], epoch=fam.plan.epoch + 1),
+            tier_sizes=(0, 2, 6))
+        serve.advance_epoch(fam2)
+        with pytest.raises(StaleEpochError):
+            serve.ingest_chunk(*chunks[1][:2], epoch=fam.plan.epoch,
+                               tier=chunks[1][2])
+
+
+def test_engine_backpressure_reject(ycsb):
+    """With the drain stalled (writer blocked on the store's ingest
+    lock), reject policy raises once the bounded queue fills — and after
+    the stall clears, everything that WAS accepted lands exactly."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+    serve = CiaoServeEngine(store, queue_depth=2, backpressure="reject")
+    try:
+        accepted = 0
+        with store._ingest_lock:         # stall the writer mid-drain
+            serve.ingest_chunk(*chunks[0][:2], epoch=fam.plan.epoch,
+                               tier=chunks[0][2])
+            accepted += 1
+            deadline = time.time() + 5.0
+            while serve._queues[0].qsize() > 0:   # writer picked it up
+                assert time.time() < deadline, "writer never dequeued"
+                time.sleep(0.001)
+            with pytest.raises(BackpressureError):
+                for ch, bv, tier in chunks[1:]:
+                    serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch,
+                                       tier=tier)
+                    accepted += 1
+        assert accepted >= 3             # 1 in flight + queue_depth
+        serve.quiesce()
+        n_rows = accepted * CHUNK
+        q = Query(clauses=(pool[0],))
+        assert serve.query(q).count == _oracle(objs[:n_rows], q)
+        assert serve.stats_report()["engine"]["rejected"] == 1
+    finally:
+        serve.close()
+
+
+def test_engine_backpressure_block(ycsb):
+    """Block policy: a submitter against a full queue waits (accounted
+    in blocked_s) and completes once the drain resumes — nothing lost."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)[:6]
+    store = CiaoStore(fam, segment_capacity=256)
+    serve = CiaoServeEngine(store, queue_depth=1, backpressure="block")
+    errors: list[BaseException] = []
+
+    def feed() -> None:
+        try:
+            for ch, bv, tier in chunks:
+                serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    try:
+        with store._ingest_lock:
+            t = threading.Thread(target=feed)
+            t.start()
+            time.sleep(0.05)             # let the feeder hit the full queue
+            assert t.is_alive()          # blocked, not failed
+        t.join(timeout=10.0)
+        assert not t.is_alive() and not errors
+        serve.quiesce()
+        q = Query(clauses=(pool[0],))
+        assert serve.query(q).count == _oracle(objs[:len(chunks) * CHUNK], q)
+        assert serve.stats_report()["engine"]["blocked_s"] > 0.0
+    finally:
+        serve.close()
+
+
+def test_admission_control(ycsb):
+    recs, objs, pool = ycsb
+    # unit: reject tier refuses at quota, block tier queues
+    adm = QueryAdmission(
+        {"gold": TierPolicy(2, on_full="block"),
+         "free": TierPolicy(1, on_full="reject")},
+        tenant_tiers={"freeloader": "free"}, default_tier="gold")
+    tier = adm.acquire("freeloader")
+    with pytest.raises(AdmissionError):
+        adm.acquire("freeloader")
+    adm.release(tier)
+    adm.acquire("freeloader")            # slot freed
+
+    t1 = adm.acquire("vip")
+    t2 = adm.acquire("vip")
+    unblocked = threading.Event()
+
+    def blocked_acquire() -> None:
+        t3 = adm.acquire("vip")          # waits for a slot
+        unblocked.set()
+        adm.release(t3)
+
+    t = threading.Thread(target=blocked_acquire)
+    t.start()
+    time.sleep(0.05)
+    assert not unblocked.is_set()        # still waiting
+    adm.release(t1)
+    t.join(timeout=5.0)
+    assert unblocked.is_set()
+    adm.release(t2)
+    assert adm.stats()["gold"]["blocked_s"] > 0.0
+
+    # integration: engine gates queries through the same policy
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)[:3]
+    store = CiaoStore(fam, segment_capacity=256)
+    adm2 = QueryAdmission({"gold": TierPolicy(4),
+                           "free": TierPolicy(0, on_full="reject")},
+                          tenant_tiers={"freeloader": "free"},
+                          default_tier="gold")
+    with CiaoServeEngine(store, admission=adm2) as serve:
+        for ch, bv, tier_ in chunks:
+            serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier_)
+        serve.quiesce()
+        q = Query(clauses=(pool[0],))
+        with pytest.raises(AdmissionError):
+            serve.query(q, tenant="freeloader")
+        assert serve.query(q, tenant="vip").count \
+            == _oracle(objs[:3 * CHUNK], q)
+        assert serve.stats_report()["admission"]["free"]["rejected"] == 1
+
+
+def test_threaded_stress_sweep(ycsb):
+    """2 concurrent writers + 3 mixed-mode readers with a random tier
+    mix: live counts stay bounded by the oracle, nothing deadlocks, and
+    after quiesce every query is bit-identical to matches_exact across
+    all three scan modes."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    router = ShardRouter(n_shards=4, key=choose_routing_key(fam.plan))
+    store = ShardedCiaoStore(fam, router=router, segment_capacity=256)
+    queries = [Query(clauses=(pool[k],)) for k in range(8)]
+    oracle = [_oracle(objs, q) for q in queries]
+    serve = CiaoServeEngine(store, queue_depth=4,
+                            result_cache=ResultCache())
+    writers_done = threading.Event()
+    errors: list[BaseException] = []
+
+    def write(slice_: list) -> None:
+        try:
+            for ch, bv, tier in slice_:
+                serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    def read(seed: int) -> None:
+        rng = random.Random(seed)
+        try:
+            while not writers_done.is_set():
+                k = rng.randrange(len(queries))
+                mode = rng.choice(("host", "batch", "device"))
+                r = serve.query(queries[k], mode=mode)
+                assert 0 <= r.count <= oracle[k], (mode, k)
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    try:
+        ws = [threading.Thread(target=write, args=(chunks[0::2],)),
+              threading.Thread(target=write, args=(chunks[1::2],))]
+        rs = [threading.Thread(target=read, args=(i,)) for i in range(3)]
+        for t in ws + rs:
+            t.start()
+        for t in ws:
+            t.join(timeout=120.0)
+            assert not t.is_alive(), "writer deadlocked"
+        writers_done.set()
+        for t in rs:
+            t.join(timeout=120.0)
+            assert not t.is_alive(), "reader deadlocked"
+        assert not errors, errors
+        serve.quiesce()
+        for mode in ("host", "batch", "device"):
+            assert [serve.query(q, mode=mode).count
+                    for q in queries] == oracle, mode
+        rep = serve.stats_report()
+        assert rep["engine"]["errors"] == 0
+        assert rep["engine"]["drained"] == rep["engine"]["enqueued"]
+    finally:
+        serve.close()
