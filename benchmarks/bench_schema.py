@@ -429,6 +429,81 @@ def validate_serve(obj: dict) -> None:
              f"allowed {ceil}x")
 
 
+def validate_tuner(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid tuner artifact.
+
+    Beyond shape, this gates the online physical-design tuner's CLAIM
+    (DESIGN.md §18): counts BIT-IDENTICAL to the ``matches_exact``
+    oracle in every phase — before, during the background migration
+    (checked continuously by the reader pool), and after; the router
+    actually swapped to the drifted key and moved rows in >= 2 bounded
+    batches (incremental, not stop-the-world); post-drift scan
+    throughput recovered >= 1.5x over the stale layout (>= 0.8x quick —
+    tiny quick stores leave pruning little to delete, CI gates against
+    collapse only); and reader p99 during the migration <= 3x the
+    quiesced p99 at the same concurrency on the same stale layout
+    (<= 8x quick), i.e. background moves never stall readers.
+    """
+    _require(isinstance(obj, dict), "tuner", "top level must be an object")
+    for key in ("quick", "n_records", "n_chunks", "n_shards",
+                "query_threads", "panel_size", "cpu_count", "key_before",
+                "key_after", "router_swapped", "before", "post_drift",
+                "during", "quiesced", "after", "migration",
+                "telemetry_tuner", "tuner_events", "recovery_speedup",
+                "p99_ratio", "shards_pruned_after", "counts_match"):
+        _require(key in obj, "tuner", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "tuner", "'quick' must be bool")
+    panel = {
+        "passes": numbers.Integral,
+        "queries": numbers.Integral,
+        "us_per_query": numbers.Real,
+        "qps": numbers.Real,
+        "counts_match": bool,
+    }
+    for phase in ("before", "post_drift", "after"):
+        _check_fields(obj[phase], panel, phase)
+        _require(obj[phase]["queries"] > 0, phase, "queries must be positive")
+    _check_fields(obj["during"], {
+        "migrate_s": numbers.Real,
+        "queries": numbers.Integral,
+        "p50_us": numbers.Real,
+        "p99_us": numbers.Real,
+    }, "during")
+    _check_fields(obj["quiesced"], {
+        "queries": numbers.Integral,
+        "p50_us": numbers.Real,
+        "p99_us": numbers.Real,
+    }, "quiesced")
+    _check_fields(obj["migration"], {
+        "rows_moved": numbers.Integral,
+        "rows_kept": numbers.Integral,
+        "segments_moved": numbers.Integral,
+        "items_skipped": numbers.Integral,
+        "batches": numbers.Integral,
+    }, "migration")
+    _require(isinstance(obj["tuner_events"], list) and obj["tuner_events"],
+             "tuner", "'tuner_events' must be a non-empty list")
+    _require(obj["counts_match"] is True, "tuner",
+             "a phase's counts diverged from the matches_exact oracle")
+    _require(obj["router_swapped"] is True, "tuner",
+             f"router never swapped to the drifted key "
+             f"(still {obj['key_after']!r})")
+    _require(obj["migration"]["rows_moved"] >= 1, "tuner",
+             "the migration moved no rows")
+    _require(obj["migration"]["batches"] >= 2, "tuner",
+             "migration ran in one batch — not incremental")
+    _require(obj["shards_pruned_after"] > 0, "tuner",
+             "no partition pruning on the new routing key after migration")
+    floor = 0.8 if obj["quick"] else 1.5
+    _require(obj["recovery_speedup"] >= floor, "tuner",
+             f"post-drift recovery {obj['recovery_speedup']}x < required "
+             f"{floor}x over the stale layout")
+    ceil = 8.0 if obj["quick"] else 3.0
+    _require(obj["p99_ratio"] <= ceil, "tuner",
+             f"reader p99 during migration is {obj['p99_ratio']}x the "
+             f"quiesced p99 > allowed {ceil}x")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -445,6 +520,8 @@ _VALIDATORS = {
     "BENCH_batch.json": validate_batch,
     "bench_serve.json": validate_serve,
     "BENCH_serve.json": validate_serve,
+    "bench_tuner.json": validate_tuner,
+    "BENCH_tuner.json": validate_tuner,
 }
 
 

@@ -125,13 +125,26 @@ def write_serve_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_tuner_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_tuner.json",
+) -> list[str]:
+    """Write the physical-design tuner benchmark JSON; returns the paths
+    written."""
+    from .bench_schema import validate_tuner
+
+    return _write_gated_artifacts(
+        out, validator=validate_tuner, detail_name="bench_tuner.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
         help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,shard,device,batch,serve,roofline")
+             "scan,shard,device,batch,serve,tuner,roofline")
     args = ap.parse_args()
     os.makedirs("artifacts", exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
@@ -324,6 +337,23 @@ def main() -> None:
             "serve_live_p99", out["live"]["p99_us"],
             f"x{out['throughput_speedup']}_vs_serialized;"
             f"p99_ratio_{out['p99_ratio']};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "tuner" in only:
+        from . import bench_tuner
+
+        out = bench_tuner.run(
+            n_records=8192 if args.quick else 49152,
+            segment_capacity=512 if args.quick else 1024,
+            quick=args.quick,
+        )
+        write_tuner_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "tuner_drift", out["after"]["us_per_query"],
+            f"recovery_x{out['recovery_speedup']}_vs_stale;"
+            f"p99_ratio_{out['p99_ratio']};"
+            f"rows_moved_{out['migration']['rows_moved']};"
             f"counts_match_{out['counts_match']}",
         ))
 

@@ -33,6 +33,7 @@ as the differential oracle (and the fallback for non-lowerable terms).
 from __future__ import annotations
 
 import json
+import threading
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
@@ -145,12 +146,20 @@ class _KeyAcc:
         )
 
 
-def build_key_columns(objs: Sequence[dict]) -> dict[str, KeyColumn]:
-    """Decompose parsed row objects into per-key struct-of-arrays columns."""
+def build_key_columns(objs: Sequence[dict],
+                      keys: "set[str] | frozenset[str] | None" = None
+                      ) -> dict[str, KeyColumn]:
+    """Decompose parsed row objects into per-key struct-of-arrays columns.
+
+    ``keys`` restricts the build to a subset (the per-key layout policy's
+    eager set, DESIGN.md §18); ``None`` builds every key present.
+    """
     accs: dict[str, _KeyAcc] = {}
     n = len(objs)
     for i, obj in enumerate(objs):
         for k, v in obj.items():
+            if keys is not None and k not in keys:
+                continue
             acc = accs.get(k)
             if acc is None:
                 acc = accs[k] = _KeyAcc(n)
@@ -354,7 +363,8 @@ class ColumnarSegment:
 
     def __init__(self, *, records: Sequence[bytes],
                  bitvectors: np.ndarray, epoch: int, n_covered: int,
-                 tier: int, objs: Sequence[dict] | None = None):
+                 tier: int, objs: Sequence[dict] | None = None,
+                 eager_keys: "frozenset[str] | None" = None):
         self.n_rows = len(records)
         self.epoch = int(epoch)
         self.n_covered = int(n_covered)
@@ -367,10 +377,47 @@ class ColumnarSegment:
         self.raw_blob = np.frombuffer(b"".join(records), np.uint8)
         if objs is None:
             objs = [json.loads(r) for r in records]
-        self.key_cols = build_key_columns(objs)
+        if eager_keys is None:
+            self.key_cols = build_key_columns(objs)
+            self.lazy_keys: frozenset[str] = frozenset()
+        else:
+            # Per-key layout policy (DESIGN.md §18): only the eager set is
+            # columnarized up front; the rest stay raw until first touched.
+            present: set[str] = set()
+            for obj in objs:
+                present.update(obj)
+            self.key_cols = build_key_columns(objs, keys=present & eager_keys)
+            self.lazy_keys = frozenset(present - eager_keys)
+        self._lazy_lock = threading.Lock()
         self._clause_masks: dict[Clause, tuple] = {}
         self._possible: dict[Clause, bool] = {}
         self._and_masks: dict[tuple[int, ...], np.ndarray] = {}
+
+    def key_col(self, key: str) -> KeyColumn | None:
+        """Per-key column, materializing a lazy key on first touch.
+
+        A key absent from ``key_cols`` AND ``lazy_keys`` is genuinely
+        absent from every row (sound to refute).  A lazy key decodes the
+        raw rows once under ``_lazy_lock`` (a racing reader either wins
+        the lock and builds, or blocks and finds the column installed —
+        never a lost update), installs into a FRESH dict (peers holding
+        the old dict just retry via this method), and shrinks the lazy
+        set last so a concurrent ``lazy_keys`` probe stays conservative.
+        """
+        col = self.key_cols.get(key)
+        if col is not None or key not in self.lazy_keys:
+            return col
+        with self._lazy_lock:
+            col = self.key_cols.get(key)
+            if col is not None:
+                return col
+            built = build_key_columns(self.rows, keys={key}).get(key)
+            cols = dict(self.key_cols)
+            if built is not None:
+                cols[key] = built
+            self.key_cols = cols
+            self.lazy_keys = self.lazy_keys - {key}
+            return built
 
     # -- raw bytes -----------------------------------------------------------
     def record(self, i: int) -> bytes:
@@ -420,7 +467,7 @@ class ColumnarSegment:
         """False iff the zone map proves no row can match clause ``c``."""
         p = self._possible.get(c)
         if p is None:
-            p = any(_term_possible(self.key_cols.get(t.key), t)
+            p = any(_term_possible(self.key_col(t.key), t)
                     for t in c.terms)
             if len(self._possible) >= _CLAUSE_CACHE_CAP:
                 self._possible = {}
@@ -444,7 +491,7 @@ class ColumnarSegment:
                 if not lowerable(t):
                     leftover.append(t)
                     continue
-                col = self.key_cols.get(t.key)
+                col = self.key_col(t.key)
                 if col is not None:
                     mask |= eval_lowered(col, t)
             hit = (mask, tuple(leftover))
@@ -518,6 +565,7 @@ class SegmentBuilder:
     tier: int
     capacity: int = 8192
     touch_seq: int = 0
+    eager_keys: "frozenset[str] | None" = None
 
     def __post_init__(self) -> None:
         self._records: list[bytes] = []
@@ -555,6 +603,7 @@ class SegmentBuilder:
             bitvectors=bitvector.pack(bits) if n else
             np.zeros((self.n_covered, 0), np.uint32),
             epoch=self.epoch, n_covered=self.n_covered, tier=self.tier,
+            eager_keys=self.eager_keys,
         )
 
     def view(self) -> ColumnarSegment:

@@ -134,8 +134,12 @@ class DeviceSegmentCache:
 
     @staticmethod
     def _eligible(seg: ColumnarSegment) -> bool:
-        # one uint32 clause word per row caps mirrored pushed coverage
-        return seg.n_rows > 0 and seg.bitvectors.shape[0] <= MAX_COVERED
+        # one uint32 clause word per row caps mirrored pushed coverage;
+        # segments with un-materialized lazy keys stay host-side — a
+        # missing device column reads as all-absent and would REFUTE
+        # rows a lazy key actually matches (DESIGN.md §18)
+        return (seg.n_rows > 0 and seg.bitvectors.shape[0] <= MAX_COVERED
+                and not getattr(seg, "lazy_keys", None))
 
     def sync(self, store) -> int:
         """Mirror the store's queryable surface; enforce the byte budget.

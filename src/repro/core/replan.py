@@ -80,6 +80,81 @@ class DriftSignal:
         return None
 
 
+@dataclass(frozen=True)
+class LayoutDrift:
+    """Physical-design drift: is the PHYSICAL layout still right?
+
+    Orthogonal to :class:`DriftSignal` (which asks whether the pushed
+    CLAUSE SET is still right): the store may be pushing exactly the
+    right clauses yet routing/partitioning on a key the workload no
+    longer filters by, or holding shards whose row counts have skewed
+    far apart.  Consumed by ``repro.core.tuner.PhysicalDesignTuner``
+    (DESIGN.md §18).
+    """
+
+    routing_key: str | None   # the router's current key
+    hot_key: str | None       # most-queried key over the window
+    hot_share: float          # hot key's share of window key references
+    routing_share: float      # routing key's share of same
+    n_window: int             # queries in the window
+    shard_skew: float = 1.0   # max/mean resident rows across shards
+
+    def triggers(self, *, min_window: int = 8,
+                 hot_share_threshold: float = 0.5,
+                 margin: float = 1.5,
+                 skew_threshold: float = 4.0) -> str | None:
+        """``"key-shift"``, ``"skew"`` or ``None``.
+
+        Key-shift needs a real window, a dominant hot key, and the hot
+        key beating the current routing key by ``margin``; skew needs
+        only the row-count imbalance (it is workload-independent).
+        """
+        if self.shard_skew > skew_threshold:
+            return "skew"
+        if (self.n_window >= min_window
+                and self.hot_key is not None
+                and self.hot_key != self.routing_key
+                and self.hot_share >= hot_share_threshold
+                and self.hot_share >= margin * self.routing_share):
+            return "key-shift"
+        return None
+
+
+def layout_drift_signal(store: "CiaoStore | ShardedCiaoStore", *,
+                        window: int = 64) -> LayoutDrift:
+    """Measure physical-design drift from the store's own feedback.
+
+    Key frequencies come from the query log's recent window (each query
+    contributes each referenced key once, weighted by ``freq``); shard
+    skew from the per-shard resident row counts.  Works over a plain
+    :class:`CiaoStore` too (no router, skew 1.0) so callers can gate on
+    it uniformly.
+    """
+    router = getattr(store, "router", None)
+    routing_key = getattr(router, "key", None)
+    recent = store.query_log[-window:]
+    weights: dict[str, float] = {}
+    for q in recent:
+        keys = {t.key for c in q.clauses for t in c.terms}
+        for k in keys:
+            weights[k] = weights.get(k, 0.0) + float(q.freq)
+    total = sum(weights.values())
+    hot_key = max(weights, key=weights.get) if weights else None
+    hot_share = weights[hot_key] / total if hot_key else 0.0
+    routing_share = (weights.get(routing_key, 0.0) / total
+                     if total and routing_key else 0.0)
+    shards = getattr(store, "shards", None)
+    if shards and len(shards) > 1:
+        rows = [max(0, sh.stats.n_records) for sh in shards]
+        mean = sum(rows) / len(rows)
+        skew = (max(rows) / mean) if mean > 0 else 1.0
+    else:
+        skew = 1.0
+    return LayoutDrift(routing_key=routing_key, hot_key=hot_key,
+                       hot_share=hot_share, routing_share=routing_share,
+                       n_window=len(recent), shard_skew=skew)
+
+
 @dataclass
 class ReplanEvent:
     """One epoch bump: what changed and why."""
@@ -232,6 +307,12 @@ class Replanner:
                                 abs(float(obs[i]) - planned) / denom)
         return DriftSignal(coverage=coverage, sel_drift=sel_drift,
                            n_observed=n_obs, n_window=len(window))
+
+    def layout_drift(self) -> LayoutDrift:
+        """Physical-design drift over the same workload window the clause
+        re-solve uses (see :func:`layout_drift_signal`)."""
+        return layout_drift_signal(self.store,
+                                   window=self.policy.workload_window)
 
     # -- the loop ------------------------------------------------------------
     def step(self, force: bool = False) -> "PushdownPlan | PlanFamily | None":

@@ -411,6 +411,12 @@ class CiaoStore:
         # per-tenant/per-tier scan + ingest statistics (DESIGN.md §16);
         # scanners built over this store record into it by default
         self.telemetry = TelemetryPlane()
+        # per-key layout policy (DESIGN.md §18): when set, NEW builder
+        # segments eagerly columnarize only these keys; the rest stay raw
+        # per segment until a scan first touches them.  Runtime knob
+        # (tuner-owned) — None means eager-everything, and already-built
+        # segments are unaffected.
+        self.layout_eager_keys: frozenset[str] | None = None
         # serializes every mutation of the resident surface (ingest, JIT
         # promotion, epoch advance) and the snapshot() read point, so a
         # snapshot can never observe a half-applied seal-then-extend
@@ -427,7 +433,8 @@ class CiaoStore:
         if b is None:
             b = self._builders[key] = SegmentBuilder(
                 epoch=epoch, n_covered=n_covered, tier=tier,
-                capacity=self.segment_capacity)
+                capacity=self.segment_capacity,
+                eager_keys=self.layout_eager_keys)
         self._touch += 1
         b.touch_seq = self._touch
         return b
@@ -1199,6 +1206,23 @@ class StoreSnapshot:
             self._promotions += 1
             self.stats.jit_time_s += time.perf_counter() - t0
             return promoted
+
+    def close(self) -> None:
+        """Retire this snapshot: drop every captured segment reference.
+
+        A tainted snapshot (snapshot-local JIT promotion ran) privately
+        holds promoted fork segments the parent store never sees; an
+        abandoned-but-reachable snapshot would pin them until GC finds
+        the whole object.  ``close()`` severs the references eagerly —
+        the snapshot stays safe to scan (it just reads as empty) but no
+        longer keeps any segment, raw remainder, or builder view alive.
+        Idempotent.
+        """
+        with self._lock:
+            self._blocks = []
+            self._raw = []
+            self._jit = []
+            self._seg_rows = {}
 
 
 @dataclass

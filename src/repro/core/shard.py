@@ -445,6 +445,13 @@ class ShardedCiaoStore:
         # sharded store record ONCE here (per merged query), never into
         # the per-shard stores' planes
         self.telemetry = TelemetryPlane()
+        # fences snapshot() against in-flight migration moves (DESIGN.md
+        # §18): a segment move is remove-from-src + add-to-dst; holding
+        # this across both (and across snapshot capture) means no
+        # snapshot ever observes a row absent from every shard or
+        # present in two.  Lock order: _migration_lock BEFORE any
+        # shard's _ingest_lock, never the reverse.
+        self._migration_lock = threading.RLock()
 
     # -- shared plan state ---------------------------------------------------
     @property
@@ -626,6 +633,10 @@ class ShardedCiaoStore:
         slices are repacked from the chunk's bit matrix, so per-clause
         popcounts land on the owning shard and the aggregated observed
         selectivities stay exact.
+
+        Routing uses ``self.router`` at call time: a migration swaps the
+        router FIRST, so every slice routed after the swap already lands
+        in its final home and never needs moving.
         """
         resolve_ingest_coverage(
             self.plan, self.family, n_records=chunk.n_records,
@@ -687,12 +698,18 @@ class ShardedCiaoStore:
         then the per-shard ingest — the ordering that keeps partition
         pruning sound for concurrent snapshot readers (every row a
         snapshot can see was already summarized; see
-        :class:`ShardSummary`).  At most ONE thread may ingest into a
-        given shard at a time (the serve plane's writer queues assign
-        each shard to exactly one writer)."""
-        self.summaries[s].update(objs)
-        self.shards[s].ingest_chunk(chunk, bitvecs,
-                                    epoch=epoch, tier=tier, objs=objs)
+        :class:`ShardSummary`).
+
+        The whole slice is applied under the shard's ingest lock: the
+        serve plane's writer queues already assign each shard to exactly
+        one writer, but a background migration writer (DESIGN.md §18)
+        may place rows into the same shard concurrently — the lock makes
+        the two mutators mutually exclusive per shard."""
+        sh = self.shards[s]
+        with sh._ingest_lock:
+            self.summaries[s].update(objs)
+            sh.ingest_chunk(chunk, bitvecs,
+                            epoch=epoch, tier=tier, objs=objs)
 
     # -- consistent reads (async serve plane, DESIGN.md §17) -----------------
     def snapshot(self) -> "ShardedStoreSnapshot":
@@ -706,8 +723,47 @@ class ShardedCiaoStore:
         multi-shard chunk is NOT guaranteed (a snapshot may contain shard
         A's slice of a chunk but not yet shard B's).  Counts still
         quiesce to the oracle because every slice lands exactly once.
+
+        Taken under the migration fence: an in-flight background segment
+        move (remove-from-src + add-to-dst, DESIGN.md §18) is atomic
+        w.r.t. this capture, so snapshot counts stay bit-identical to
+        the oracle THROUGHOUT a migration.
         """
-        return ShardedStoreSnapshot(self)
+        with self._migration_lock:
+            return ShardedStoreSnapshot(self)
+
+    # -- online physical-design migration (DESIGN.md §18) --------------------
+    def begin_migration(self, router: ShardRouter, *,
+                        batch_rows: int = 4096) -> "SegmentMigration":
+        """Swap the routing function and start moving resident rows.
+
+        The new ``router`` (same shard count — changing N is offline
+        :func:`reshard`'s job) takes effect for NEW ingest immediately,
+        so post-swap rows never need moving; the returned
+        :class:`SegmentMigration` then drains the PRE-swap resident
+        surface in bounded batches (:meth:`SegmentMigration.step`) while
+        scans and ingest stay online.  Open builder tails are sealed at
+        the swap point so every pre-swap row lives in an immutable
+        segment the migration can move by identity.
+        """
+        if router.n_shards != self.n_shards:
+            raise ValueError(
+                f"online migration keeps the shard count: store has "
+                f"{self.n_shards}, router wants {router.n_shards}")
+        with self._migration_lock:
+            self.router = router
+            work: list[tuple[str, int, object]] = []
+            for s, sh in enumerate(self.shards):
+                with sh._ingest_lock:
+                    for b in sh._builders.values():
+                        if b.n_rows:
+                            sh.segments.append(b.seal())
+                            sh.data_version += 1
+                    work.extend(("loaded", s, seg) for seg in sh.segments)
+                    work.extend(("jit", s, seg) for seg in sh.jit_segments)
+                    work.extend(("raw", s, rr) for rr in sh.raw)
+            return SegmentMigration(self, router, work,
+                                    batch_rows=batch_rows)
 
     # -- persistence (format 5: manifest + per-shard files) ------------------
     def save(self, path: str) -> None:
@@ -763,6 +819,8 @@ class ShardedCiaoStore:
             store.route_time_s = 0.0
             store.query_log = list(inner.query_log)
             store.query_log_cap = inner.query_log_cap
+            store.telemetry = TelemetryPlane()
+            store._migration_lock = threading.RLock()
             return store
         with open(manifest_path) as f:
             manifest = json.load(f)
@@ -787,6 +845,8 @@ class ShardedCiaoStore:
             for q in manifest.get("query_log", [])
         ]
         store.query_log_cap = 4096
+        store.telemetry = TelemetryPlane()
+        store._migration_lock = threading.RLock()
         return store
 
 
@@ -796,10 +856,14 @@ class ShardedStoreSnapshot:
     ``shards`` holds one :class:`~repro.core.server.StoreSnapshot` per
     shard, so :class:`ShardedScanner`,
     :class:`~repro.core.batch_scan.ScanBatcher` and the device scanners
-    run over it unchanged.  ``summaries`` are shared LIVE by reference:
-    a :class:`ShardSummary` is monotone-permissive and updated before its
-    shard's ingest, so a concurrent update can only make a verdict more
-    permissive — pruning stays sound for every row the snapshot can see.
+    run over it unchanged.  ``summaries`` is a shallow COPY of the
+    store's summary list: each :class:`ShardSummary` object is still
+    shared live (monotone-permissive and updated before its shard's
+    ingest, so a concurrent update only makes verdicts more permissive),
+    but a migration ``finish()`` installing fresh exhaustive summaries
+    into the live list does not retroactively tighten this snapshot —
+    the old, over-permissive objects keep covering every row the
+    snapshot pinned.
 
     ``data_version`` is the sum of the per-shard snapshot versions (the
     same composition rule as the live store); snapshot-local JIT
@@ -812,7 +876,7 @@ class ShardedStoreSnapshot:
         self.router = store.router
         self.segment_capacity = store.segment_capacity
         self.shards = [s.snapshot() for s in store.shards]
-        self.summaries = store.summaries
+        self.summaries = list(store.summaries)
         self.telemetry = store.telemetry
         self.route_time_s = store.route_time_s
         self.base_version = sum(s.base_version for s in self.shards)
@@ -890,6 +954,268 @@ class ShardedStoreSnapshot:
                 out[k] = out.get(k, 0) + n
         return out
 
+    def close(self) -> None:
+        """Retire every per-shard snapshot (see
+        :meth:`repro.core.server.StoreSnapshot.close`).  Idempotent."""
+        for s in self.shards:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# row placement primitives (shared by offline reshard + online migration)
+# ---------------------------------------------------------------------------
+
+
+def _account_rows(sh: CiaoStore, epoch: int, tier: int, k: int, *,
+                  loaded: int = 0, jit: int = 0) -> None:
+    """Adjust one shard's placement-derived counters by ``k`` rows.
+
+    These are exactly the per-shard counters the scan executor consults
+    (``group_records``/``group_loaded`` for pruned-shard attribution,
+    ``_epoch_records`` + the ``LoadStats`` row counts for the empty-shard
+    check and the parallel-dispatch heuristic).  ``k`` (and the
+    ``loaded``/``jit`` row deltas) may be negative — a migration removes
+    a segment from its source shard before re-placing its rows.
+    """
+    sh._epoch_records[epoch] = sh._epoch_records.get(epoch, 0) + k
+    gkey = (epoch, tier)
+    sh.group_records[gkey] = sh.group_records.get(gkey, 0) + k
+    sh.stats.n_records += k
+    if loaded:
+        sh.group_loaded[gkey] = sh.group_loaded.get(gkey, 0) + loaded
+        sh.stats.n_loaded += loaded
+    if jit:
+        sh.stats.n_jit_loaded += jit
+
+
+def _split_by_shard(sid: np.ndarray, n_shards: int) -> dict[int, np.ndarray]:
+    """shard -> row indices, omitting empty targets."""
+    out: dict[int, np.ndarray] = {}
+    for s in range(n_shards):
+        idx = np.nonzero(sid == s)[0]
+        if idx.size:
+            out[s] = idx
+    return out
+
+
+def _place_loaded(tgt: CiaoStore, seg: ColumnarSegment, idx: np.ndarray,
+                  sub_recs: list[bytes], sub_objs: list[dict],
+                  bits: np.ndarray) -> None:
+    """Append ``seg``'s rows at ``idx`` (with their bitvector slices) to
+    ``tgt``'s open builder for the segment's coverage group."""
+    tgt.segments.extend(
+        tgt._builder(seg.epoch, seg.n_covered, seg.tier)
+        .add(sub_recs, sub_objs, bits[:, idx]))
+
+
+def _place_jit(tgt: CiaoStore, seg: ColumnarSegment,
+               sub_recs: list[bytes], sub_objs: list[dict],
+               cap: int) -> None:
+    """Append JIT-promoted rows (no bitvectors) as fresh segments."""
+    tgt.jit_segments.extend(build_segments(
+        sub_recs, np.zeros((0, len(sub_recs)), bool), objs=sub_objs,
+        epoch=seg.epoch, n_covered=seg.n_covered, tier=seg.tier,
+        capacity=cap))
+
+
+def _place_raw(tgt: CiaoStore, rr: RawRemainder, idx: np.ndarray) -> None:
+    """Append the ``idx`` slice of one raw remainder."""
+    tgt.raw.append(RawRemainder(
+        data=rr.data[idx], lengths=rr.lengths[idx],
+        epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier))
+
+
+class SegmentMigration:
+    """Incremental background re-partition of one :class:`ShardedCiaoStore`.
+
+    Created by :meth:`ShardedCiaoStore.begin_migration` (which swaps the
+    router first, so new ingest needs no moving).  Each :meth:`step`
+    drains up to ``batch_rows`` rows of the pre-swap work list; a single
+    item (segment or raw remainder) moves atomically w.r.t. snapshots:
+
+      1. route the item's rows with the NEW router OUTSIDE every lock
+         (decode + crc are the expensive part);
+      2. all-stay fast path: if every row already lives on its target
+         shard, the item is untouched (the common case — only segments
+         straddling a boundary change pay anything);
+      3. else, under the store's migration fence: remove the item from
+         its source shard (identity filter, negative accounting, version
+         bump) and re-place each row slice on its target shard (summary
+         update BEFORE placement — same ordering as live ingest — then
+         builder/segment append, positive accounting, version bump).
+
+    Source summaries are never rebuilt mid-migration: they stay
+    monotone-over-permissive for departed rows (pruning remains sound,
+    merely less sharp) until :meth:`finish` installs fresh exhaustive
+    summaries per shard.  A raw remainder that a concurrent scan
+    JIT-promoted away is simply skipped (``items_skipped``): its rows
+    became resident jit segments of the SOURCE shard — stragglers the
+    next migration can move; routing never affects correctness.
+
+    At most one ``SegmentMigration`` should run at a time (the tuner is
+    the single driver); ``step`` itself is safe against concurrent
+    ingest, scans and snapshots by construction.
+    """
+
+    def __init__(self, store: ShardedCiaoStore, router: ShardRouter,
+                 work: list[tuple[str, int, object]], *,
+                 batch_rows: int = 4096):
+        self.store = store
+        self.router = router
+        self._work = work
+        self.batch_rows = int(batch_rows)
+        self.rows_moved = 0
+        self.rows_kept = 0
+        self.segments_moved = 0
+        self.items_skipped = 0
+        self.batches = 0
+        self.finished = False
+
+    @property
+    def done(self) -> bool:
+        return self.finished
+
+    @property
+    def items_left(self) -> int:
+        return len(self._work)
+
+    def step(self, max_rows: int | None = None) -> int:
+        """Process work items until ``max_rows`` rows were examined (or
+        the work list drains, which auto-:meth:`finish`\\ es).  Returns
+        the number of rows examined this call."""
+        if self.finished:
+            return 0
+        budget = self.batch_rows if max_rows is None else int(max_rows)
+        processed = 0
+        while self._work and processed < budget:
+            kind, src, item = self._work.pop()
+            processed += self._move_item(kind, src, item)
+        self.batches += 1
+        if not self._work:
+            self.finish()
+        return processed
+
+    def run(self) -> None:
+        """Drain the whole work list (bounded batches, then finish)."""
+        while not self.finished:
+            self.step()
+
+    def _move_item(self, kind: str, src: int, item) -> int:
+        store = self.store
+        sh = store.shards[src]
+        if kind == "raw":
+            rr: RawRemainder = item  # type: ignore[assignment]
+            recs, objs = decode_rows(rr.data, rr.lengths)
+            n = len(recs)
+        else:
+            seg: ColumnarSegment = item  # type: ignore[assignment]
+            recs, objs = seg.records(), seg.rows
+            n = seg.n_rows
+        if n == 0:
+            return 0
+        sid = self.router.route(objs, recs)
+        if int(np.count_nonzero(sid != src)) == 0:
+            self.rows_kept += n
+            return n
+        split = _split_by_shard(sid, store.n_shards)
+        with store._migration_lock:
+            # remove from the source shard first: a fenced snapshot sees
+            # the item either fully present or fully re-placed, and an
+            # unfenced live reader can only transiently UNDERcount (the
+            # same window a racing ingest always had)
+            with sh._ingest_lock:
+                if kind == "loaded":
+                    if not any(g is item for g in sh.segments):
+                        self.items_skipped += 1
+                        return n
+                    sh.segments = [g for g in sh.segments if g is not item]
+                    _account_rows(sh, seg.epoch, seg.tier, -n, loaded=-n)
+                elif kind == "jit":
+                    if not any(g is item for g in sh.jit_segments):
+                        self.items_skipped += 1
+                        return n
+                    sh.jit_segments = [
+                        g for g in sh.jit_segments if g is not item]
+                    _account_rows(sh, seg.epoch, seg.tier, -n, jit=-n)
+                else:
+                    # a concurrent scan may have JIT-promoted this
+                    # remainder away; its rows are now source-resident
+                    # jit segments outside this work list — skip
+                    if not any(x is item for x in sh.raw):
+                        self.items_skipped += 1
+                        return n
+                    sh.raw = [x for x in sh.raw if x is not item]
+                    _account_rows(sh, rr.epoch, rr.tier, -n)
+                sh.data_version += 1
+            if kind == "loaded":
+                bits = bitvector.unpack(seg.bitvectors, n)
+            for dst, idx in split.items():
+                tgt = store.shards[dst]
+                sub_recs = [recs[i] for i in idx]
+                sub_objs = [objs[i] for i in idx]
+                with tgt._ingest_lock:
+                    if dst != src:
+                        # source rows are already covered by the source
+                        # summary (over-permissive until finish())
+                        store.summaries[dst].update(sub_objs)
+                    if kind == "loaded":
+                        _place_loaded(tgt, seg, idx, sub_recs, sub_objs,
+                                      bits)
+                        _account_rows(tgt, seg.epoch, seg.tier, len(idx),
+                                      loaded=len(idx))
+                    elif kind == "jit":
+                        _place_jit(tgt, seg, sub_recs, sub_objs,
+                                   store.segment_capacity)
+                        _account_rows(tgt, seg.epoch, seg.tier, len(idx),
+                                      jit=len(idx))
+                    else:
+                        _place_raw(tgt, rr, idx)
+                        _account_rows(tgt, rr.epoch, rr.tier, len(idx))
+                    tgt.data_version += 1
+                    if dst != src:
+                        self.rows_moved += len(idx)
+                    else:
+                        self.rows_kept += len(idx)
+        self.segments_moved += 1
+        return n
+
+    def finish(self) -> None:
+        """Install fresh exhaustive per-shard summaries and record the
+        migration into the store's telemetry plane.  Idempotent; called
+        automatically when :meth:`step` drains the work list.
+
+        Each shard's summary is rebuilt from its ACTUAL resident rows
+        (segments, jit segments, decoded raw) under that shard's ingest
+        lock — a racing ingest either lands before the rebuild (its rows
+        are counted) or blocks until the fresh summary is installed and
+        then updates it.  Old snapshots keep the old summary objects
+        (their ``summaries`` list was copied), so their pruning stays
+        over-permissive, never unsound.
+        """
+        if self.finished:
+            return
+        self.finished = True
+        store = self.store
+        with store._migration_lock:
+            for s, sh in enumerate(store.shards):
+                old = store.summaries[s]
+                with sh._ingest_lock:
+                    fresh = ShardSummary(
+                        exhaustive=store.n_shards > 1,
+                        value_cap=old.value_cap)
+                    for seg in (*sh.blocks, *sh.jit_blocks):
+                        fresh.update(seg.rows)
+                    for rr in sh.raw:
+                        _, objs = decode_rows(rr.data, rr.lengths)
+                        fresh.update(objs)
+                    store.summaries[s] = fresh
+        telemetry = getattr(store, "telemetry", None)
+        if telemetry is not None:
+            telemetry.record_tuner(
+                migrations=1, rows_moved=self.rows_moved,
+                rows_kept=self.rows_kept,
+                segments_moved=self.segments_moved)
+
 
 def reshard(store: "ShardedCiaoStore | CiaoStore",
             router: ShardRouter, *,
@@ -914,6 +1240,12 @@ def reshard(store: "ShardedCiaoStore | CiaoStore",
     that cannot be attributed to rows after the fact) and the load-path
     timings are carried onto shard 0, where only their fleet SUM is ever
     read.
+
+    Placement and accounting go through the same primitives the online
+    :class:`SegmentMigration` uses (:func:`_place_loaded` /
+    :func:`_place_jit` / :func:`_place_raw` / :func:`_account_rows`) —
+    offline reshard is the degenerate migration where every item moves
+    into a freshly built store with no concurrent readers.
     """
     src_shards = (store.shards if isinstance(store, ShardedCiaoStore)
                   else [store])
@@ -950,26 +1282,11 @@ def reshard(store: "ShardedCiaoStore | CiaoStore",
         store.query_log if isinstance(store, ShardedCiaoStore)
         else src0.query_log)
 
-    def _account(s: int, epoch: int, tier: int, k: int, *,
-                 loaded: bool = False, jit: bool = False) -> None:
-        """Placement-derived per-shard counters (exact per target)."""
-        sh = out.shards[s]
-        sh._epoch_records[epoch] += k
-        gkey = (epoch, tier)
-        sh.group_records[gkey] = sh.group_records.get(gkey, 0) + k
-        sh.stats.n_records += k
-        if loaded:
-            sh.group_loaded[gkey] = sh.group_loaded.get(gkey, 0) + k
-            sh.stats.n_loaded += k
-        if jit:
-            sh.stats.n_jit_loaded += k
-
-    def _place(recs: list[bytes], objs: list[dict], sid: np.ndarray,
-               place: Callable[[int, np.ndarray, list, list], None]) -> None:
-        for s in range(router.n_shards):
-            idx = np.nonzero(sid == s)[0]
-            if not idx.size:
-                continue
+    def _scatter(recs: list[bytes], objs: list[dict],
+                 place: Callable[[int, np.ndarray, list, list], None]
+                 ) -> None:
+        sid = router.route(objs, recs)
+        for s, idx in _split_by_shard(sid, router.n_shards).items():
             sub_recs = [recs[i] for i in idx]
             sub_objs = [objs[i] for i in idx]
             out.summaries[s].update(sub_objs)
@@ -977,41 +1294,30 @@ def reshard(store: "ShardedCiaoStore | CiaoStore",
 
     for src in src_shards:
         for seg in src.blocks:
-            recs, objs = seg.records(), seg.rows
             bits = bitvector.unpack(seg.bitvectors, seg.n_rows)
-            sid = router.route(objs, recs)
 
             def _loaded(s, idx, sub_recs, sub_objs, seg=seg, bits=bits):
-                tgt = out.shards[s]
-                tgt.segments.extend(
-                    tgt._builder(seg.epoch, seg.n_covered, seg.tier)
-                    .add(sub_recs, sub_objs, bits[:, idx]))
-                _account(s, seg.epoch, seg.tier, len(idx), loaded=True)
+                _place_loaded(out.shards[s], seg, idx, sub_recs, sub_objs,
+                              bits)
+                _account_rows(out.shards[s], seg.epoch, seg.tier, len(idx),
+                              loaded=len(idx))
 
-            _place(recs, objs, sid, _loaded)
+            _scatter(seg.records(), seg.rows, _loaded)
         for seg in src.jit_blocks:
-            recs, objs = seg.records(), seg.rows
-            sid = router.route(objs, recs)
-
             def _jit(s, idx, sub_recs, sub_objs, seg=seg):
-                out.shards[s].jit_segments.extend(build_segments(
-                    sub_recs, np.zeros((0, len(sub_recs)), bool),
-                    objs=sub_objs, epoch=seg.epoch,
-                    n_covered=seg.n_covered, tier=seg.tier, capacity=cap))
-                _account(s, seg.epoch, seg.tier, len(idx), jit=True)
+                _place_jit(out.shards[s], seg, sub_recs, sub_objs, cap)
+                _account_rows(out.shards[s], seg.epoch, seg.tier, len(idx),
+                              jit=len(idx))
 
-            _place(recs, objs, sid, _jit)
+            _scatter(seg.records(), seg.rows, _jit)
         for rr in src.raw:
             recs, objs = decode_rows(rr.data, rr.lengths)
-            sid = router.route(objs, recs)
 
             def _raw(s, idx, sub_recs, sub_objs, rr=rr):
-                out.shards[s].raw.append(RawRemainder(
-                    data=rr.data[idx], lengths=rr.lengths[idx],
-                    epoch=rr.epoch, n_covered=rr.n_covered, tier=rr.tier))
-                _account(s, rr.epoch, rr.tier, len(idx))
+                _place_raw(out.shards[s], rr, idx)
+                _account_rows(out.shards[s], rr.epoch, rr.tier, len(idx))
 
-            _place(recs, objs, sid, _raw)
+            _scatter(recs, objs, _raw)
     return out
 
 

@@ -78,12 +78,16 @@ class LatencyHistogram:
 
 
 class _TenantStats:
-    """One tenant's scan counters (summed :class:`ScanResult` fields)."""
+    """One tenant's scan counters (summed :class:`ScanResult` fields),
+    plus the serve-plane pressure counters (DESIGN.md §17/§18): ingest
+    backpressure blocks/rejections and query-admission outcomes."""
 
     __slots__ = ("scans", "cache_hits", "cache_misses", "count",
                  "rows_scanned", "rows_skipped", "raw_parsed",
                  "segments_scanned", "segments_pruned",
-                 "shards_scanned", "shards_pruned", "latency")
+                 "shards_scanned", "shards_pruned", "latency",
+                 "ingest_blocked_s", "ingest_rejected",
+                 "admitted", "admission_blocked_s", "admission_rejected")
 
     def __init__(self) -> None:
         self.scans = 0
@@ -98,6 +102,11 @@ class _TenantStats:
         self.shards_scanned = 0
         self.shards_pruned = 0
         self.latency = LatencyHistogram()
+        self.ingest_blocked_s = 0.0
+        self.ingest_rejected = 0
+        self.admitted = 0
+        self.admission_blocked_s = 0.0
+        self.admission_rejected = 0
 
     def fold(self, r: "ScanResult", *, cache_hits: int, cache_misses: int,
              wall_s: float) -> None:
@@ -143,6 +152,13 @@ class _TenantStats:
             "row_skip_fraction":
                 round(self.rows_skipped / rows, 4) if rows else 0.0,
             "latency": self.latency.to_obj(),
+            "backpressure": {
+                "ingest_blocked_s": round(self.ingest_blocked_s, 6),
+                "ingest_rejected": self.ingest_rejected,
+                "admitted": self.admitted,
+                "admission_blocked_s": round(self.admission_blocked_s, 6),
+                "admission_rejected": self.admission_rejected,
+            },
         }
 
 
@@ -184,6 +200,11 @@ class TelemetryPlane:
         # (epoch, tier) -> summed group accounting over every recorded scan
         self._tiers: dict[tuple[int, int], dict[str, int]] = {}
         self._clients: dict[object, _ClientEval] = {}
+        # physical-design tuner counters (DESIGN.md §18)
+        self._tuner: dict[str, float] = {
+            "migrations": 0, "rows_moved": 0, "rows_kept": 0,
+            "segments_moved": 0, "layout_retunes": 0, "router_swaps": 0,
+        }
 
     # -- recording -----------------------------------------------------------
     def record_scan(self, result: "ScanResult", *, tenant: str = "default",
@@ -209,6 +230,43 @@ class TelemetryPlane:
                 tg["rows_skipped"] += g.rows_skipped
                 tg["raw_parsed"] += g.raw_parsed
                 tg["segments_pruned"] += g.segments_pruned
+
+    def record_backpressure(self, *, tenant: str = "default",
+                            blocked_s: float = 0.0,
+                            rejected: int = 0) -> None:
+        """One ingest submission's backpressure outcome (serve plane)."""
+        with self._lock:
+            ts = self._tenants.get(tenant)
+            if ts is None:
+                ts = self._tenants[tenant] = _TenantStats()
+            ts.ingest_blocked_s += float(blocked_s)
+            ts.ingest_rejected += int(rejected)
+
+    def record_admission(self, *, tenant: str = "default",
+                         admitted: int = 0, blocked_s: float = 0.0,
+                         rejected: int = 0) -> None:
+        """One :class:`~repro.serve.store_engine.QueryAdmission` outcome."""
+        with self._lock:
+            ts = self._tenants.get(tenant)
+            if ts is None:
+                ts = self._tenants[tenant] = _TenantStats()
+            ts.admitted += int(admitted)
+            ts.admission_blocked_s += float(blocked_s)
+            ts.admission_rejected += int(rejected)
+
+    def record_tuner(self, *, migrations: int = 0, rows_moved: int = 0,
+                     rows_kept: int = 0, segments_moved: int = 0,
+                     layout_retunes: int = 0,
+                     router_swaps: int = 0) -> None:
+        """Fold one physical-design tuner action into the plane."""
+        with self._lock:
+            t = self._tuner
+            t["migrations"] += migrations
+            t["rows_moved"] += rows_moved
+            t["rows_kept"] += rows_kept
+            t["segments_moved"] += segments_moved
+            t["layout_retunes"] += layout_retunes
+            t["router_swaps"] += router_swaps
 
     def record_client_eval(self, client_id, seconds: float,
                            n_records: int) -> None:
@@ -250,4 +308,5 @@ class TelemetryPlane:
                     for cid, ce in sorted(self._clients.items(),
                                           key=lambda kv: str(kv[0]))
                 },
+                "tuner": dict(self._tuner),
             }

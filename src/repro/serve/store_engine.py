@@ -96,12 +96,17 @@ class QueryAdmission:
     ``tiers`` maps tier name -> :class:`TierPolicy`; ``tenant_tiers``
     maps tenant -> tier name (unmapped tenants use ``default_tier``).
     Thread-safe; counters (admitted / rejected / blocked seconds) are
-    kept per tier for :meth:`stats`.
+    kept per tier for :meth:`stats`, and — when ``telemetry`` is set
+    (the engine wires its store's plane automatically) — every outcome
+    is also recorded per TENANT into the
+    :class:`~repro.core.telemetry.TelemetryPlane`, so admission pressure
+    shows up in the same per-tenant ``stats_report()`` as scan stats.
     """
 
     def __init__(self, tiers: dict[str, TierPolicy], *,
                  tenant_tiers: dict[str, str] | None = None,
-                 default_tier: str | None = None):
+                 default_tier: str | None = None,
+                 telemetry=None):
         if not tiers:
             raise ValueError("need >= 1 tier")
         self.tiers = dict(tiers)
@@ -113,6 +118,7 @@ class QueryAdmission:
         for name in self.tenant_tiers.values():
             if name not in self.tiers:
                 raise ValueError(f"tenant tier {name!r} not in tiers")
+        self.telemetry = telemetry  # optional TelemetryPlane
         self._cond = threading.Condition()
         self._inflight = {name: 0 for name in self.tiers}
         self._admitted = {name: 0 for name in self.tiers}
@@ -127,20 +133,31 @@ class QueryAdmission:
         to :meth:`release`.  Blocks or raises per the tier's policy."""
         tier = self.tier_of(tenant)
         pol = self.tiers[tier]
-        with self._cond:
-            if self._inflight[tier] >= pol.max_inflight:
-                if pol.on_full == "reject":
-                    self._rejected[tier] += 1
-                    raise AdmissionError(
-                        f"tier {tier!r} at max_inflight="
-                        f"{pol.max_inflight} (tenant {tenant!r})")
-                t0 = time.perf_counter()
-                while self._inflight[tier] >= pol.max_inflight:
-                    self._cond.wait()
-                self._blocked_s[tier] += time.perf_counter() - t0
-            self._inflight[tier] += 1
-            self._admitted[tier] += 1
-            return tier
+        blocked = 0.0
+        try:
+            with self._cond:
+                if self._inflight[tier] >= pol.max_inflight:
+                    if pol.on_full == "reject":
+                        self._rejected[tier] += 1
+                        raise AdmissionError(
+                            f"tier {tier!r} at max_inflight="
+                            f"{pol.max_inflight} (tenant {tenant!r})")
+                    t0 = time.perf_counter()
+                    while self._inflight[tier] >= pol.max_inflight:
+                        self._cond.wait()
+                    blocked = time.perf_counter() - t0
+                    self._blocked_s[tier] += blocked
+                self._inflight[tier] += 1
+                self._admitted[tier] += 1
+        except AdmissionError:
+            # telemetry outside _cond: the plane has its own lock
+            if self.telemetry is not None:
+                self.telemetry.record_admission(tenant=tenant, rejected=1)
+            raise
+        if self.telemetry is not None:
+            self.telemetry.record_admission(tenant=tenant, admitted=1,
+                                            blocked_s=blocked)
+        return tier
 
     def release(self, tier: str) -> None:
         with self._cond:
@@ -264,6 +281,8 @@ class CiaoServeEngine:
         self._shards = list(store.shards) if self._sharded else [store]
         self.backpressure = backpressure
         self.admission = admission
+        if admission is not None and admission.telemetry is None:
+            admission.telemetry = getattr(store, "telemetry", None)
         self.result_cache = result_cache
         self.device_backend = device_backend
         # a raw remainder with EMPTY pushed coverage (n_covered == 0) is
@@ -299,6 +318,8 @@ class CiaoServeEngine:
         self.refresh_interval_s = float(refresh_interval_s)
         self._snap_lock = threading.Lock()
         self._readers: _SnapshotReaders | None = None
+        self._tuner = None
+        self._tuner_thread: threading.Thread | None = None
         self._stop = threading.Event()
         self._threads = [
             threading.Thread(target=self._drain, args=(i,),
@@ -331,7 +352,8 @@ class CiaoServeEngine:
 
     # -- ingest (submit side) --------------------------------------------------
     def ingest_chunk(self, chunk, bitvecs, *, epoch: int | None = None,
-                     tier: int | None = None) -> LoadStats:
+                     tier: int | None = None,
+                     tenant: str = "default") -> LoadStats:
         """Validate, route, and enqueue one chunk; returns live stats.
 
         Validation is synchronous (stale epochs raise HERE, where the
@@ -340,6 +362,8 @@ class CiaoServeEngine:
         :class:`~repro.core.server.LoadStats` is the live aggregate — it
         reflects this chunk only after the writers drain it (callers
         needing post-ingest totals should :meth:`quiesce` first).
+        ``tenant`` attributes any backpressure this submit hits to the
+        submitting tenant in the store's telemetry plane.
         """
         if self._closed:
             raise RuntimeError("engine is closed")
@@ -356,20 +380,23 @@ class CiaoServeEngine:
         else:
             items = [(0, chunk, bitvecs, None, epoch, tier)]
         for item in items:
-            self._enqueue(item)
+            self._enqueue(item, tenant)
         with self._stats_lock:
             self.submitted += 1
             self.enqueued += len(items)
         return store.stats
 
-    def _enqueue(self, item) -> None:
+    def _enqueue(self, item, tenant: str = "default") -> None:
         q = self._queues[item[0] % self.writers]
+        tele = getattr(self.store, "telemetry", None)
         if self.backpressure == "reject":
             try:
                 q.put_nowait(item)
             except queue.Full:
                 with self._stats_lock:
                     self.rejected += 1
+                if tele is not None:
+                    tele.record_backpressure(tenant=tenant, rejected=1)
                 raise BackpressureError(
                     f"write queue for shard {item[0]} full "
                     f"(depth {q.maxsize})") from None
@@ -380,6 +407,8 @@ class CiaoServeEngine:
             if dt > 0.0:
                 with self._stats_lock:
                     self.blocked_s += dt
+                if tele is not None:
+                    tele.record_backpressure(tenant=tenant, blocked_s=dt)
 
     # -- ingest (writer pool) --------------------------------------------------
     def _drain(self, wi: int) -> None:
@@ -525,6 +554,37 @@ class CiaoServeEngine:
             tele.record_scan(r, tenant=tenant)
         return r
 
+    # -- background physical-design tuning (DESIGN.md §18) -------------------
+    def start_tuner(self, tuner, *, interval_s: float = 0.02) -> None:
+        """Drive a :class:`~repro.core.tuner.PhysicalDesignTuner` from a
+        background thread: one ``tuner.step()`` per ``interval_s`` tick.
+
+        The tuner's migration writer coexists with the writer pool by
+        construction — every per-shard mutation on either side happens
+        under that shard's ingest lock, and segment moves are fenced
+        against ``snapshot()`` — so readers stay non-blocking and counts
+        stay exact while rows migrate.  Stopped by :meth:`close`.
+        """
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        if self._tuner_thread is not None:
+            raise RuntimeError("a tuner is already running")
+        self._tuner = tuner
+        t = threading.Thread(target=self._tuner_loop,
+                             args=(float(interval_s),),
+                             name="ciao-serve-tuner", daemon=True)
+        self._tuner_thread = t
+        t.start()
+
+    def _tuner_loop(self, interval_s: float) -> None:
+        while not self._stop.wait(interval_s):
+            try:
+                self._tuner.step()
+            except BaseException as e:  # pragma: no cover - defensive
+                with self._stats_lock:
+                    self._errors.append(e)
+                return
+
     # -- lifecycle -----------------------------------------------------------
     def stats_report(self) -> dict:
         """Engine counters + the wrapped store's own report."""
@@ -542,6 +602,11 @@ class CiaoServeEngine:
                 "errors": len(self._errors),
             }
         out = {"engine": eng, "store": self.store.stats_report()}
+        if self._tuner is not None:
+            out["tuner"] = {
+                "migrating": bool(getattr(self._tuner, "migrating", False)),
+                "events": len(getattr(self._tuner, "history", ())),
+            }
         if self.admission is not None:
             out["admission"] = self.admission.stats()
         if self.result_cache is not None:
@@ -560,11 +625,14 @@ class CiaoServeEngine:
         if drain:
             for q in self._queues:
                 q.join()
-        self._stop.set()                  # stops the refresher
+        self._stop.set()                  # stops the refresher + tuner
         for q in self._queues:
             q.put(None)                   # one sentinel per writer
         for t in self._threads:
             t.join()
+        if self._tuner_thread is not None:
+            self._tuner_thread.join()
+            self._tuner_thread = None
 
     def __enter__(self) -> "CiaoServeEngine":
         return self

@@ -10,10 +10,12 @@ threaded stress sweep with concurrent writers and mixed-mode readers.
 """
 from __future__ import annotations
 
+import gc
 import json
 import random
 import threading
 import time
+import weakref
 
 import pytest
 
@@ -515,5 +517,137 @@ def test_threaded_stress_sweep(ycsb):
         rep = serve.stats_report()
         assert rep["engine"]["errors"] == 0
         assert rep["engine"]["drained"] == rep["engine"]["enqueued"]
+    finally:
+        serve.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot retirement + per-tenant pressure telemetry (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_close_releases_promoted_fork(ycsb):
+    """An abandoned tainted snapshot (its scan promoted raw remainders
+    into fork-local jit segments) must not pin those segments after an
+    explicit close(): the retire hook drops every fork-held reference,
+    so gc reclaims them while the parent stays intact and exact."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+    for ch, bv, tier in chunks:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+
+    snap = store.snapshot()
+    scanner = DataSkippingScanner(snap, telemetry=False)
+    q = Query(clauses=(pool[0],))
+    assert scanner.scan(q).count == _oracle(objs, q)
+    assert snap.jit_blocks               # tainted: fork-local promotion ran
+    refs = [weakref.ref(seg) for seg in snap.jit_blocks]
+
+    snap.close()
+    assert not snap.jit_blocks and not snap.raw and not snap.blocks
+    del scanner, snap
+    gc.collect()
+    assert all(r() is None for r in refs)   # nothing pins the fork segments
+    # the parent never saw the fork: still raw, still exact
+    assert store.raw
+    assert DataSkippingScanner(store, telemetry=False).scan(q).count \
+        == _oracle(objs, q)
+
+
+def test_sharded_snapshot_close_delegates(ycsb):
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    router = ShardRouter(n_shards=4, key=choose_routing_key(fam.plan))
+    store = ShardedCiaoStore(fam, router=router, segment_capacity=256)
+    for ch, bv, tier in chunks:
+        store.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier)
+    snap = store.snapshot()
+    scanner = ShardedScanner(snap, log_queries=False)
+    q = Query(clauses=(pool[0],))
+    assert scanner.scan(q).count == _oracle(objs, q)
+    assert snap.jit_blocks
+    refs = [weakref.ref(seg) for seg in snap.jit_blocks]
+    snap.close()
+    assert not snap.blocks and not snap.jit_blocks and not snap.raw
+    del scanner
+    gc.collect()
+    assert all(r() is None for r in refs)
+    assert ShardedScanner(store, log_queries=False).scan(q).count \
+        == _oracle(objs, q)
+
+
+def test_backpressure_and_admission_telemetry_per_tenant(ycsb):
+    """Serve-plane pressure shows up in the per-tenant telemetry:
+    ingest rejections under the submitting tenant, admission rejections
+    and admitted counts under the querying tenant — all inside the
+    store's stats_report, next to the tenant's scan counters."""
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)
+    store = CiaoStore(fam, segment_capacity=256)
+    adm = QueryAdmission({"gold": TierPolicy(4),
+                          "free": TierPolicy(0, on_full="reject")},
+                         tenant_tiers={"freeloader": "free"},
+                         default_tier="gold")
+    serve = CiaoServeEngine(store, queue_depth=1, backpressure="reject",
+                            admission=adm)
+    try:
+        assert adm.telemetry is store.telemetry   # wired by the engine
+        with store._ingest_lock:         # stall the writer mid-drain
+            serve.ingest_chunk(*chunks[0][:2], epoch=fam.plan.epoch,
+                               tier=chunks[0][2], tenant="acme")
+            deadline = time.time() + 5.0
+            while serve._queues[0].qsize() > 0:
+                assert time.time() < deadline, "writer never dequeued"
+                time.sleep(0.001)
+            with pytest.raises(BackpressureError):
+                for ch, bv, tier in chunks[1:]:
+                    serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch,
+                                       tier=tier, tenant="acme")
+        serve.quiesce()
+        q = Query(clauses=(pool[0],))
+        with pytest.raises(AdmissionError):
+            serve.query(q, tenant="freeloader")
+        assert serve.query(q, tenant="vip").count > 0
+        tenants = serve.stats_report()["store"]["telemetry"]["tenants"]
+        assert tenants["acme"]["backpressure"]["ingest_rejected"] >= 1
+        assert tenants["freeloader"]["backpressure"]["admission_rejected"] \
+            == 1
+        assert tenants["vip"]["backpressure"]["admitted"] >= 1
+    finally:
+        serve.close()
+
+
+def test_backpressure_block_wait_telemetry_per_tenant(ycsb):
+    recs, objs, pool = ycsb
+    fam = _family(pool)
+    chunks = _encode_chunks(recs, fam)[:6]
+    store = CiaoStore(fam, segment_capacity=256)
+    serve = CiaoServeEngine(store, queue_depth=1, backpressure="block")
+    errors: list[BaseException] = []
+
+    def feed() -> None:
+        try:
+            for ch, bv, tier in chunks:
+                serve.ingest_chunk(ch, bv, epoch=fam.plan.epoch, tier=tier,
+                                   tenant="bulk")
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    try:
+        with store._ingest_lock:
+            t = threading.Thread(target=feed)
+            t.start()
+            time.sleep(0.05)             # feeder hits the full queue
+            assert t.is_alive()
+        t.join(timeout=10.0)
+        assert not t.is_alive() and not errors
+        serve.quiesce()
+        bp = serve.stats_report()["store"]["telemetry"]["tenants"]["bulk"][
+            "backpressure"]
+        assert bp["ingest_blocked_s"] > 0.0
+        assert bp["ingest_rejected"] == 0
     finally:
         serve.close()

@@ -1,0 +1,420 @@
+"""Online physical-design tuner (DESIGN.md §18).
+
+Covers the incremental background migration (counts bit-identical to the
+unsharded oracle BEFORE, DURING — per batch, live store and fenced
+snapshot both — and AFTER the move; accounting counters re-derived
+exactly; partition pruning recovered on the new routing key), the
+workload-driven per-key column layout (lazy keys materialize on first
+touch with identical counts; device admission refuses lazy segments),
+the tuner's drift triggers (key-shift, skew, no-trigger stability), and
+the serve-plane integration (migration writer coexisting with the
+writer pool, backpressure/admission telemetry in stats_report).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.client import NumpyEngine, encode_chunk
+from repro.core.columnar import ColumnarSegment
+from repro.core.predicates import Query, clause, key_value
+from repro.core.replan import LayoutDrift, layout_drift_signal
+from repro.core.server import CiaoStore, DataSkippingScanner, PushdownPlan
+from repro.core.shard import (
+    ShardedCiaoStore, ShardedScanner, ShardRouter, reshard,
+)
+from repro.core.tuner import PhysicalDesignTuner, TunerPolicy
+from repro.core.workload import estimate_selectivities
+from repro.data.datasets import generate_records, predicate_pool
+
+CHUNK = 256
+N_RECORDS = 2048
+KEY_A = "linear_score"
+KEY_B = "visits"
+
+
+@pytest.fixture(scope="module")
+def ycsb():
+    recs = generate_records("ycsb", N_RECORDS, seed=11)
+    pool = predicate_pool("ycsb")
+    sel = estimate_selectivities(pool, recs[:300])
+    ranked = sorted(pool, key=lambda c: abs(sel[c] - 0.2))
+    objs = [json.loads(r) for r in recs]
+    return recs, objs, ranked
+
+
+def _plan(ranked):
+    return PushdownPlan(clauses=ranked[:6])
+
+
+def _ingest(store, recs, plan, *, jit=False):
+    eng = NumpyEngine()
+    for start in range(0, len(recs), CHUNK):
+        chunk = encode_chunk(recs[start: start + CHUNK])
+        bv = eng.eval_fused(chunk, plan.clauses)
+        store.ingest_chunk(chunk, bv)
+    if jit:
+        store.jit_load_raw()
+    return store
+
+
+def _queries(objs, key, n=12):
+    vals = sorted({o[key] for o in objs})
+    step = max(1, len(vals) // n)
+    qs = [Query((clause(key_value(key, v)),)) for v in vals[::step][:n]]
+    qs.append(Query((clause(key_value(key, -1)),)))   # no match
+    return qs
+
+
+def _counts(scanner, qs):
+    return [scanner.scan(q).count for q in qs]
+
+
+# ---------------------------------------------------------------------------
+# incremental migration: exactness before / during / after
+# ---------------------------------------------------------------------------
+
+def test_migration_counts_exact_every_batch(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]),
+            segment_capacity=256),
+        recs, plan, jit=True)
+    oracle = _ingest(CiaoStore(plan, segment_capacity=256), recs, plan,
+                     jit=True)
+    qs = _queries(objs, KEY_B) + _queries(objs, KEY_A, n=4)
+    want = _counts(DataSkippingScanner(oracle), qs)
+    sc = ShardedScanner(store)
+    assert _counts(sc, qs) == want                      # before
+
+    mig = store.begin_migration(
+        ShardRouter.from_samples(4, KEY_B, objs[:400]), batch_rows=300)
+    batches = 0
+    while not mig.done:
+        mig.step()
+        batches += 1
+        assert _counts(sc, qs) == want                  # during, live store
+        snap = store.snapshot()
+        assert _counts(ShardedScanner(snap, log_queries=False),
+                       qs) == want                      # during, snapshot
+    assert batches > 2                                  # actually incremental
+    assert mig.rows_moved > 0
+    assert _counts(sc, qs) == want                      # after
+    assert store.router.key == KEY_B
+
+    # placement-derived counters are exact: rows partition the shards
+    assert sum(sh.stats.n_records for sh in store.shards) == N_RECORDS
+    assert sum(sh.stats.n_loaded for sh in store.shards) == \
+        oracle.stats.n_loaded
+    per_group = {}
+    for sh in store.shards:
+        for k, n in sh.group_records.items():
+            per_group[k] = per_group.get(k, 0) + n
+    assert per_group == dict(oracle.group_records)
+
+    # partition pruning recovered on the NEW key: point lookups off the
+    # hot key now refute whole shards
+    pruned = sum(sc.scan(q).shards_pruned for q in _queries(objs, KEY_B))
+    assert pruned > 0
+    tele = store.telemetry.snapshot()["tuner"]
+    assert tele["migrations"] == 1
+    assert tele["rows_moved"] == mig.rows_moved
+
+
+def test_migration_summaries_rebuilt_and_old_snapshots_sound(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]),
+            segment_capacity=256),
+        recs, plan)
+    pre = store.snapshot()
+    pre_summaries = list(pre.summaries)
+    qs = _queries(objs, KEY_B)
+    want = _counts(ShardedScanner(pre), qs)
+    mig = store.begin_migration(
+        ShardRouter.from_samples(4, KEY_B, objs[:400]))
+    mig.run()
+    # live store got FRESH exhaustive summaries; the old snapshot kept
+    # its (now over-permissive) ones and still answers exactly
+    assert all(a is not b for a, b in zip(store.summaries, pre_summaries))
+    assert all(s.exhaustive for s in store.summaries)
+    assert _counts(ShardedScanner(pre), qs) == want
+
+
+def test_migration_concurrent_with_ingest_and_scans(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    half = N_RECORDS // 2
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]),
+            segment_capacity=256),
+        recs[:half], plan)
+    oracle = _ingest(CiaoStore(plan, segment_capacity=256), recs, plan)
+    qs = _queries(objs, KEY_B, n=6)
+    errors: list[BaseException] = []
+    mig = store.begin_migration(
+        ShardRouter.from_samples(4, KEY_B, objs[:400]), batch_rows=200)
+
+    def feed():
+        try:
+            eng = NumpyEngine()
+            for start in range(half, N_RECORDS, CHUNK):
+                chunk = encode_chunk(recs[start: start + CHUNK])
+                store.ingest_chunk(chunk, eng.eval_fused(chunk, plan.clauses))
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    def read():
+        try:
+            sc = ShardedScanner(store, log_queries=False)
+            while not mig.done:
+                for q in qs:
+                    sc.scan(q)
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=feed),
+               threading.Thread(target=read)]
+    for t in threads:
+        t.start()
+    while not mig.done:
+        mig.step()
+    for t in threads:
+        t.join()
+    assert not errors
+    # quiesced: every row landed exactly once, counts match the oracle
+    want = _counts(DataSkippingScanner(oracle), qs)
+    assert _counts(ShardedScanner(store), qs) == want
+    assert sum(sh.stats.n_records for sh in store.shards) == N_RECORDS
+
+
+def test_migration_requires_same_shard_count(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = ShardedCiaoStore(
+        plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]))
+    with pytest.raises(ValueError, match="shard count"):
+        store.begin_migration(
+            ShardRouter.from_samples(8, KEY_A, objs[:400]))
+
+
+def test_reshard_still_matches_oracle_after_delegation(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]),
+            segment_capacity=256),
+        recs, plan, jit=True)
+    oracle = _ingest(CiaoStore(plan, segment_capacity=256), recs, plan,
+                     jit=True)
+    out = reshard(store, ShardRouter.from_samples(8, KEY_B, objs[:400]))
+    qs = _queries(objs, KEY_B) + _queries(objs, KEY_A, n=4)
+    want = _counts(DataSkippingScanner(oracle), qs)
+    assert _counts(ShardedScanner(out), qs) == want
+    assert sum(sh.stats.n_records for sh in out.shards) == N_RECORDS
+    assert dict(out.group_records) == dict(oracle.group_records)
+
+
+# ---------------------------------------------------------------------------
+# per-key layout policy
+# ---------------------------------------------------------------------------
+
+def test_lazy_layout_counts_identical(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    eager = _ingest(CiaoStore(plan, segment_capacity=256), recs, plan)
+    lazy = CiaoStore(plan, segment_capacity=256)
+    plan_keys = {t.key for c in plan.clauses for t in c.terms}
+    lazy.layout_eager_keys = frozenset(plan_keys | {KEY_A})
+    _ingest(lazy, recs, plan)
+    qs = (_queries(objs, KEY_A, n=4) + _queries(objs, KEY_B, n=4)
+          + _queries(objs, "phone_country", n=3)
+          + [Query((clause(key_value("isActive", True)),))])
+    want = _counts(DataSkippingScanner(eager), qs)
+    assert _counts(DataSkippingScanner(lazy), qs) == want
+    # the lazy store really deferred some columns, then materialized
+    # exactly the touched ones
+    segs = [b for b in lazy.blocks if isinstance(b, ColumnarSegment)]
+    assert any(KEY_B in s.key_cols for s in segs)       # touched -> built
+    assert all("email" not in s.key_cols for s in segs)  # untouched -> raw
+
+
+def test_lazy_key_absent_vs_deferred():
+    objs = [{"a": i, "b": i * 2} for i in range(8)]
+    recs = [json.dumps(o).encode() for o in objs]
+    seg = ColumnarSegment(
+        records=recs, bitvectors=np.zeros((0, 1), np.uint32),
+        epoch=0, n_covered=0, tier=0, objs=objs,
+        eager_keys=frozenset({"a"}))
+    assert seg.lazy_keys == frozenset({"b"})
+    # genuinely absent key refutes without materializing anything
+    assert not seg.clause_possible(Query((clause(key_value("zz", 1)),))
+                                   .clauses[0])
+    assert seg.lazy_keys == frozenset({"b"})
+    # deferred key materializes on first touch, with exact results
+    c = clause(key_value("b", 6))
+    assert seg.clause_possible(c)
+    mask, leftover = seg.clause_mask(c)
+    assert int(mask.sum()) == 1 and not leftover
+    assert "b" in seg.key_cols and not seg.lazy_keys
+
+
+def test_lazy_materialization_race_is_single_winner():
+    objs = [{"a": i, "b": i % 5} for i in range(512)]
+    recs = [json.dumps(o).encode() for o in objs]
+    seg = ColumnarSegment(
+        records=recs, bitvectors=np.zeros((0, 16), np.uint32),
+        epoch=0, n_covered=0, tier=0, objs=objs,
+        eager_keys=frozenset({"a"}))
+    cols, errors = [], []
+
+    def touch():
+        try:
+            cols.append(seg.key_col("b"))
+        except BaseException as e:      # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=touch) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(c is cols[0] for c in cols)      # one winner, shared column
+    assert cols[0].num_valid.sum() == 512
+
+
+def test_device_cache_refuses_lazy_segments():
+    from repro.core.device_cache import DeviceSegmentCache
+    objs = [{"a": i, "b": i} for i in range(16)]
+    recs = [json.dumps(o).encode() for o in objs]
+    lazy = ColumnarSegment(
+        records=recs, bitvectors=np.zeros((1, 1), np.uint32),
+        epoch=0, n_covered=1, tier=0, objs=objs,
+        eager_keys=frozenset({"a"}))
+    full = ColumnarSegment(
+        records=recs, bitvectors=np.zeros((1, 1), np.uint32),
+        epoch=0, n_covered=1, tier=0, objs=objs)
+    assert not DeviceSegmentCache._eligible(lazy)
+    assert DeviceSegmentCache._eligible(full)
+    # materializing every lazy key restores eligibility
+    lazy.key_col("b")
+    assert not lazy.lazy_keys
+    assert DeviceSegmentCache._eligible(lazy)
+
+
+# ---------------------------------------------------------------------------
+# drift signal + tuner loop
+# ---------------------------------------------------------------------------
+
+def test_layout_drift_triggers():
+    sig = LayoutDrift(routing_key=KEY_A, hot_key=KEY_B, hot_share=0.8,
+                      routing_share=0.1, n_window=32)
+    assert sig.triggers() == "key-shift"
+    assert LayoutDrift(routing_key=KEY_A, hot_key=KEY_A, hot_share=0.9,
+                       routing_share=0.9, n_window=32).triggers() is None
+    assert LayoutDrift(routing_key=KEY_A, hot_key=KEY_B, hot_share=0.8,
+                       routing_share=0.1, n_window=2).triggers() is None
+    assert LayoutDrift(routing_key=KEY_A, hot_key=KEY_A, hot_share=1.0,
+                       routing_share=1.0, n_window=32,
+                       shard_skew=8.0).triggers() == "skew"
+
+
+def test_layout_drift_signal_reads_query_log(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400])),
+        recs, plan)
+    for q in _queries(objs, KEY_B):
+        store.log_query(q)
+    sig = layout_drift_signal(store)
+    assert sig.routing_key == KEY_A
+    assert sig.hot_key == KEY_B
+    assert sig.hot_share > 0.9
+    assert sig.triggers() == "key-shift"
+
+
+def test_tuner_migrates_on_key_shift_and_retunes_layout(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400]),
+            segment_capacity=256),
+        recs, plan)
+    oracle = _ingest(CiaoStore(plan, segment_capacity=256), recs, plan)
+    tuner = PhysicalDesignTuner(
+        store, policy=TunerPolicy(check_every_scans=8, batch_rows=512))
+    sc = ShardedScanner(store)
+    qs = _queries(objs, KEY_B)
+    want = _counts(DataSkippingScanner(oracle), qs)
+    assert _counts(sc, qs) == want
+    assert tuner.step() is None or tuner.migrating  # throttled or started
+    while not tuner.migrating:
+        for q in qs:
+            sc.scan(q)
+        tuner.step()
+    tuner.run_migration()
+    assert store.router.key == KEY_B
+    assert _counts(sc, qs) == want
+    kinds = [e.kind for e in tuner.history]
+    assert "migration-start" in kinds and "migration-finish" in kinds
+    # layout co-selection: the hot key and plan keys went eager
+    eager = store.shards[0].layout_eager_keys
+    assert KEY_B in eager
+    assert {t.key for c in plan.clauses for t in c.terms} <= eager
+    tele = store.telemetry.snapshot()["tuner"]
+    assert tele["router_swaps"] == 1 and tele["layout_retunes"] == 1
+
+
+def test_tuner_stable_workload_no_action(ycsb):
+    recs, objs, ranked = ycsb
+    plan = _plan(ranked)
+    store = _ingest(
+        ShardedCiaoStore(
+            plan, router=ShardRouter.from_samples(4, KEY_A, objs[:400])),
+        recs, plan)
+    tuner = PhysicalDesignTuner(store, policy=TunerPolicy(check_every_scans=4))
+    sc = ShardedScanner(store)
+    for q in _queries(objs, KEY_A):          # workload ON the routing key
+        sc.scan(q)
+    for _ in range(8):
+        assert tuner.step() is None
+    assert store.router.key == KEY_A and not tuner.history
+
+
+def test_tuner_skew_triggers_requantile():
+    # range boundaries fitted to a key distribution that then drifted:
+    # the live rows all land past the last cut point
+    plan = PushdownPlan(clauses=(clause(key_value("flag", True)),))
+    rng = np.random.default_rng(3)
+    warm = [{"k": float(v), "flag": True} for v in rng.uniform(0, 100, 400)]
+    store = ShardedCiaoStore(
+        plan, router=ShardRouter.from_samples(6, "k", warm),
+        segment_capacity=128)
+    objs = [{"k": float(v), "flag": bool(i % 2)}
+            for i, v in enumerate(rng.uniform(85, 100, 1200))]
+    recs = [json.dumps(o).encode() for o in objs]
+    eng = NumpyEngine()
+    for start in range(0, len(recs), 200):
+        chunk = encode_chunk(recs[start: start + 200])
+        store.ingest_chunk(chunk, eng.eval_fused(chunk, plan.clauses))
+    rows = [sh.stats.n_records for sh in store.shards]
+    assert max(rows) / (sum(rows) / len(rows)) > 4.0    # genuinely skewed
+    tuner = PhysicalDesignTuner(
+        store, policy=TunerPolicy(check_every_scans=0, batch_rows=600))
+    ev = tuner.step()
+    assert ev is not None and ev.reason == "skew"
+    tuner.run_migration()
+    rows = [sh.stats.n_records for sh in store.shards]
+    assert sum(rows) == 1200
+    assert max(rows) / (sum(rows) / len(rows)) < 2.0    # re-balanced
