@@ -504,6 +504,61 @@ def validate_tuner(obj: dict) -> None:
              f"quiesced p99 > allowed {ceil}x")
 
 
+_SKIP_SIDE = {
+    "scan_s": numbers.Real,
+    "us_per_query": numbers.Real,
+    "warm_scan_s": numbers.Real,
+}
+
+
+def validate_skip(obj: dict) -> None:
+    """Raise :class:`SchemaError` unless ``obj`` is a valid skip artifact.
+
+    Beyond shape, this gates the skipping-index registry's CLAIM
+    (DESIGN.md §19): counts BIT-IDENTICAL to the ``matches_exact``
+    oracle on the range/IN/substring workload for the skip path, the
+    no-skip baseline, AND the reloaded checkpoints (format-6 round trip
+    plus a format-5 manifest with the registry fields stripped —
+    ``migration_ok``); >= 60% of (query, segment) visits pruned by the
+    partition + zone cascade; and >= 5x fresh-evaluation scan speedup
+    over the pruning-disabled baseline at full size (>= 1.5x for
+    reduced-size ``--quick``/CI smoke runs).
+    """
+    _require(isinstance(obj, dict), "skip", "top level must be an object")
+    for key in ("quick", "n_records", "n_shards", "n_segments",
+                "n_queries", "noskip", "skip", "pruned_fraction",
+                "speedup", "warm_speedup", "counts_match", "migration_ok"):
+        _require(key in obj, "skip", f"missing key {key!r}")
+    _require(isinstance(obj["quick"], bool), "skip", "'quick' must be bool")
+    _check_fields(obj["noskip"], _SKIP_SIDE, "noskip")
+    _check_fields(obj["skip"], dict(
+        _SKIP_SIDE, segments_scanned=numbers.Integral,
+        segments_zone_pruned=numbers.Integral,
+        shard_visits_pruned=numbers.Integral), "skip")
+    for side in ("noskip", "skip"):
+        _require(obj[side]["scan_s"] > 0, side, "scan_s must be positive")
+    _require(obj["counts_match"] is True, "skip",
+             "skip-path or no-skip counts diverged from the "
+             "matches_exact oracle")
+    _require(obj["migration_ok"] is True, "skip",
+             "checkpoint round trip failed (format-6 reload or format-5 "
+             "migration diverged from the oracle)")
+    _require(obj["n_segments"] >= 2, "skip", "need >= 2 segments")
+    _require(obj["n_queries"] >= 10, "skip", "need >= 10 workload queries")
+    _require(obj["skip"]["segments_zone_pruned"] >= 1, "skip",
+             "zone maps never pruned a segment")
+    _require(obj["skip"]["shard_visits_pruned"] >= 1, "skip",
+             "partition metadata never pruned a shard visit")
+    _require(0.0 <= obj["pruned_fraction"] <= 1.0, "skip",
+             "pruned_fraction out of [0, 1]")
+    _require(obj["pruned_fraction"] >= 0.6, "skip",
+             f"pruned_fraction {obj['pruned_fraction']} < required 0.6 "
+             "on the selective range/IN/substring workload")
+    floor = 1.5 if obj["quick"] else 5.0
+    _require(obj["speedup"] >= floor, "skip",
+             f"skip speedup {obj['speedup']} < required {floor}x")
+
+
 _VALIDATORS = {
     "bench_kernels.json": validate_kernels,
     "BENCH_kernels.json": validate_kernels,
@@ -522,6 +577,8 @@ _VALIDATORS = {
     "BENCH_serve.json": validate_serve,
     "bench_tuner.json": validate_tuner,
     "BENCH_tuner.json": validate_tuner,
+    "bench_skip.json": validate_skip,
+    "BENCH_skip.json": validate_skip,
 }
 
 

@@ -138,16 +138,59 @@ def write_tuner_artifacts(
         quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
 
 
+def write_skip_artifacts(
+    out: dict, *, quick: bool, artifacts_dir: str = "artifacts",
+    tracked_path: str = "BENCH_skip.json",
+) -> list[str]:
+    """Write the skipping-index benchmark JSON; returns the paths written."""
+    from .bench_schema import validate_skip
+
+    return _write_gated_artifacts(
+        out, validator=validate_skip, detail_name="bench_skip.json",
+        quick=quick, artifacts_dir=artifacts_dir, tracked_path=tracked_path)
+
+
+# suite name -> what it measures (single source for --only and --list)
+_SUITES = {
+    "e2e": "paper Figs 3-5 end-to-end loading/query/overlap speedups",
+    "micro": "paper Figs 6-12 micro-benchmarks + pattern-memo check",
+    "cost": "paper Table IV cost-model fit",
+    "selection": "CELF predicate selection scaling + quality bound",
+    "kernels": "client engine throughput + fused-vs-split launches",
+    "replan": "workload-drift replanning vs a static plan",
+    "tiers": "tiered fleet allocation vs uniform baselines",
+    "scan": "columnar segment scan vs row-at-a-time",
+    "shard": "sharded store scaling + partition pruning",
+    "device": "device-resident fused scan plane",
+    "batch": "multi-query batcher + result cache",
+    "serve": "async serving under live ingest",
+    "tuner": "online physical-design tuner drift recovery",
+    "skip": "skipping-index registry: range/IN/n-gram pruning",
+    "roofline": "per-kernel analytic roofline cells",
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: e2e,micro,cost,selection,kernels,replan,tiers,"
-             "scan,shard,device,batch,serve,tuner,roofline")
+        help="comma list of suites (see --list): "
+             + ",".join(_SUITES))
+    ap.add_argument("--list", action="store_true",
+                    help="list the registered bench suites and exit")
     args = ap.parse_args()
-    os.makedirs("artifacts", exist_ok=True)
+    if args.list:
+        for name, what in _SUITES.items():
+            print(f"{name:10s} {what}")
+        return
     only = set(args.only.split(",")) if args.only else None
+    if only is not None:
+        unknown = only - set(_SUITES)
+        if unknown:
+            ap.error(f"unknown suite(s): {','.join(sorted(unknown))} "
+                     f"(see --list)")
+    os.makedirs("artifacts", exist_ok=True)
 
     csv_rows: list[tuple[str, float, str]] = []
 
@@ -354,6 +397,23 @@ def main() -> None:
             f"recovery_x{out['recovery_speedup']}_vs_stale;"
             f"p99_ratio_{out['p99_ratio']};"
             f"rows_moved_{out['migration']['rows_moved']};"
+            f"counts_match_{out['counts_match']}",
+        ))
+
+    if only is None or "skip" in only:
+        from . import bench_skip
+
+        out = bench_skip.run(
+            n_records=6144 if args.quick else 24576,
+            repeats=2 if args.quick else 3,
+            quick=args.quick,
+        )
+        write_skip_artifacts(out, quick=args.quick)
+        csv_rows.append((
+            "skip_registry", out["skip"]["us_per_query"],
+            f"noskip_{out['noskip']['us_per_query']}us;x{out['speedup']};"
+            f"pruned_{out['pruned_fraction']:.0%};"
+            f"migration_ok_{out['migration_ok']};"
             f"counts_match_{out['counts_match']}",
         ))
 

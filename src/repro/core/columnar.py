@@ -41,7 +41,11 @@ import numpy as np
 
 from . import bitvector
 from .predicates import (
-    Clause, Kind, Query, SimplePredicate, json_scalar, lowerable,
+    Clause, Kind, Query, SimplePredicate, json_number, json_scalar,
+    lowerable, range_contains,
+)
+from .skip_index import (
+    REGISTRY, KeyStats, NGramBloom, conservative_bounds,
 )
 
 def _f64_exact(v) -> bool:
@@ -89,6 +93,17 @@ class KeyColumn:
     # comparison against a poisoned bound would be silently False and skip
     # a segment that still holds matches
     num_prunable: bool = True
+    # RANGE-index bounds (DESIGN.md §19): min/max over every value the
+    # RANGE semantics can match — numerics (huge ints ulp-widened) AND
+    # strings parsing as JSON numbers — so they never hit the §IV-B
+    # cross-representation trap the num_* bounds have.  NaN matches no
+    # range, so it is simply excluded (no poisoning flag needed: segment
+    # bounds are always exact-or-widened, hence always prunable).
+    rnum_min: float = np.inf
+    rnum_max: float = -np.inf
+    # byte-level 3-gram bloom over the string dictionary (None when the
+    # segment holds no strings for this key)
+    ngram: "NGramBloom | None" = None
 
 
 class _KeyAcc:
@@ -132,6 +147,27 @@ class _KeyAcc:
 
     def finish(self) -> KeyColumn:
         nums = self.num[self.num_valid]
+        # RANGE bounds fold over the DISTINCT reprs, not the rows: every
+        # present value's repr round-trips through json_number to exactly
+        # the numeric its row contributes (ints arbitrary-precision,
+        # floats bit-exact, numeric strings ARE their repr), and the
+        # dictionary dedups the parses.  Bool reprs ("true"/"false"),
+        # non-numeric strings and "NaN" contribute nothing.
+        rmin, rmax = np.inf, -np.inf
+        for r in self.repr_index:
+            x = json_number(r)
+            if x is None or x != x:
+                continue
+            lo, hi = conservative_bounds(x)
+            if lo < rmin:
+                rmin = lo
+            if hi > rmax:
+                rmax = hi
+        ngram = None
+        if self.str_index:
+            ngram = NGramBloom()
+            for s in self.str_index:
+                ngram.add(s)
         return KeyColumn(
             present=self.present, notnull=self.notnull,
             is_bool=self.is_bool, num_valid=self.num_valid, num=self.num,
@@ -143,6 +179,7 @@ class _KeyAcc:
             num_max=float(nums.max()) if nums.size else -np.inf,
             any_notnull=bool(self.notnull.any()),
             num_prunable=not self.has_nan,
+            rnum_min=rmin, rnum_max=rmax, ngram=ngram,
         )
 
 
@@ -196,6 +233,26 @@ def eval_lowered(col: KeyColumn, pred: SimplePredicate) -> np.ndarray:
         for s, code in col.str_index.items():
             lut[code + 1] = sub in s
         return lut[col.str_codes + 1]
+    if pred.kind is Kind.RANGE:
+        # pure repr-LUT: a row's repr round-trips through json_number to
+        # exactly the value ``range_contains`` would test (ints
+        # arbitrary-precision, floats bit-exact, numeric strings ARE
+        # their repr; "true"/"false"/"None"/non-numeric parse to None →
+        # False, "NaN" → nan fails every comparison) — bit-identical to
+        # matches_exact by case analysis on the row's JSON type
+        lut = np.zeros(len(col.repr_dict) + 1, bool)
+        for r, code in col.repr_index.items():
+            x = json_number(r)
+            lut[code + 1] = x is not None and range_contains(v, x)
+        return lut[col.repr_codes + 1]
+    if pred.kind is Kind.IN:
+        # OR of per-element KEY_VALUE lowerings (matches_exact's IN is
+        # the same OR of per-element KEY_VALUE semantics)
+        m = np.zeros(col.present.shape, bool)
+        for e in v:
+            m |= eval_lowered(
+                col, SimplePredicate(Kind.KEY_VALUE, pred.key, e))
+        return m
     # KEY_VALUE: (v == value) OR (json_scalar(value) == json_scalar(v)),
     # masked by the bool-compatibility check
     compat = col.is_bool if isinstance(v, bool) else \
@@ -254,83 +311,49 @@ def term_possible_over(
     num_min: float, num_max: float, num_prunable: bool,
     strs, reprs,
 ) -> bool:
-    """Can ``pred`` match ANY row summarized by this key metadata?
+    """Compat wrapper: membership-only probe of the skipping registry.
 
-    THE single refutation rule shared by both pruning levels — segment
-    zone maps (:func:`_term_possible`) and shard partition summaries
-    (``repro.core.shard.ShardSummary``) — so their semantics can never
-    drift.  Must be conservative: False only when provably no match.
-    ``strs``/``reprs`` are value-membership containers (dict or set), or
-    ``None`` when the caller's value set SATURATED — membership
-    refutation is then unavailable and only min/max may refute.  The
-    caller handles the missing-key case (which refutes every kind).
+    The single hardcoded refutation rule this function used to BE now
+    lives in ``repro.core.skip_index.MembershipIndex``; callers holding
+    only the legacy summary fields (no range bounds, no n-gram bloom)
+    get exactly the old behavior — the newer indexes see their
+    "no data" defaults (``rnum_prunable=False``, ``ngram=None``) and
+    never refute.  Must be conservative: False only when provably no
+    match.  ``strs``/``reprs`` are value-membership containers (dict or
+    set), or ``None`` when the caller's value set SATURATED.  The caller
+    handles the missing-key case (which refutes every kind).
     """
-    if pred.kind is Kind.KEY_PRESENCE:
-        return any_notnull
-    v = pred.value
-    if pred.kind is Kind.EXACT:
-        if not isinstance(v, str):
-            return True  # non-lowerable value: never prune
-        return True if strs is None else v in strs
-    if pred.kind is Kind.SUBSTRING:
-        if isinstance(v, bool):
-            return False
-        if strs is None:
-            return True
-        sub = str(v)
-        return any(sub in s for s in strs)
-    # KEY_VALUE
-    if not (v is None or isinstance(v, (str, int, float, bool))):
-        return True
-    if reprs is not None and json_scalar(v) in reprs:
-        return True
-    if isinstance(v, (int, float)) and not isinstance(v, bool) \
-            and _f64_exact(v):
-        fv = float(v)
-        # min/max gate first (cheapest), then the exact numeric-equality
-        # membership test: the repr dictionary doubles as the value set,
-        # so a point lookup on a high-cardinality column prunes every
-        # segment/shard that lacks the value.  A NaN observed at build
-        # time marks the bounds non-prunable (num_prunable False):
-        # min/max comparisons would be silently False, so skip straight
-        # to the exact repr membership test
-        if num_prunable and not num_min <= fv <= num_max:
-            # out-of-range refutes only the NUMERIC rows: min/max never
-            # saw string values, yet a string row can cross-repr match
-            # the probe (row {"score": "10"} vs score == 10, §IV-B).
-            # With an exact repr set that string side is already refuted
-            # (a cross-matching string row's repr is json_scalar(v),
-            # probed above); saturated, fall back to the string value
-            # set — a string row s matches iff json_scalar(s) == s ==
-            # json_scalar(v), so ONE probe suffices — and if that
-            # saturated too, nothing may refute
-            if reprs is not None:
-                return False
-            if strs is None:
-                return True
-            return json_scalar(v) in strs
-        if reprs is None:
-            return True
-        return any(r in reprs for r in _num_reprs(fv))
-    return reprs is None
+    return REGISTRY.term_possible(pred, KeyStats(
+        any_notnull=any_notnull, num_min=num_min, num_max=num_max,
+        num_prunable=num_prunable, strs=strs, reprs=reprs,
+    ))
+
+
+def column_stats(col: KeyColumn) -> KeyStats:
+    """Registry probe view of one segment column (exact dictionaries,
+    always-prunable range bounds)."""
+    return KeyStats(
+        any_notnull=col.any_notnull,
+        num_min=col.num_min, num_max=col.num_max,
+        num_prunable=col.num_prunable,
+        strs=col.str_index, reprs=col.repr_index,
+        rnum_min=col.rnum_min, rnum_max=col.rnum_max,
+        rnum_prunable=True, ngram=col.ngram,
+    )
 
 
 def _term_possible(col: KeyColumn | None, pred: SimplePredicate) -> bool:
     """Zone-map check: can ``pred`` match ANY row of this segment?
 
-    All four predicate kinds require the key to be present, so a missing
+    Every predicate kind requires the key to be present, so a missing
     column refutes every kind — including non-lowerable values.  Segment
     dictionaries are exact (never saturated), so membership refutation is
-    always available here.
+    always available here, and the segment-level range bounds and n-gram
+    bloom are always populated (built at column-finish time).
     """
     if col is None:
         return False
-    return term_possible_over(
-        pred, any_notnull=col.any_notnull,
-        num_min=col.num_min, num_max=col.num_max,
-        num_prunable=col.num_prunable,
-        strs=col.str_index, reprs=col.repr_index,
-    )
+    return REGISTRY.term_possible(pred, column_stats(col))
 
 
 # ---------------------------------------------------------------------------

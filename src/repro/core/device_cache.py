@@ -377,7 +377,10 @@ class DeviceSegmentCache:
         lut_len = 1
         for ti, t in enumerate(batch.terms):
             key_ids[ti] = self.key_row(t.key)
-            kinds[ti] = _KIND_CODE[t.kind]
+            # kinds without a device code (RANGE/IN) stay -1: inert rows,
+            # referenced only by clauses of non-query_ok queries whose
+            # device counts are discarded (host fallback)
+            kinds[ti] = _KIND_CODE.get(t.kind, -1)
             if kinds[ti] == KIND_KV:
                 is_null[ti] = t.value is None
                 is_boolv[ti] = isinstance(t.value, bool)

@@ -22,10 +22,12 @@ module scales it out into N shards:
     stable shard order, binary tree via
     :func:`repro.dist.collectives.tree_reduce`, sorted per-(epoch, tier)
     groups (:func:`merge_scan_results`).
-  * format-5 checkpoints — one manifest + per-shard files
-    (:meth:`ShardedCiaoStore.save`).  Formats 2-4 load into a 1-shard
-    store (:meth:`ShardedCiaoStore.load`) and :func:`reshard`
-    re-partitions a store offline onto a new router.
+  * format-6 checkpoints — one manifest + per-shard files
+    (:meth:`ShardedCiaoStore.save`), per-key summaries serialized by the
+    skipping-index registry.  Format-5 manifests (no range bounds /
+    n-gram blooms) and formats 2-4 still load
+    (:meth:`ShardedCiaoStore.load`) and :func:`reshard` re-partitions a
+    store offline onto a new router.
 
 Public contract: every query over a sharded store returns counts AND
 accounting bit-identical to the unsharded oracle across engines,
@@ -59,11 +61,13 @@ from . import bitvector
 from .client import Chunk
 from .columnar import (
     ColumnarSegment, _f64_exact, build_segments, decode_rows,
-    term_possible_over,
 )
 from .predicates import (
     Clause, Query, SimplePredicate, clause_from_obj, clause_to_obj,
     json_scalar,
+)
+from .skip_index import (
+    REGISTRY, KeyStats, NGramBloom, conservative_bounds, range_fold_value,
 )
 from .server import (
     CiaoStore, DataSkippingScanner, LoadStats, PlanFamily, PushdownPlan,
@@ -217,7 +221,8 @@ class _KeySummary:
     """
 
     __slots__ = ("num_min", "num_max", "num_prunable", "any_notnull",
-                 "reprs", "strs")
+                 "reprs", "strs", "rnum_min", "rnum_max", "rnum_prunable",
+                 "ngram")
 
     def __init__(self) -> None:
         self.num_min = np.inf
@@ -226,6 +231,17 @@ class _KeySummary:
         self.any_notnull = False
         self.reprs: set[str] | None = set()
         self.strs: set[str] | None = set()
+        # RANGE-index bounds over every range-matchable value (numerics
+        # + numeric strings; see skip_index.range_fold_value) — folded
+        # incrementally with ulp-widening, so unlike the value sets they
+        # never saturate.  rnum_prunable goes False only on format-5
+        # restore (bounds unknown).
+        self.rnum_min = np.inf
+        self.rnum_max = -np.inf
+        self.rnum_prunable = True
+        # 3-gram bloom over string values; created lazily on the first
+        # string (None + empty strs still refutes via membership)
+        self.ngram: NGramBloom | None = None
 
     def add(self, v, cap: int) -> None:
         if v is not None:
@@ -244,35 +260,54 @@ class _KeySummary:
             self.strs.add(v)
             if len(self.strs) > cap:
                 self.strs = None
+        if isinstance(v, str):
+            if self.ngram is None:
+                self.ngram = NGramBloom()
+            self.ngram.add(v)
+        x = range_fold_value(v)
+        if x is not None:
+            lo, hi = conservative_bounds(x)
+            if lo < self.rnum_min:
+                self.rnum_min = lo
+            if hi > self.rnum_max:
+                self.rnum_max = hi
         if self.reprs is not None:
             self.reprs.add(json_scalar(v))
             if len(self.reprs) > cap:
                 self.reprs = None
 
+    def stats(self) -> KeyStats:
+        """Registry probe view (shared with the segment zone maps)."""
+        return KeyStats(
+            any_notnull=self.any_notnull,
+            num_min=self.num_min, num_max=self.num_max,
+            num_prunable=self.num_prunable,
+            strs=self.strs, reprs=self.reprs,
+            rnum_min=self.rnum_min, rnum_max=self.rnum_max,
+            rnum_prunable=self.rnum_prunable, ngram=self.ngram,
+        )
+
     def to_obj(self) -> dict:
-        # empty bounds (no numeric value seen) serialize as null: the
-        # +/-inf sentinels would become json.dump's non-standard
-        # Infinity/-Infinity tokens and break every strict (RFC 8259)
-        # consumer of the checkpoint manifest
-        empty = self.num_min > self.num_max
-        return {
-            "min": None if empty else self.num_min,
-            "max": None if empty else self.num_max,
-            "num_prunable": self.num_prunable,
-            "any_notnull": self.any_notnull,
-            "reprs": None if self.reprs is None else sorted(self.reprs),
-            "strs": None if self.strs is None else sorted(self.strs),
-        }
+        # each registered index serializes its own summary slice
+        # (format 6); the membership index's block is byte-compatible
+        # with the pre-registry format-5 encoding, +/-inf bounds
+        # serialize as null/flags (RFC 8259 has no Infinity tokens)
+        return REGISTRY.summary_to_obj(self.stats())
 
     @classmethod
     def from_obj(cls, d: dict) -> "_KeySummary":
         ks = cls()
-        ks.num_min = np.inf if d["min"] is None else float(d["min"])
-        ks.num_max = -np.inf if d["max"] is None else float(d["max"])
-        ks.num_prunable = bool(d["num_prunable"])
-        ks.any_notnull = bool(d["any_notnull"])
-        ks.reprs = None if d["reprs"] is None else set(d["reprs"])
-        ks.strs = None if d["strs"] is None else set(d["strs"])
+        st = REGISTRY.summary_from_obj(d)
+        ks.num_min = st.num_min
+        ks.num_max = st.num_max
+        ks.num_prunable = st.num_prunable
+        ks.any_notnull = st.any_notnull
+        ks.reprs = st.reprs
+        ks.strs = st.strs
+        ks.rnum_min = st.rnum_min
+        ks.rnum_max = st.rnum_max
+        ks.rnum_prunable = st.rnum_prunable
+        ks.ngram = st.ngram
         return ks
 
 
@@ -339,21 +374,17 @@ class ShardSummary:
     def term_possible(self, t: SimplePredicate) -> bool:
         """Conservative: False only when provably no shard row matches.
 
-        THE refutation rule is shared with the segment zone maps
-        (:func:`repro.core.columnar.term_possible_over`) — every kind
-        needs the key present, set membership refutes exactly, and a
-        saturated value set degrades to min/max-only refutation.
+        THE refutation rules are shared with the segment zone maps (the
+        ``repro.core.skip_index`` registry) — every kind needs the key
+        present, set membership refutes exactly, a saturated value set
+        degrades to min/max-only refutation, range bounds refute RANGE,
+        and the n-gram bloom refutes substring probes past saturation.
         """
         ks = self._keys.get(t.key)
         if ks is None:
             return False
         try:
-            return term_possible_over(
-                t, any_notnull=ks.any_notnull,
-                num_min=ks.num_min, num_max=ks.num_max,
-                num_prunable=ks.num_prunable,
-                strs=ks.strs, reprs=ks.reprs,
-            )
+            return REGISTRY.term_possible(t, ks.stats())
         except RuntimeError:
             # a concurrent writer grew a value set mid-membership-scan
             # ("set changed size during iteration"): answer conservatively
@@ -765,7 +796,7 @@ class ShardedCiaoStore:
             return SegmentMigration(self, router, work,
                                     batch_rows=batch_rows)
 
-    # -- persistence (format 5: manifest + per-shard files) ------------------
+    # -- persistence (format 6: manifest + per-shard files) ------------------
     def save(self, path: str) -> None:
         """Checkpoint as a DIRECTORY: ``manifest.json`` + one format-4
         ``shard_<i>.npz`` per shard.
@@ -774,6 +805,9 @@ class ShardedCiaoStore:
         partition summaries (which cover raw remainder rows no segment
         restore could rebuild), and the top-level query log; each shard
         file is a complete, independently loadable per-shard store.
+        Format 6 extends the format-5 per-key summaries with the
+        registry indexes' slices (range bounds, n-gram blooms); format-5
+        files still load (missing fields deserialize to "cannot refute").
         """
         os.makedirs(path, exist_ok=True)
         shard_files = []
@@ -782,7 +816,7 @@ class ShardedCiaoStore:
             s.save(os.path.join(path, name))
             shard_files.append(name)
         manifest = {
-            "format": 5,
+            "format": 6,
             "segment_capacity": self.segment_capacity,
             "router": self.router.to_obj(),
             "shard_files": shard_files,
@@ -800,7 +834,7 @@ class ShardedCiaoStore:
     @classmethod
     def load(cls, path: str,
              plan: PushdownPlan | None = None) -> "ShardedCiaoStore":
-        """Restore a checkpoint — format 5 (directory) or formats 2-4.
+        """Restore a checkpoint — format 5/6 (directory) or formats 2-4.
 
         A pre-shard ``.npz`` checkpoint (format 2/3/4) loads into a
         1-shard store whose summary is non-exhaustive (pruning disabled
@@ -824,7 +858,7 @@ class ShardedCiaoStore:
             return store
         with open(manifest_path) as f:
             manifest = json.load(f)
-        if manifest.get("format") != 5:
+        if manifest.get("format") not in (5, 6):
             raise ValueError(
                 f"{path}: unsupported sharded checkpoint format "
                 f"{manifest.get('format')!r}")

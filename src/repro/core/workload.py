@@ -106,9 +106,20 @@ def estimate_selectivities(
     Uses the raw pattern-match semantics (including false positives) because
     that is exactly the fraction of bits that will be set — which drives both
     the loading ratio and the cost model's found/not-found split.
+
+    With NO sample at all, falls back to the skipping-index registry's
+    per-kind selectivity priors (``SkipIndexRegistry.
+    clause_selectivity_prior``) instead of flattening every clause to
+    ``floor`` — so CELF selection (``tiered_celf`` via the planner) and
+    the Replanner still rank a point lookup above a broad presence probe.
     """
     out: dict[Clause, float] = {}
-    n = max(len(sample_records), 1)
+    if not sample_records:
+        from .skip_index import REGISTRY
+        for c in clauses:
+            out[c] = max(REGISTRY.clause_selectivity_prior(c), floor)
+        return out
+    n = len(sample_records)
     for c in clauses:
         hits = sum(1 for r in sample_records if c.matches_raw(r))
         out[c] = max(hits / n, floor)

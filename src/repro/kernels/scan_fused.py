@@ -63,7 +63,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.predicates import Clause, Kind, Query, SimplePredicate
+from repro.core.predicates import (
+    Clause, Kind, Query, SimplePredicate, lowerable,
+)
 
 from .plan import compile_query_batch
 from .residual import _pow2
@@ -81,6 +83,19 @@ _KIND_CODE = {
 
 #: cache slots carry pushed coverage as one uint32 word per row
 MAX_COVERED = 32
+
+
+def device_lowerable(t: SimplePredicate) -> bool:
+    """True iff ``t`` evaluates on the device dictionary-code plane.
+
+    Stricter than host ``lowerable``: RANGE and IN lower to vectorized
+    numpy (repr-LUT / per-element OR) but have no ``_KIND_CODE`` row —
+    their repr LUTs would be per-(term, slot) rebuilt parameters of
+    unbounded width.  Queries containing them fall back whole to the
+    host scanner (the standard non-eligible path), keeping counts
+    bit-identical.
+    """
+    return lowerable(t) and t.kind in _KIND_CODE
 
 
 # ---------------------------------------------------------------------------
@@ -120,13 +135,18 @@ def compile_scan_batch(queries: Sequence[Query]) -> ScanBatch:
     device compiler); see its docstring for why the dedup keys on
     predicate equality rather than ``dedup_terms``' pattern bytes.
     ``query_ok`` is the per-query device-eligibility flag: every term
-    must lower onto the dictionary-code plane.
+    must lower onto the dictionary-code plane (:func:`device_lowerable`
+    — host-lowerable RANGE/IN terms still disqualify a query here).
     """
     qb = compile_query_batch(queries)
+    ok = tuple(
+        all(device_lowerable(t) for c in q.clauses for t in c.terms)
+        for q in qb.queries
+    )
     return ScanBatch(
         queries=qb.queries, clauses=qb.clauses, terms=qb.terms,
         membership=qb.membership, query_clause=qb.query_clause,
-        query_ok=qb.lowerable,
+        query_ok=ok,
     )
 
 
